@@ -1,0 +1,37 @@
+"""Table 3 — HBM traffic vs on-chip buffer capacity sweep (the buffer-size
+sensitivity study every buffer paper reports)."""
+from __future__ import annotations
+
+import time
+from typing import List
+
+from repro.core import co_design
+from repro.core.buffer import MiB
+
+from .workloads import workloads
+
+CAPACITIES = [16 * MiB, 32 * MiB, 64 * MiB, 128 * MiB, 256 * MiB]
+SUBSET = ("granite-3-8b/train4k", "granite-3-8b/prefill32k",
+          "moonshot-v1-16b-a3b/train4k", "rwkv6-7b/train4k",
+          "granite-3-8b/decode32k")
+
+
+def run() -> List[str]:
+    rows = ["workload,us_per_call," +
+            ",".join(f"hbm_mb@{c // MiB}MiB" for c in CAPACITIES)]
+    for name, build in workloads():
+        if name not in SUBSET:
+            continue
+        g = build()
+        t0 = time.perf_counter()
+        cells = []
+        for cap in CAPACITIES:
+            res = co_design(g, capacity_bytes=cap)
+            cells.append(f"{res.best.metrics.hbm_bytes / 1e6:.1f}")
+        us = (time.perf_counter() - t0) * 1e6
+        rows.append(f"{name},{us:.0f}," + ",".join(cells))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

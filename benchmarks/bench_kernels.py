@@ -1,0 +1,82 @@
+"""Table 5 — kernel microbench: fused Pallas path (interpret on CPU) vs the
+pure-jnp oracle; reports wall time per call and max |err| (the correctness
+column; wall time on CPU-interpret is NOT a TPU projection)."""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+import jax.numpy as jnp
+
+
+def _t(fn, *args, reps=3):
+    fn(*args)                                        # compile / warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax_block = getattr(out, "block_until_ready", None)
+    if jax_block:
+        jax_block()
+    elif isinstance(out, tuple):
+        out[0].block_until_ready()
+    return (time.perf_counter() - t0) / reps * 1e6, out
+
+
+def run() -> List[str]:
+    rng = np.random.default_rng(0)
+    rows = ["kernel,us_per_call,max_abs_err"]
+
+    from repro.kernels.flash_attention import flash_attention, mha_reference
+    q = jnp.asarray(rng.standard_normal((1, 4, 256, 64)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 2, 256, 64)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, 2, 256, 64)), jnp.float32)
+    us, out = _t(lambda *a: flash_attention(*a, causal=True, q_block=128,
+                                            kv_block=128), q, k, v)
+    err = np.abs(np.asarray(out)
+                 - np.asarray(mha_reference(q, k, v, causal=True))).max()
+    rows.append(f"flash_attention,{us:.0f},{err:.2e}")
+
+    from repro.kernels.fused_mlp import fused_mlp, mlp_reference
+    x = jnp.asarray(rng.standard_normal((256, 128)) * .5, jnp.float32)
+    wg = jnp.asarray(rng.standard_normal((128, 256)) * .1, jnp.float32)
+    wu = jnp.asarray(rng.standard_normal((128, 256)) * .1, jnp.float32)
+    wd = jnp.asarray(rng.standard_normal((256, 128)) * .1, jnp.float32)
+    us, out = _t(lambda *a: fused_mlp(*a, activation="silu", m_block=128,
+                                      f_block=128), x, wg, wu, wd)
+    err = np.abs(np.asarray(out)
+                 - np.asarray(mlp_reference(x, wg, wu, wd))).max()
+    rows.append(f"fused_mlp,{us:.0f},{err:.2e}")
+
+    from repro.kernels.rglru import rglru, rglru_reference
+    xs = jnp.asarray(rng.standard_normal((2, 64, 128)), jnp.float32)
+    gr = jnp.asarray(rng.standard_normal((2, 64, 128)), jnp.float32)
+    gi = jnp.asarray(rng.standard_normal((2, 64, 128)), jnp.float32)
+    ap = jnp.asarray(rng.standard_normal(128), jnp.float32)
+    us, out = _t(lambda *a: rglru(*a, d_block=128), xs, gr, gi, ap)
+    err = np.abs(np.asarray(out[0])
+                 - np.asarray(rglru_reference(xs, gr, gi, ap)[0])).max()
+    rows.append(f"rglru,{us:.0f},{err:.2e}")
+
+    from repro.kernels.rwkv6 import wkv6, wkv6_reference
+    r = jnp.asarray(rng.standard_normal((1, 2, 32, 64)), jnp.float32)
+    kk = jnp.asarray(rng.standard_normal((1, 2, 32, 64)) * .3, jnp.float32)
+    vv = jnp.asarray(rng.standard_normal((1, 2, 32, 64)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((1, 2, 32, 64)) * .5, jnp.float32)
+    u = jnp.asarray(rng.standard_normal((2, 64)) * .3, jnp.float32)
+    us, out = _t(wkv6, r, kk, vv, w, u)
+    err = np.abs(np.asarray(out[0])
+                 - np.asarray(wkv6_reference(r, kk, vv, w, u)[0])).max()
+    rows.append(f"wkv6,{us:.0f},{err:.2e}")
+
+    from repro.kernels.rmsnorm import rmsnorm, rmsnorm_reference
+    x2 = jnp.asarray(rng.standard_normal((512, 256)), jnp.float32)
+    w2 = jnp.asarray(rng.standard_normal(256) * .1, jnp.float32)
+    us, out = _t(lambda *a: rmsnorm(*a, row_block=128), x2, w2)
+    err = np.abs(np.asarray(out) - np.asarray(rmsnorm_reference(x2, w2))).max()
+    rows.append(f"rmsnorm,{us:.0f},{err:.2e}")
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

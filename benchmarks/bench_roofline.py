@@ -1,0 +1,63 @@
+"""Table 6 — the roofline table from the dry-run artifacts: three terms per
+(arch × shape × mesh), dominant bottleneck, MODEL_FLOPS ratio.  Also emits
+``experiments/roofline.md`` for EXPERIMENTS.md."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..",
+                          "experiments", "dryrun")
+
+
+def load_cells(tag: str = "") -> List[Dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        base = os.path.basename(path)[:-5]
+        parts = base.split("__")
+        cell_tag = parts[3] if len(parts) > 3 else ""
+        if cell_tag != tag:
+            continue
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def run() -> List[str]:
+    rows = ["cell,us_per_call,compute_ms,memory_ms,collective_ms,dominant,"
+            "useful_flops_ratio,roofline_fraction"]
+    md = ["| arch | shape | mesh | compute (ms) | memory (ms) | "
+          "collective (ms) | dominant | 6ND/HLO | roofline frac |",
+          "|---|---|---|---|---|---|---|---|---|"]
+    for c in load_cells():
+        name = f"{c['arch']}/{c['shape']}/{c['mesh']}"
+        if c.get("status") == "skipped":
+            rows.append(f"{name},0,,,,skipped({c['reason'][:40]}),,")
+            md.append(f"| {c['arch']} | {c['shape']} | {c['mesh']} | — | — "
+                      f"| — | skipped | — | — |")
+            continue
+        if c.get("status") != "ok":
+            rows.append(f"{name},0,,,,ERROR,,")
+            continue
+        r = c["roofline"]
+        rows.append(
+            f"{name},{c['compile_s'] * 1e6:.0f},"
+            f"{r['compute_s'] * 1e3:.3f},{r['memory_s'] * 1e3:.3f},"
+            f"{r['collective_s'] * 1e3:.3f},{r['dominant']},"
+            f"{r['useful_flops_ratio']:.3f},{r['roofline_fraction']:.3f}")
+        md.append(
+            f"| {c['arch']} | {c['shape']} | {c['mesh']} "
+            f"| {r['compute_s'] * 1e3:.2f} | {r['memory_s'] * 1e3:.2f} "
+            f"| {r['collective_s'] * 1e3:.2f} | **{r['dominant']}** "
+            f"| {r['useful_flops_ratio']:.2f} "
+            f"| {r['roofline_fraction']:.2f} |")
+    out_md = os.path.join(DRYRUN_DIR, "..", "roofline.md")
+    with open(out_md, "w") as f:
+        f.write("\n".join(md) + "\n")
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,33 @@
+"""Table 4 — the co-design sweep itself: time vs explicit/implicit split,
+and the chosen split per workload (CELLO's central knob)."""
+from __future__ import annotations
+
+import time
+from typing import List
+
+from repro.core import co_design
+
+from .workloads import workloads
+
+SPLITS = (0.0, 0.25, 0.5, 0.75, 1.0)
+
+
+def run() -> List[str]:
+    rows = ["workload,us_per_call,best_split," +
+            ",".join(f"time_ms@{s}" for s in SPLITS)]
+    for name, build in workloads():
+        g = build()
+        t0 = time.perf_counter()
+        res = co_design(g)
+        us = (time.perf_counter() - t0) * 1e6
+        sweep = res.split_sweep
+        cells = [f"{sweep[s].time_s * 1e3:.3f}" if s in sweep else ""
+                 for s in SPLITS]
+        rows.append(f"{name},{us:.0f},"
+                    f"{res.best.schedule.config.explicit_frac}," +
+                    ",".join(cells))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,35 @@
+"""Benchmark harness — one table per paper-style experiment.
+Prints ``name,us_per_call,derived`` CSV blocks."""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from . import (bench_speedup, bench_energy, bench_capacity, bench_split,
+                   bench_kernels, bench_roofline)
+    tables = [
+        ("TABLE 1 — CELLO speedup vs baselines", bench_speedup),
+        ("TABLE 2 — energy vs baselines", bench_energy),
+        ("TABLE 3 — HBM traffic vs buffer capacity", bench_capacity),
+        ("TABLE 4 — explicit/implicit split co-design sweep", bench_split),
+        ("TABLE 5 — kernel microbench (interpret) + correctness",
+         bench_kernels),
+        ("TABLE 6 — roofline terms from the multi-pod dry-run",
+         bench_roofline),
+    ]
+    failures = 0
+    for title, mod in tables:
+        print(f"\n# {title}")
+        try:
+            for row in mod.run():
+                print(row)
+        except Exception as e:                       # pragma: no cover
+            failures += 1
+            print(f"ERROR,{type(e).__name__}: {e}")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Shared benchmark workload set: representative (arch × shape) layer graphs
+for the CELLO analysis tables (speedup / energy / capacity / split)."""
+from __future__ import annotations
+
+from repro.configs import get_config
+from repro.core import decode_graph, layer_graph
+
+# (name, builder) — per-layer analysis graphs at paper-table shapes
+def workloads():
+    out = []
+    for arch, batch, seq in [
+        ("granite-3-8b", 4, 4096),
+        ("gemma-7b", 4, 4096),
+        ("minitron-8b", 4, 4096),
+        ("h2o-danube-1.8b", 4, 4096),
+        ("llama-3.2-vision-11b", 4, 4096),
+        ("hubert-xlarge", 8, 4096),
+        ("recurrentgemma-2b", 4, 4096),
+        ("rwkv6-7b", 4, 4096),
+        ("moonshot-v1-16b-a3b", 4, 4096),
+        ("granite-moe-1b-a400m", 4, 4096),
+    ]:
+        cfg = get_config(arch)
+        kinds = cfg.layer_kinds()
+        kind = "xattn" if "xattn" in kinds else kinds[0]
+        out.append((f"{arch}/train4k",
+                    lambda c=cfg, b=batch, s=seq, k=kind:
+                    layer_graph(c, b, s, layer_kind=k)))
+    for arch in ("granite-3-8b", "gemma-7b"):
+        cfg = get_config(arch)
+        out.append((f"{arch}/prefill32k",
+                    lambda c=cfg: layer_graph(c, 1, 32768)))
+        out.append((f"{arch}/decode32k",
+                    lambda c=cfg: decode_graph(c, 128, 32768)))
+    return out

@@ -1,0 +1,52 @@
+"""Quickstart: run the CELLO schedule × hybrid-buffer co-design on one
+transformer block and lower the result to an execution plan.
+
+    PYTHONPATH=src python examples/quickstart.py [--arch granite-3-8b]
+"""
+import argparse
+
+from repro.configs import get_config, list_archs
+from repro.core import co_design, layer_graph, plan_from_codesign
+from repro.core.buffer import MiB
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-8b", choices=list_archs())
+    ap.add_argument("--batch", type=int, default=1)
+    ap.add_argument("--seq", type=int, default=8192)
+    ap.add_argument("--capacity-mib", type=int, default=128)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    g = layer_graph(cfg, args.batch, args.seq)
+    print(f"analysis graph: {g}")
+
+    res = co_design(g, capacity_bytes=args.capacity_mib * MiB)
+    best = res.best
+    print(f"\n== CELLO co-design result ({args.arch}, "
+          f"b{args.batch} s{args.seq}, {args.capacity_mib} MiB) ==")
+    print(f"explicit/implicit split : {best.schedule.config.explicit_frac:.3f}")
+    print(f"fusion groups           : "
+          f"{[grp for grp in best.schedule.groups if len(grp) > 1]}")
+    print(f"explicit pins           : {sorted(best.schedule.pins)}")
+    print(f"HBM traffic             : {best.metrics.hbm_bytes / 1e6:,.1f} MB")
+    print(f"arithmetic intensity    : {best.metrics.ai:,.1f} FLOP/B")
+    for name, ev in res.baselines.items():
+        print(f"  vs {name:13s}: speedup "
+              f"{ev.metrics.time_s / best.metrics.time_s:5.2f}x   energy "
+              f"{ev.metrics.energy_j / best.metrics.energy_j:5.2f}x   HBM "
+              f"{ev.metrics.hbm_bytes / max(1, best.metrics.hbm_bytes):6.1f}x")
+
+    plan = plan_from_codesign(cfg, res, seq=args.seq)
+    print("\n== lowered execution plan ==")
+    print(f"flash attention kernel : {plan.use_flash_attention} "
+          f"(q_block={plan.q_block}, kv_block={plan.kv_block})")
+    print(f"fused MLP kernel       : {plan.use_fused_mlp} "
+          f"(m={plan.mlp_block_m}, f={plan.mlp_block_f})")
+    print(f"remat save-set         : {plan.remat_save_names}")
+    print(f"notes                  : {plan.notes}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""End-to-end training driver: train a granite-family LM on the synthetic
+Markov corpus with the CELLO plan, AdamW, checkpointing and straggler
+tracking.  Loss should drop from ~log(vocab) toward the source's conditional
+entropy (~log(branching)).
+
+    PYTHONPATH=src python examples/train_lm.py                 # ~10M params
+    PYTHONPATH=src python examples/train_lm.py --preset 100m   # ~100M params
+"""
+import argparse
+import dataclasses
+
+import jax
+
+from repro.checkpoint import AsyncCheckpointer
+from repro.configs import get_config
+from repro.core.policy import default_plan
+from repro.data import DataConfig, SyntheticLMData
+from repro.launch.train import AdamWConfig, TrainConfig, train_loop
+from repro.runtime import StragglerDetector
+
+PRESETS = {
+    # name: (n_layers, d_model, n_heads, kv, d_ff, vocab, batch, seq)
+    "tiny": (2, 64, 4, 2, 128, 512, 8, 64),
+    "10m": (4, 256, 8, 4, 640, 4096, 8, 128),
+    "100m": (8, 640, 10, 5, 1706, 16384, 8, 256),
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="tiny", choices=sorted(PRESETS))
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default="/tmp/cello_train_ckpt")
+    args = ap.parse_args()
+
+    L, D, H, KV, F, V, B, S = PRESETS[args.preset]
+    cfg = dataclasses.replace(
+        get_config("granite-3-8b"), n_layers=L, d_model=D, n_heads=H,
+        n_kv_heads=KV, head_dim=D // H, d_ff=F, vocab=V,
+        name=f"granite-{args.preset}")
+    print(f"model: {cfg.name}  params≈{cfg.total_params() / 1e6:.1f}M")
+
+    plan = default_plan(cfg, seq=S)
+    data = SyntheticLMData(DataConfig(vocab=V, seq_len=S, global_batch=B,
+                                      seed=0))
+    print(f"data: markov synthetic, loss floor ≈ {data.entropy_floor():.3f} "
+          f"nats (uniform would be {float(jax.numpy.log(V)):.3f})")
+
+    straggler = StragglerDetector()
+    ck = AsyncCheckpointer(args.ckpt_dir, keep=2)
+    out = train_loop(
+        cfg, plan,
+        AdamWConfig(lr=args.lr, warmup_steps=20, total_steps=args.steps,
+                    weight_decay=0.01),
+        data_iter=iter(data), n_steps=args.steps,
+        checkpointer=ck, checkpoint_every=max(50, args.steps // 4),
+        straggler=straggler, log_every=10)
+
+    hist = out["history"]
+    print(f"\nloss: {hist[0]['loss']:.3f} -> {hist[-1]['loss']:.3f} "
+          f"(floor ≈ {data.entropy_floor():.3f})")
+    print(f"median step time: {straggler.median_step_s * 1e3:.0f} ms")
+    print(f"checkpoints in {args.ckpt_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,166 @@
+"""Generate EXPERIMENTS.md §Dry-run and §Roofline tables from
+experiments/dryrun/*.json.  §Perf is maintained by hand (hypothesis log) in
+EXPERIMENTS.perf.md and embedded verbatim.
+
+    PYTHONPATH=src python scripts/gen_experiments.py
+"""
+import glob
+import json
+import os
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DRY = os.path.join(ROOT, "experiments", "dryrun")
+
+ARCH_ORDER = ["recurrentgemma-2b", "llama-3.2-vision-11b", "rwkv6-7b",
+              "moonshot-v1-16b-a3b", "granite-moe-1b-a400m", "gemma-7b",
+              "h2o-danube-1.8b", "minitron-8b", "granite-3-8b",
+              "hubert-xlarge"]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(tag=""):
+    cells = {}
+    for path in sorted(glob.glob(os.path.join(DRY, "*.json"))):
+        base = os.path.basename(path)[:-5]
+        parts = base.split("__")
+        if (len(parts) > 3 and parts[3] != tag) or (len(parts) == 3 and tag):
+            continue
+        with open(path) as f:
+            c = json.load(f)
+        cells[(c["arch"], c["shape"], c["mesh"])] = c
+    return cells
+
+
+def fmt_bytes(b):
+    return f"{b / (1 << 30):.2f}"
+
+
+def main():
+    cells = load()
+    ok = [c for c in cells.values() if c.get("status") == "ok"]
+    skipped = [c for c in cells.values() if c.get("status") == "skipped"]
+    errors = [c for c in cells.values() if c.get("status") == "error"]
+
+    lines = []
+    lines.append("## §Dry-run — multi-pod lower+compile matrix\n")
+    lines.append(f"Cells compiled OK: **{len(ok)}** · skipped by policy: "
+                 f"{len(skipped)} (see DESIGN.md §4) · errors: {len(errors)}")
+    lines.append("")
+    lines.append("Mesh: single-pod 16×16 (`data`,`model`) and multi-pod "
+                 "2×16×16 (`pod`,`data`,`model`), 512 placeholder host "
+                 "devices. Per-device bytes from "
+                 "`compiled.memory_analysis()`; every cell lowers the real "
+                 "step function (train = fwd+bwd+AdamW/ZeRO-1, decode = one "
+                 "token vs the sharded KV cache).\n")
+    lines.append("| arch | shape | mesh | args GiB/dev | temp GiB/dev | "
+                 "peak est GiB/dev | compile s | collectives (AG/AR/RS/A2A/CP) |")
+    lines.append("|---|---|---|---|---|---|---|---|")
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            for mesh in ("single", "multi"):
+                c = cells.get((arch, shape, mesh))
+                if c is None:
+                    lines.append(f"| {arch} | {shape} | {mesh} | — | — | — "
+                                 f"| — | MISSING |")
+                    continue
+                if c["status"] == "skipped":
+                    lines.append(f"| {arch} | {shape} | {mesh} "
+                                 f"| — | — | — | — | skipped: "
+                                 f"{c['reason'][:48]} |")
+                    continue
+                if c["status"] != "ok":
+                    lines.append(f"| {arch} | {shape} | {mesh} | — | — | — "
+                                 f"| — | ERROR |")
+                    continue
+                m = c["memory"]
+                coll = c["collectives"]
+                counts = "/".join(str(int(coll.get(f"n_{k}", 0))) for k in
+                                  ("all-gather", "all-reduce",
+                                   "reduce-scatter", "all-to-all",
+                                   "collective-permute"))
+                lines.append(
+                    f"| {arch} | {shape} | {mesh} "
+                    f"| {fmt_bytes(m['argument_bytes'])} "
+                    f"| {fmt_bytes(m['temp_bytes'])} "
+                    f"| {fmt_bytes(m['peak_estimate_bytes'])} "
+                    f"| {c['compile_s']:.0f} | {counts} |")
+    lines.append("")
+
+    lines.append("## §Roofline — per-cell terms (single-pod, 256 chips)\n")
+    lines.append("Constants: 197 TFLOP/s bf16 · 819 GB/s HBM · 50 GB/s/link "
+                 "ICI. FLOPs/bytes per chip from `cost_analysis()` of the "
+                 "unrolled per-layer-leaf module; collective bytes parsed "
+                 "from optimized HLO with ring factors (see "
+                 "`launch/roofline.py`). `6ND/HLO` = MODEL_FLOPS ratio; "
+                 "`roofline frac` = compute_s / max(terms).\n")
+    lines.append("**Measurement caveat**: XLA:CPU fuses elementwise chains "
+                 "less aggressively than XLA:TPU, so `bytes accessed` (and "
+                 "hence the memory term) is an *upper bound* on TPU HBM "
+                 "traffic; terms are comparable across variants because all "
+                 "cells share one compilation pipeline.\n")
+    lines.append("| arch | shape | mesh | compute ms | memory ms | "
+                 "collective ms | dominant | 6ND/HLO | roofline frac | "
+                 "one-line diagnosis |")
+    lines.append("|---|---|---|---|---|---|---|---|---|---|")
+
+    def diag(c):
+        r = c["roofline"]
+        d = r["dominant"]
+        shape = c["shape"]
+        if d == "memory" and "decode" in shape or "long" in shape:
+            return ("decode is cache-bandwidth bound; raise batch or "
+                    "quantise KV to move it")
+        if d == "memory":
+            return ("activation traffic; bigger fusion tiles / fewer "
+                    "materialised intermediates")
+        if d == "collective":
+            return ("TP/EP collectives; overlap with compute or widen "
+                    "per-shard work")
+        return "near compute roof; only kernel-level gains left"
+
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            c = cells.get((arch, shape, "single"))
+            if c is None or c.get("status") != "ok":
+                continue
+            r = c["roofline"]
+            lines.append(
+                f"| {arch} | {shape} | single "
+                f"| {r['compute_s'] * 1e3:.2f} | {r['memory_s'] * 1e3:.2f} "
+                f"| {r['collective_s'] * 1e3:.2f} | **{r['dominant']}** "
+                f"| {r['useful_flops_ratio']:.2f} "
+                f"| {r['roofline_fraction']:.3f} | {diag(c)} |")
+    lines.append("")
+    # multi-pod deltas (collective scaling proof)
+    lines.append("### Multi-pod (2×16×16) collective deltas\n")
+    lines.append("| arch | shape | coll ms single | coll ms multi | "
+                 "cross-pod growth |")
+    lines.append("|---|---|---|---|---|")
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            cs = cells.get((arch, shape, "single"))
+            cm = cells.get((arch, shape, "multi"))
+            if not cs or not cm or cs.get("status") != "ok" \
+                    or cm.get("status") != "ok":
+                continue
+            a = cs["roofline"]["collective_s"] * 1e3
+            b = cm["roofline"]["collective_s"] * 1e3
+            lines.append(f"| {arch} | {shape} | {a:.2f} | {b:.2f} "
+                         f"| {b / a if a else float('nan'):.2f}x |")
+    lines.append("")
+
+    out = "\n".join(lines)
+    gen_path = os.path.join(ROOT, "experiments", "generated_sections.md")
+    with open(gen_path, "w") as f:
+        f.write(out)
+    print(f"wrote {gen_path} ({len(ok)} ok, {len(skipped)} skipped, "
+          f"{len(errors)} errors)")
+    missing = [(a, s, m) for a in ARCH_ORDER for s in SHAPE_ORDER
+               for m in ("single", "multi") if (a, s, m) not in cells]
+    if missing:
+        print(f"missing {len(missing)} cells: {missing[:6]} ...")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Fits-per-device proof on the PRODUCTION (scan) form for the biggest
+cells: the dry-run measures cost on the unrolled form (whose liveness is
+inflated); this checks peak memory on the form that actually runs."""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import sys; sys.path.insert(0, "src")
+import json
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.configs import SHAPES, get_config
+from repro.core.policy import default_plan
+from repro.models import forward, set_mesh_context
+from repro.launch import shardings as shd
+from repro.launch.mesh import make_production_mesh
+from repro.launch.train import (TrainConfig, jit_train_step, zero1_shardings)
+from repro.optim import AdamWConfig, adamw_init
+
+out = {}
+for arch, shape_name in [("granite-3-8b", "train_4k"),
+                         ("llama-3.2-vision-11b", "train_4k"),
+                         ("granite-3-8b", "prefill_32k"),
+                         ("moonshot-v1-16b-a3b", "train_4k")]:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh()
+    set_mesh_context(mesh)
+    plan = default_plan(cfg, seq=shape.seq_len)
+    specs = shd.input_specs(cfg, shape, mesh)
+    params_sds, p_sh = shd.params_for(cfg, mesh)      # STACKED (scan form)
+    if shape.mode == "train":
+        o_sh = zero1_shardings(params_sds, p_sh, mesh, True)
+        opt_sds = shd.shaped(jax.eval_shape(lambda p: adamw_init(p),
+                                            params_sds), o_sh)
+        fn = jit_train_step(cfg, plan, AdamWConfig(), mesh,
+                            TrainConfig(remat=True, unroll=False, zero1=True,
+                                        donate=True),
+                            batch_specs=specs, p_shardings=p_sh,
+                            o_shardings=o_sh)
+        compiled = fn.lower(params_sds, opt_sds, specs).compile()
+    else:
+        def prefill(params, batch):
+            return forward(params, cfg, plan, batch["tokens"],
+                           frames=batch.get("frames"), img=batch.get("img"),
+                           mode="prefill")[0]
+        b_sh = jax.tree.map(lambda s: s.sharding, specs)
+        compiled = jax.jit(
+            prefill, in_shardings=(p_sh, b_sh),
+            out_shardings=NamedSharding(mesh, P(None, None, "model"))
+        ).lower(params_sds, specs).compile()
+    m = compiled.memory_analysis()
+    peak = (m.argument_size_in_bytes + m.output_size_in_bytes
+            + m.temp_size_in_bytes - m.alias_size_in_bytes)
+    out[f"{arch}/{shape_name}"] = {
+        "args_gib": round(m.argument_size_in_bytes / 2**30, 2),
+        "temp_gib": round(m.temp_size_in_bytes / 2**30, 2),
+        "peak_gib": round(peak / 2**30, 2),
+        "fits_16gib_hbm": peak < 16 * 2**30,
+    }
+    print(f"{arch}/{shape_name}: {out[f'{arch}/{shape_name}']}", flush=True)
+with open("experiments/scan_memory_check.json", "w") as f:
+    json.dump(out, f, indent=1)

@@ -1,0 +1,5 @@
+"""CELLO-JAX: schedule × hybrid implicit/explicit buffer co-design for
+complex tensor reuse, as a production-grade JAX training/inference
+framework (see DESIGN.md)."""
+
+__version__ = "0.1.0"

@@ -1,0 +1,30 @@
+"""CELLO core: schedule × hybrid implicit/explicit buffer co-design.
+
+Public API:
+  graph.OpGraph / TensorKind      — tensor-op DAG IR
+  reuse.analyze                   — reuse distance/frequency analysis
+  buffer.BufferConfig / simulate  — hybrid buffer traffic simulator
+  schedule.co_design              — the joint search (the paper's technique)
+  costmodel.HardwareModel / evaluate — speedup + energy model
+  policy.CelloPlan                — lowering onto kernels + remat policies
+  lowering.layer_graph            — per-arch analysis graphs
+"""
+from .graph import OpGraph, OpNode, TensorKind, TensorSpec
+from .reuse import ReuseAnalysis, TensorReuse, analyze
+from .buffer import BufferConfig, TrafficReport, simulate, sequential_groups
+from .costmodel import HardwareModel, Metrics, V5E, evaluate
+from .schedule import (CoDesignResult, EvaluatedSchedule, Schedule,
+                       build_groups, choose_pins, co_design)
+from .policy import CelloPlan, default_plan, plan_from_codesign
+from .lowering import decode_graph, layer_graph
+
+__all__ = [
+    "OpGraph", "OpNode", "TensorKind", "TensorSpec",
+    "ReuseAnalysis", "TensorReuse", "analyze",
+    "BufferConfig", "TrafficReport", "simulate", "sequential_groups",
+    "HardwareModel", "Metrics", "V5E", "evaluate",
+    "CoDesignResult", "EvaluatedSchedule", "Schedule",
+    "build_groups", "choose_pins", "co_design",
+    "CelloPlan", "default_plan", "plan_from_codesign",
+    "decode_graph", "layer_graph",
+]

@@ -1,0 +1,264 @@
+"""Hybrid implicit/explicit buffer model.
+
+The on-chip buffer (VMEM-class SRAM) is partitioned:
+
+* **explicit region** (``explicit_frac`` of capacity) — a software-managed
+  scratchpad.  The schedule *pins* tensors here with a planned lifetime
+  ``[def_step, last_use_step]``; within that lifetime every access hits.
+  Residency is deterministic: the co-design search (``core.schedule``)
+  guarantees the peak of live pinned bytes never exceeds the region.
+
+* **implicit region** (the rest) — a cache: LRU over fixed-size chunks with
+  write-allocate / write-back semantics.  It captures reuse the schedule did
+  not plan (data-dependent gathers, cross-group leftovers).  CELLO adds two
+  scheduler→cache *hints* that a pure hardware cache lacks:
+
+    - ``bypass`` for streams larger than the region (no thrash), and
+    - ``last-use invalidation``: when the schedule knows a tensor is dead,
+      its dirty chunks are dropped without writeback.
+
+Fusion groups execute with their internal intermediates held in the explicit
+region's working tile — those tensors never touch HBM or the implicit region
+at all (this is what a Pallas kernel's BlockSpec residency gives us on TPU).
+
+The simulator replays a grouped schedule and reports HBM / on-chip traffic;
+``core.costmodel`` turns that into speedup and energy.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+from .graph import OpGraph, TensorKind
+
+MiB = 1 << 20
+
+
+@dataclasses.dataclass
+class BufferConfig:
+    capacity_bytes: int = 128 * MiB
+    explicit_frac: float = 0.5
+    chunk_bytes: int = 256 * 1024
+    # CELLO hints (off ⇒ plain LRU cache, the "implicit-only" baseline)
+    last_use_invalidate: bool = True
+    bypass_streams: bool = True
+
+    @property
+    def explicit_bytes(self) -> int:
+        return int(self.capacity_bytes * self.explicit_frac)
+
+    @property
+    def implicit_bytes(self) -> int:
+        return self.capacity_bytes - self.explicit_bytes
+
+
+@dataclasses.dataclass
+class TrafficReport:
+    hbm_read: int = 0
+    hbm_write: int = 0
+    onchip: int = 0                  # explicit-region (VMEM) bytes moved
+    implicit_hits: int = 0
+    implicit_misses: int = 0
+    recompute_flops: int = 0
+    per_tensor: Dict[str, int] = dataclasses.field(default_factory=dict)
+
+    @property
+    def hbm_total(self) -> int:
+        return self.hbm_read + self.hbm_write
+
+    def charge(self, tname: str, nbytes: int) -> None:
+        self.per_tensor[tname] = self.per_tensor.get(tname, 0) + nbytes
+
+
+class _ImplicitLRU:
+    """Chunk-granular LRU with write-back and CELLO hints."""
+
+    def __init__(self, capacity_bytes: int, chunk_bytes: int, report: TrafficReport):
+        self.cap = capacity_bytes
+        self.chunk = chunk_bytes
+        self.rep = report
+        self.used = 0
+        # (tensor, chunk_idx) -> [size, dirty]
+        self.lines: "OrderedDict[Tuple[str, int], List]" = OrderedDict()
+
+    def _chunks(self, nbytes: int, tname: str) -> List[Tuple[int, int]]:
+        # Cap chunk count per tensor at 256 to bound simulator cost.
+        csz = max(self.chunk, -(-nbytes // 256))
+        out, off, i = [], 0, 0
+        while off < nbytes:
+            sz = min(csz, nbytes - off)
+            out.append((i, sz))
+            off += sz
+            i += 1
+        return out
+
+    def _evict_one(self) -> None:
+        (key, (size, dirty)) = self.lines.popitem(last=False)
+        self.used -= size
+        if dirty:
+            self.rep.hbm_write += size
+            self.rep.charge(key[0], size)
+
+    def access(self, tname: str, nbytes: int, write: bool) -> None:
+        if nbytes == 0:
+            return
+        if nbytes > self.cap:
+            # stream bypass: would thrash the whole region
+            if write:
+                self.rep.hbm_write += nbytes
+            else:
+                self.rep.hbm_read += nbytes
+            self.rep.charge(tname, nbytes)
+            self.rep.implicit_misses += 1
+            return
+        for idx, size in self._chunks(nbytes, tname):
+            key = (tname, idx)
+            if key in self.lines:
+                line = self.lines[key]
+                line[1] = line[1] or write
+                self.lines.move_to_end(key)
+                self.rep.implicit_hits += 1
+                continue
+            self.rep.implicit_misses += 1
+            if not write:
+                self.rep.hbm_read += size
+                self.rep.charge(tname, size)
+            # write-allocate without fetch; read-allocate after fetch
+            while self.used + size > self.cap and self.lines:
+                self._evict_one()
+            self.lines[key] = [size, bool(write)]
+            self.used += size
+
+    def invalidate(self, tname: str) -> None:
+        dead = [k for k in self.lines if k[0] == tname]
+        for k in dead:
+            size, _dirty = self.lines.pop(k)
+            self.used -= size   # dropped without writeback: data is dead
+
+    def flush(self) -> None:
+        while self.lines:
+            self._evict_one()
+
+
+def simulate(graph: OpGraph,
+             groups: Sequence[Sequence[str]],
+             config: BufferConfig,
+             pins: Optional[Dict[str, Tuple[int, int]]] = None,
+             last_use: Optional[Dict[str, int]] = None) -> TrafficReport:
+    """Replay a grouped schedule through the hybrid buffer.
+
+    Args:
+      graph: the op DAG.
+      groups: schedule as a list of fusion groups (each a list of op names,
+        singletons for unfused ops), in execution order.
+      config: buffer partition.
+      pins: tensor -> (first_group_idx, last_group_idx) explicit-region
+        residency plan.  Validated against the explicit region's capacity.
+      last_use: tensor -> last group index that reads it (enables the
+        last-use-invalidation hint when ``config.last_use_invalidate``).
+    """
+    pins = dict(pins or {})
+    rep = TrafficReport()
+    lru = _ImplicitLRU(config.implicit_bytes, config.chunk_bytes, rep)
+
+    # --- validate the pin plan against explicit capacity over time --------
+    n_steps = len(groups)
+    if pins:
+        timeline = [0] * (n_steps + 1)
+        for t, (a, b) in pins.items():
+            timeline[a] += graph.tensors[t].bytes
+            timeline[min(b, n_steps - 1) + 1] -= graph.tensors[t].bytes
+        live, peak = 0, 0
+        for d in timeline:
+            live += d
+            peak = max(peak, live)
+        if peak > config.explicit_bytes:
+            raise ValueError(
+                f"pin plan peak {peak} B exceeds explicit region "
+                f"{config.explicit_bytes} B")
+
+    filled: Set[str] = set()
+
+    if last_use is None:
+        last_use = {}
+        for gi, g in enumerate(groups):
+            for oname in g:
+                for t in graph.ops[oname].inputs:
+                    last_use[t] = gi
+
+    consumers_outside: Dict[str, bool] = {}
+    for t in graph.tensors.values():
+        consumers_outside[t.name] = True   # refined per group below
+
+    for gi, g in enumerate(groups):
+        gset = set(g)
+        produced = {graph.ops[o].output for o in g}
+        read_ext: List[str] = []
+        internal: List[str] = []
+        for oname in g:
+            op = graph.ops[oname]
+            for t in op.inputs:
+                if t not in produced:
+                    read_ext.append(t)
+        for t in sorted(produced):
+            cons = graph.consumers(t)
+            kind = graph.tensors[t].kind
+            if (cons and all(c.name in gset for c in cons)
+                    and kind != TensorKind.OUTPUT):
+                internal.append(t)
+
+        # external reads
+        for t in dict.fromkeys(read_ext):
+            nbytes = graph.tensors[t].bytes
+            pin = pins.get(t)
+            if pin and pin[0] <= gi <= pin[1]:
+                if t in filled:
+                    rep.onchip += nbytes          # explicit hit
+                else:
+                    rep.hbm_read += nbytes        # first fill
+                    rep.charge(t, nbytes)
+                    filled.add(t)
+            else:
+                lru.access(t, nbytes, write=False)
+            if config.last_use_invalidate and last_use.get(t) == gi:
+                lru.invalidate(t)
+
+        # internal intermediates: live only inside the fused group (VMEM)
+        for t in internal:
+            rep.onchip += 2 * graph.tensors[t].bytes     # produce + consume
+
+        # externally visible products
+        for t in sorted(produced):
+            if t in internal:
+                continue
+            spec = graph.tensors[t]
+            pin = pins.get(t)
+            if spec.kind == TensorKind.OUTPUT:
+                rep.hbm_write += spec.bytes               # must land in HBM
+                rep.charge(t, spec.bytes)
+                if pin and pin[0] <= gi <= pin[1]:
+                    filled.add(t)                          # also kept on-chip
+            elif pin and pin[0] <= gi <= pin[1]:
+                rep.onchip += spec.bytes                   # pinned: no HBM
+                filled.add(t)
+            else:
+                lru.access(t, spec.bytes, write=True)
+
+        # pins whose lifetime ended free their space implicitly (plan-level)
+        for t, (a, b) in list(pins.items()):
+            if b == gi and t in filled:
+                filled.discard(t)
+
+    if not config.last_use_invalidate:
+        lru.flush()        # baseline cache writes dirty data back eventually
+    # else: CELLO dropped dead data at last use; whatever survives in the
+    # implicit region is still live-by-plan and need not move now.
+    return rep
+
+
+def sequential_groups(graph: OpGraph, order: Optional[Sequence[str]] = None
+                      ) -> List[List[str]]:
+    """Op-by-op schedule (no fusion): the sequential baselines."""
+    order = list(order) if order is not None else graph.topo_order()
+    return [[o] for o in order]

@@ -1,0 +1,96 @@
+"""Speedup + energy cost model (the paper's two evaluation metrics).
+
+Time is a per-group roofline: ``max(flops/peak, hbm_bytes/bw)`` summed over
+the schedule (groups overlap compute with their own HBM streaming, but not
+with other groups — conservative).  Energy is a linear model over FLOPs,
+HBM bytes and on-chip bytes.
+
+Default constants target a TPU v5e-class chip (same constants the roofline
+analysis in EXPERIMENTS.md uses, so the two layers of the repo agree):
+197 TFLOP/s bf16, 819 GB/s HBM.  Energy-per-byte/-flop constants are
+representative 7nm-class figures and are explicitly parameters of the model,
+not measurements.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Sequence
+
+from .buffer import TrafficReport
+from .graph import OpGraph
+
+GiB = 1 << 30
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareModel:
+    name: str = "tpu-v5e"
+    peak_flops: float = 197e12          # bf16 MXU
+    hbm_bw: float = 819e9               # bytes/s
+    vmem_bytes: int = 128 * (1 << 20)
+    ici_bw: float = 50e9                # bytes/s per link
+    # energy model (J per unit)
+    e_flop: float = 0.3e-12             # per FLOP (bf16 MAC ≈ 0.6 pJ / 2)
+    e_hbm_byte: float = 40e-12          # HBM access
+    e_vmem_byte: float = 1.2e-12        # on-chip SRAM access
+    e_ici_byte: float = 10e-12          # inter-chip link
+
+    def time_group(self, flops: float, hbm_bytes: float) -> float:
+        return max(flops / self.peak_flops, hbm_bytes / self.hbm_bw)
+
+
+V5E = HardwareModel()
+
+
+@dataclasses.dataclass
+class Metrics:
+    time_s: float
+    energy_j: float
+    hbm_bytes: int
+    onchip_bytes: int
+    flops: int
+    ai: float                               # achieved arithmetic intensity
+
+    def speedup_over(self, base: "Metrics") -> float:
+        return base.time_s / self.time_s if self.time_s > 0 else float("inf")
+
+    def energy_ratio_over(self, base: "Metrics") -> float:
+        return base.energy_j / self.energy_j if self.energy_j > 0 else float("inf")
+
+
+def evaluate(graph: OpGraph,
+             groups: Sequence[Sequence[str]],
+             report: TrafficReport,
+             hw: HardwareModel = V5E,
+             ici_bytes: int = 0) -> Metrics:
+    """Score a (schedule, traffic) point.
+
+    HBM traffic is apportioned to groups proportionally to the bytes each
+    group's tensors moved (the simulator charges per-tensor; per-group
+    attribution uses the group's op byte footprint as weights).
+    """
+    flops = graph.total_flops + report.recompute_flops
+    total_hbm = report.hbm_total
+    # group weights by footprint
+    weights = []
+    for g in groups:
+        w = 0
+        for oname in g:
+            op = graph.ops[oname]
+            for t in list(op.inputs) + [op.output]:
+                w += graph.tensors[t].bytes
+        weights.append(w)
+    wsum = sum(weights) or 1
+    time = 0.0
+    for g, w in zip(groups, weights):
+        g_flops = sum(graph.ops[o].flops for o in g)
+        g_hbm = total_hbm * (w / wsum)
+        time += hw.time_group(g_flops, g_hbm)
+    time += ici_bytes / hw.ici_bw if ici_bytes else 0.0
+    energy = (flops * hw.e_flop
+              + total_hbm * hw.e_hbm_byte
+              + report.onchip * hw.e_vmem_byte
+              + ici_bytes * hw.e_ici_byte)
+    return Metrics(time_s=time, energy_j=energy, hbm_bytes=total_hbm,
+                   onchip_bytes=report.onchip, flops=flops,
+                   ai=flops / max(1, total_hbm))

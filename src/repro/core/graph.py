@@ -1,0 +1,227 @@
+"""Tensor-operation DAG IR for CELLO schedule / buffer co-design.
+
+The unit CELLO schedules is a DAG of *tensor operations* (einsums and
+elementwise ops) over named tensors.  "Complex tensor reuse" means a tensor
+in this DAG has multiple consumers at different reuse distances, so neither
+pure producer→consumer fusion nor a pure cache captures all of its reuse.
+
+This IR is deliberately small: enough structure for the reuse analyser
+(`core.reuse`), the hybrid-buffer simulator (`core.buffer`) and the co-design
+search (`core.schedule`) to reason about traffic, and enough metadata
+(FLOPs, bytes) for the speedup/energy cost model (`core.costmodel`).
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import math
+import re
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+
+class TensorKind(enum.Enum):
+    INPUT = "input"          # supplied by the invoking context (activations in)
+    WEIGHT = "weight"        # parameters: resident in HBM, read-only
+    INTERMEDIATE = "inter"   # produced and consumed inside the DAG
+    OUTPUT = "output"        # must be written back to HBM at the end
+
+
+@dataclasses.dataclass(frozen=True)
+class TensorSpec:
+    """A named dense tensor in the op DAG."""
+    name: str
+    shape: Tuple[int, ...]
+    dtype_bytes: int = 2            # bf16 default
+    kind: TensorKind = TensorKind.INTERMEDIATE
+
+    @property
+    def elements(self) -> int:
+        return int(math.prod(self.shape)) if self.shape else 1
+
+    @property
+    def bytes(self) -> int:
+        return self.elements * self.dtype_bytes
+
+
+_EINSUM_RE = re.compile(r"^([a-zA-Z,\.]+)->([a-zA-Z]*)$")
+
+
+def _parse_einsum(spec: str) -> Tuple[List[str], str]:
+    m = _EINSUM_RE.match(spec.replace(" ", ""))
+    if not m:
+        raise ValueError(f"bad einsum spec: {spec!r}")
+    lhs, rhs = m.groups()
+    return lhs.split(","), rhs
+
+
+@dataclasses.dataclass
+class OpNode:
+    """One tensor operation.
+
+    ``spec`` is an einsum string for contractions ("mk,kn->mn"), or one of
+    the pseudo-specs ``"ew"`` (elementwise over all inputs, output shape =
+    first input), ``"reduce"`` (elementwise + reduction), ``"scan"``
+    (sequential recurrence along the leading axis — unfusable across time
+    without a dedicated kernel), ``"gather"`` (data-dependent addressing —
+    reuse is *irregular*, the CELLO scheduler must leave it to the implicit
+    region).
+    """
+    name: str
+    spec: str
+    inputs: Tuple[str, ...]
+    output: str
+    flops: int = 0                  # 2 * MACs for contractions
+    # data-dependent ops (gather / top-k dispatch) have irregular reuse:
+    # the co-designer may not pin them in the explicit region.
+    irregular: bool = False
+
+    @property
+    def is_einsum(self) -> bool:
+        return "->" in self.spec
+
+
+class OpGraph:
+    """A DAG of tensor ops with dense-shape metadata."""
+
+    def __init__(self, name: str = "graph"):
+        self.name = name
+        self.tensors: Dict[str, TensorSpec] = {}
+        self.ops: Dict[str, OpNode] = {}
+        self._order: List[str] = []     # insertion order (a valid topo order)
+
+    # -- construction -----------------------------------------------------
+    def tensor(self, name: str, shape: Sequence[int], *, dtype_bytes: int = 2,
+               kind: TensorKind = TensorKind.INTERMEDIATE) -> TensorSpec:
+        if name in self.tensors:
+            raise ValueError(f"duplicate tensor {name!r}")
+        t = TensorSpec(name, tuple(int(s) for s in shape), dtype_bytes, kind)
+        self.tensors[name] = t
+        return t
+
+    def einsum(self, name: str, spec: str, inputs: Sequence[str], output: str,
+               *, dtype_bytes: int = 2,
+               out_kind: TensorKind = TensorKind.INTERMEDIATE) -> OpNode:
+        """Add an einsum node; infers the output shape and FLOPs."""
+        in_specs, out_spec = _parse_einsum(spec)
+        if len(in_specs) != len(inputs):
+            raise ValueError(f"{name}: spec {spec!r} has {len(in_specs)} operands, "
+                             f"got {len(inputs)} inputs")
+        dim: Dict[str, int] = {}
+        for sub, tname in zip(in_specs, inputs):
+            t = self._expect(tname)
+            if len(sub) != len(t.shape):
+                raise ValueError(f"{name}: operand {tname} rank mismatch "
+                                 f"({sub!r} vs shape {t.shape})")
+            for ax, size in zip(sub, t.shape):
+                if dim.setdefault(ax, size) != size:
+                    raise ValueError(f"{name}: axis {ax} size mismatch")
+        out_shape = tuple(dim[a] for a in out_spec)
+        if output not in self.tensors:
+            self.tensor(output, out_shape, dtype_bytes=dtype_bytes, kind=out_kind)
+        macs = math.prod(dim.values())
+        return self._add(OpNode(name, spec, tuple(inputs), output, flops=2 * macs))
+
+    def elementwise(self, name: str, inputs: Sequence[str], output: str,
+                    *, flops_per_elem: int = 1, dtype_bytes: int = 2,
+                    out_shape: Optional[Sequence[int]] = None,
+                    out_kind: TensorKind = TensorKind.INTERMEDIATE,
+                    spec: str = "ew", irregular: bool = False) -> OpNode:
+        t0 = self._expect(inputs[0])
+        shape = tuple(out_shape) if out_shape is not None else t0.shape
+        if output not in self.tensors:
+            self.tensor(output, shape, dtype_bytes=dtype_bytes, kind=out_kind)
+        flops = flops_per_elem * int(math.prod(shape))
+        return self._add(OpNode(name, spec, tuple(inputs), output,
+                                flops=flops, irregular=irregular))
+
+    def _add(self, op: OpNode) -> OpNode:
+        if op.name in self.ops:
+            raise ValueError(f"duplicate op {op.name!r}")
+        for t in op.inputs:
+            self._expect(t)
+        self.ops[op.name] = op
+        self._order.append(op.name)
+        return op
+
+    def _expect(self, tname: str) -> TensorSpec:
+        if tname not in self.tensors:
+            raise KeyError(f"unknown tensor {tname!r}")
+        return self.tensors[tname]
+
+    # -- queries ----------------------------------------------------------
+    def producer(self, tname: str) -> Optional[OpNode]:
+        for op in self.ops.values():
+            if op.output == tname:
+                return op
+        return None
+
+    def consumers(self, tname: str) -> List[OpNode]:
+        return [op for op in self.ops.values() if tname in op.inputs]
+
+    def topo_order(self) -> List[str]:
+        """Insertion order (construction enforces def-before-use)."""
+        return list(self._order)
+
+    def all_topo_orders(self, limit: int = 200) -> List[List[str]]:
+        """Enumerate topological orders (bounded); used by exhaustive search."""
+        preds: Dict[str, set] = {o: set() for o in self.ops}
+        for op in self.ops.values():
+            for t in op.inputs:
+                p = self.producer(t)
+                if p is not None:
+                    preds[op.name].add(p.name)
+        out: List[List[str]] = []
+
+        def rec(done: List[str], remaining: set):
+            if len(out) >= limit:
+                return
+            if not remaining:
+                out.append(list(done))
+                return
+            ready = sorted(o for o in remaining if preds[o] <= set(done))
+            for o in ready:
+                done.append(o)
+                remaining.remove(o)
+                rec(done, remaining)
+                remaining.add(o)
+                done.pop()
+
+        rec([], set(self.ops))
+        return out
+
+    def validate(self) -> None:
+        seen: set = set()
+        defined = {t.name for t in self.tensors.values()
+                   if t.kind in (TensorKind.INPUT, TensorKind.WEIGHT)}
+        for oname in self._order:
+            op = self.ops[oname]
+            for t in op.inputs:
+                if t not in defined:
+                    raise ValueError(f"{oname}: input {t} used before defined")
+            defined.add(op.output)
+            seen.add(oname)
+        # outputs must be produced
+        for t in self.tensors.values():
+            if t.kind == TensorKind.OUTPUT and self.producer(t.name) is None:
+                raise ValueError(f"output tensor {t.name} has no producer")
+
+    # -- stats ------------------------------------------------------------
+    @property
+    def total_flops(self) -> int:
+        return sum(op.flops for op in self.ops.values())
+
+    def compulsory_bytes(self) -> int:
+        """Traffic lower bound: each INPUT/WEIGHT read once, OUTPUT written once."""
+        total = 0
+        for t in self.tensors.values():
+            if t.kind in (TensorKind.INPUT, TensorKind.WEIGHT, TensorKind.OUTPUT):
+                total += t.bytes
+        return total
+
+    def arithmetic_intensity_best(self) -> float:
+        """Paper-style AI_best = FLOPs / compulsory traffic (bytes)."""
+        return self.total_flops / max(1, self.compulsory_bytes())
+
+    def __repr__(self) -> str:
+        return (f"OpGraph({self.name!r}, {len(self.ops)} ops, "
+                f"{len(self.tensors)} tensors, {self.total_flops:.3e} FLOPs)")

@@ -1,0 +1,123 @@
+"""Reuse-distance / reuse-frequency analysis over a schedule order.
+
+For every tensor, given a schedule (a sequence of op executions), compute:
+
+* ``uses``            — ordered op indices where the tensor is read,
+* ``def_step``        — op index where the tensor is produced (None for
+                        graph inputs/weights: they are live from step 0),
+* ``reuse_distances`` — for each consecutive (use_i, use_{i+1}) pair, the
+                        volume (bytes) of *other* tensors touched in between.
+                        This is the classic stack-distance proxy that
+                        predicts whether an implicit (cache-like) region of
+                        capacity C would hit: distance < C ⇒ likely hit.
+* ``frequency``       — total number of reads.
+
+The co-design search uses these to decide *explicit pinning* (small distance
+variance, high frequency, regular access ⇒ pin) versus *implicit* residency
+(irregular / data-dependent reuse ⇒ leave to the LRU region), and to order
+pin candidates by traffic-saved-per-pinned-byte.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+from .graph import OpGraph, TensorKind
+
+
+@dataclasses.dataclass
+class TensorReuse:
+    name: str
+    bytes: int
+    def_step: Optional[int]
+    uses: List[int]
+    reuse_distances: List[int]          # bytes of intervening traffic
+    irregular: bool                      # touched by a data-dependent op
+
+    @property
+    def frequency(self) -> int:
+        return len(self.uses)
+
+    @property
+    def max_distance(self) -> int:
+        return max(self.reuse_distances, default=0)
+
+    @property
+    def lifetime(self) -> Optional[range]:
+        """[def, last_use] as schedule-step range; None if never used."""
+        if not self.uses:
+            return None
+        start = self.def_step if self.def_step is not None else 0
+        return range(start, self.uses[-1] + 1)
+
+    def traffic_if_missed(self) -> int:
+        """HBM bytes if every reuse misses (re-read per use)."""
+        return self.bytes * max(0, self.frequency - 1)
+
+    def pin_value(self) -> float:
+        """Traffic saved per pinned byte (greedy pin ordering key)."""
+        if self.bytes == 0 or self.irregular:
+            return 0.0
+        return self.traffic_if_missed() / self.bytes
+
+
+@dataclasses.dataclass
+class ReuseAnalysis:
+    order: List[str]
+    tensors: Dict[str, TensorReuse]
+
+    def ranked_pin_candidates(self) -> List[TensorReuse]:
+        """Pinnable tensors, best value first (ties: smaller first)."""
+        cands = [t for t in self.tensors.values()
+                 if t.frequency >= 1 and not t.irregular and t.bytes > 0]
+        return sorted(cands, key=lambda t: (-t.pin_value(), t.bytes, t.name))
+
+
+def analyze(graph: OpGraph, order: Optional[Sequence[str]] = None) -> ReuseAnalysis:
+    order = list(order) if order is not None else graph.topo_order()
+    if set(order) != set(graph.ops):
+        raise ValueError("order must be a permutation of graph ops")
+
+    # Which tensors are read by a data-dependent op (irregular reuse)?
+    irregular = set()
+    for op in graph.ops.values():
+        if op.irregular:
+            irregular.update(op.inputs)
+            irregular.add(op.output)
+
+    def_step: Dict[str, Optional[int]] = {
+        t.name: (None if t.kind in (TensorKind.INPUT, TensorKind.WEIGHT) else -1)
+        for t in graph.tensors.values()}
+    uses: Dict[str, List[int]] = {t: [] for t in graph.tensors}
+    # bytes touched at each step (for distance computation)
+    step_bytes: List[int] = []
+    touched_at: List[List[str]] = []
+
+    for step, oname in enumerate(order):
+        op = graph.ops[oname]
+        names = list(op.inputs) + [op.output]
+        touched_at.append(names)
+        step_bytes.append(sum(graph.tensors[n].bytes for n in set(names)))
+        for t in op.inputs:
+            uses[t].append(step)
+        if def_step.get(op.output) == -1:
+            def_step[op.output] = step
+
+    prefix = [0]
+    for b in step_bytes:
+        prefix.append(prefix[-1] + b)
+
+    out: Dict[str, TensorReuse] = {}
+    for tname, ts in graph.tensors.items():
+        u = uses[tname]
+        dists: List[int] = []
+        # distance from def to first use counts too (must survive that long)
+        anchor = def_step[tname]
+        points = ([] if anchor in (None, -1) else [anchor]) + u
+        for a, b in zip(points, points[1:]):
+            # bytes touched strictly between the two accesses
+            dists.append(max(0, prefix[b] - prefix[a + 1]))
+        out[tname] = TensorReuse(
+            name=tname, bytes=ts.bytes, def_step=def_step[tname],
+            uses=u, reuse_distances=dists, irregular=tname in irregular)
+    return ReuseAnalysis(order=order, tensors=out)

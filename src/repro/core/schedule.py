@@ -1,0 +1,302 @@
+"""CELLO co-design search: schedule (order × fusion × tiles) × buffer split.
+
+The search jointly picks:
+
+1. a topological **order** of the op DAG,
+2. a **fusion grouping** — maximal producer→consumer chains whose internal
+   intermediates stream through the explicit region tile-by-tile (on TPU a
+   fusion group lowers to one Pallas kernel; the tile working-set check below
+   is the BlockSpec feasibility check),
+3. an explicit **pin set** — tensors held in the explicit region across their
+   whole lifetime, chosen greedily by traffic-saved-per-pinned-byte, and
+4. the **buffer split** — the fraction of on-chip capacity given to the
+   explicit region, swept over ninths; the remainder is the implicit LRU.
+
+Scoring is the hybrid-buffer simulation (`core.buffer`) fed to the
+speedup/energy model (`core.costmodel`).  Three baselines are produced for
+the paper-style comparison: implicit-only (plain cache, op-by-op),
+explicit-only (scratchpad pinning, no cache), fused-only (fusion but all
+capacity explicit).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .buffer import BufferConfig, TrafficReport, sequential_groups, simulate
+from .costmodel import HardwareModel, Metrics, V5E, evaluate
+from .graph import OpGraph, TensorKind
+from .reuse import ReuseAnalysis, analyze
+
+_SPLITS = (0.0, 0.125, 0.25, 0.375, 0.5, 0.625, 0.75, 0.875, 1.0)
+_MIN_TILE_ROWS = 8          # TPU sublane granularity
+
+
+@dataclasses.dataclass
+class Schedule:
+    order: List[str]
+    groups: List[List[str]]
+    pins: Dict[str, Tuple[int, int]]
+    config: BufferConfig
+
+    @property
+    def fused_op_count(self) -> int:
+        return sum(len(g) for g in self.groups if len(g) > 1)
+
+
+@dataclasses.dataclass
+class EvaluatedSchedule:
+    schedule: Schedule
+    report: TrafficReport
+    metrics: Metrics
+
+
+@dataclasses.dataclass
+class CoDesignResult:
+    best: EvaluatedSchedule
+    baselines: Dict[str, EvaluatedSchedule]
+    split_sweep: Dict[float, Metrics]
+
+    def speedup(self, baseline: str = "seq-implicit") -> float:
+        return self.best.metrics.speedup_over(self.baselines[baseline].metrics)
+
+    def energy_ratio(self, baseline: str = "seq-implicit") -> float:
+        return self.baselines[baseline].metrics.energy_j / self.best.metrics.energy_j
+
+
+# --------------------------------------------------------------------------
+# fusion legality
+# --------------------------------------------------------------------------
+
+def _group_tile_working_set(graph: OpGraph, group: Sequence[str]) -> Tuple[int, int]:
+    """(resident_bytes, per_row_bytes) for streaming the group tile-by-tile.
+
+    Weights read inside the group must stay resident for every tile; internal
+    and boundary activations stream along their leading axis.
+    """
+    gset = set(group)
+    produced = {graph.ops[o].output for o in group}
+    weights = set()
+    streamed = set()
+    for oname in group:
+        op = graph.ops[oname]
+        for t in op.inputs:
+            if graph.tensors[t].kind == TensorKind.WEIGHT:
+                weights.add(t)
+            else:
+                streamed.add(t)
+        streamed.add(op.output)
+    # Weights are double-buffered tiles streamed along their largest axis
+    # (128 wide — one MXU tile column/row), not fully resident.
+    resident = 0
+    for t in weights:
+        spec = graph.tensors[t]
+        big = max(spec.shape) if spec.shape else 1
+        tile = spec.bytes // max(1, big) * min(big, 128)
+        resident += 2 * min(spec.bytes, tile)
+    per_row = 0
+    for t in streamed:
+        spec = graph.tensors[t]
+        # finest streamable granularity: tile along every axis except the
+        # last (lane) one — this is what a Pallas BlockSpec grid gives us.
+        if spec.shape:
+            import math as _m
+            rows = max(1, _m.prod(spec.shape[:-1]))
+        else:
+            rows = 1
+        per_row += spec.bytes // rows
+    return resident, per_row
+
+
+def fusable(graph: OpGraph, group: Sequence[str], nxt: str,
+            explicit_bytes: int) -> bool:
+    """Can ``nxt`` join ``group`` as one explicit-region fusion group?"""
+    op = graph.ops[nxt]
+    if op.spec == "scan" or op.irregular:
+        return False
+    if any(graph.ops[o].spec == "scan" or graph.ops[o].irregular for o in group):
+        return False
+    produced = {graph.ops[o].output for o in group}
+    if not any(t in produced for t in op.inputs):
+        return False                      # must consume something from group
+    resident, per_row = _group_tile_working_set(graph, list(group) + [nxt])
+    return resident + _MIN_TILE_ROWS * per_row <= explicit_bytes
+
+
+def build_groups(graph: OpGraph, order: Sequence[str],
+                 explicit_bytes: int) -> List[List[str]]:
+    """Greedy maximal fusion chains along the order."""
+    groups: List[List[str]] = []
+    cur: List[str] = []
+    for oname in order:
+        if cur and fusable(graph, cur, oname, explicit_bytes):
+            cur.append(oname)
+        else:
+            if cur:
+                groups.append(cur)
+            cur = [oname]
+    if cur:
+        groups.append(cur)
+    return groups
+
+
+# --------------------------------------------------------------------------
+# pin selection
+# --------------------------------------------------------------------------
+
+def _group_index(groups: Sequence[Sequence[str]]) -> Dict[str, int]:
+    gi = {}
+    for i, g in enumerate(groups):
+        for o in g:
+            gi[o] = i
+    return gi
+
+
+def choose_pins(graph: OpGraph, groups: Sequence[Sequence[str]],
+                analysis: ReuseAnalysis, explicit_bytes: int
+                ) -> Dict[str, Tuple[int, int]]:
+    """Greedy pinning by traffic-saved-per-byte under a liveness-aware cap."""
+    gi = _group_index(groups)
+    internal = set()
+    for g in groups:
+        gset = set(g)
+        for oname in g:
+            t = graph.ops[oname].output
+            cons = graph.consumers(t)
+            if (cons and all(c.name in gset for c in cons)
+                    and graph.tensors[t].kind != TensorKind.OUTPUT):
+                internal.add(t)
+
+    n = len(groups)
+    timeline = [0] * (n + 1)
+
+    def fits(a: int, b: int, nbytes: int) -> bool:
+        running = 0
+        for i in range(n + 1):
+            running += timeline[i]
+            if a <= i <= b and running + nbytes > explicit_bytes:
+                return False
+        return True
+
+    def commit(a: int, b: int, nbytes: int) -> None:
+        timeline[a] += nbytes
+        timeline[min(b, n - 1) + 1] -= nbytes
+
+    pins: Dict[str, Tuple[int, int]] = {}
+    for cand in analysis.ranked_pin_candidates():
+        if cand.pin_value() <= 0 or cand.name in internal:
+            continue
+        spec = graph.tensors[cand.name]
+        if spec.bytes > explicit_bytes:
+            continue
+        first = (0 if cand.def_step is None
+                 else gi[analysis.order[cand.def_step]])
+        last = gi[analysis.order[cand.uses[-1]]] if cand.uses else first
+        if fits(first, last, spec.bytes):
+            commit(first, last, spec.bytes)
+            pins[cand.name] = (first, last)
+    return pins
+
+
+# --------------------------------------------------------------------------
+# candidate orders
+# --------------------------------------------------------------------------
+
+def candidate_orders(graph: OpGraph, max_orders: int = 64) -> List[List[str]]:
+    orders = [graph.topo_order()]
+    if len(graph.ops) <= 10:
+        for o in graph.all_topo_orders(limit=max_orders):
+            if o not in orders:
+                orders.append(o)
+    else:
+        # heuristic alternative: schedule consumers as late as possible
+        # (shrinks reuse distances of late-used tensors)
+        natural = graph.topo_order()
+        lazy = _lazy_order(graph, natural)
+        if lazy not in orders:
+            orders.append(lazy)
+    return orders[:max_orders]
+
+
+def _lazy_order(graph: OpGraph, natural: Sequence[str]) -> List[str]:
+    """ALAP-flavoured topological order."""
+    remaining = set(natural)
+    placed: List[str] = []
+    produced = {t.name for t in graph.tensors.values()
+                if t.kind in (TensorKind.INPUT, TensorKind.WEIGHT)}
+    natural = list(natural)
+    while remaining:
+        # among ready ops, prefer the one whose output is consumed soonest
+        ready = [o for o in natural
+                 if o in remaining
+                 and all(t in produced for t in graph.ops[o].inputs)]
+        def urgency(o: str) -> int:
+            t = graph.ops[o].output
+            for j, other in enumerate(natural):
+                if other in remaining and other != o and t in graph.ops[other].inputs:
+                    return j
+            return len(natural)
+        ready.sort(key=urgency)
+        pick = ready[0]
+        placed.append(pick)
+        remaining.discard(pick)
+        produced.add(graph.ops[pick].output)
+    return placed
+
+
+# --------------------------------------------------------------------------
+# the co-design search
+# --------------------------------------------------------------------------
+
+def _evaluate_point(graph: OpGraph, order: List[str], split: float,
+                    capacity: int, hw: HardwareModel,
+                    last_use_invalidate: bool = True,
+                    fuse: bool = True, pin: bool = True) -> EvaluatedSchedule:
+    cfg = BufferConfig(capacity_bytes=capacity, explicit_frac=split,
+                       last_use_invalidate=last_use_invalidate)
+    groups = (build_groups(graph, order, cfg.explicit_bytes)
+              if fuse else sequential_groups(graph, order))
+    analysis = analyze(graph, order)
+    pins = (choose_pins(graph, groups, analysis, cfg.explicit_bytes)
+            if pin and cfg.explicit_bytes > 0 else {})
+    rep = simulate(graph, groups, cfg, pins)
+    met = evaluate(graph, groups, rep, hw)
+    return EvaluatedSchedule(Schedule(order, groups, pins, cfg), rep, met)
+
+
+def co_design(graph: OpGraph, *, capacity_bytes: Optional[int] = None,
+              hw: HardwareModel = V5E, max_orders: int = 16
+              ) -> CoDesignResult:
+    """Joint schedule × buffer-split search. Returns best + baselines."""
+    graph.validate()
+    capacity = capacity_bytes or hw.vmem_bytes
+
+    best: Optional[EvaluatedSchedule] = None
+    split_sweep: Dict[float, Metrics] = {}
+    for order in candidate_orders(graph, max_orders):
+        for split in _SPLITS:
+            ev = _evaluate_point(graph, order, split, capacity, hw)
+            cur = split_sweep.get(split)
+            if cur is None or ev.metrics.time_s < cur.time_s:
+                split_sweep[split] = ev.metrics
+            if (best is None
+                    or (ev.metrics.time_s, ev.metrics.energy_j)
+                    < (best.metrics.time_s, best.metrics.energy_j)):
+                best = ev
+    assert best is not None
+
+    nat = graph.topo_order()
+    baselines = {
+        # plain cache, op-by-op, no hints — the "implicit-only" accelerator
+        "seq-implicit": _evaluate_point(graph, nat, 0.0, capacity, hw,
+                                        last_use_invalidate=False,
+                                        fuse=False, pin=False),
+        # scratchpad-only: pinning but no cache for the rest
+        "seq-explicit": _evaluate_point(graph, nat, 1.0, capacity, hw,
+                                        fuse=False, pin=True),
+        # fusion, all capacity explicit, no implicit region
+        "fused-only": _evaluate_point(graph, nat, 1.0, capacity, hw,
+                                      fuse=True, pin=True),
+    }
+    return CoDesignResult(best=best, baselines=baselines, split_sweep=split_sweep)

@@ -1,0 +1,3 @@
+from .pipeline import DataConfig, SyntheticLMData, markov_transition
+
+__all__ = ["DataConfig", "SyntheticLMData", "markov_transition"]

@@ -1,0 +1,13 @@
+"""Pallas TPU kernels — the explicit-buffer instantiations of CELLO fusion
+groups. Each subpackage: kernel.py (pl.pallas_call + BlockSpec VMEM
+tiling), ops.py (jit'd wrapper, interpret-mode on CPU), ref.py (pure-jnp
+oracle used by the allclose test sweeps)."""
+from .flash_attention import flash_attention, mha_reference
+from .fused_mlp import fused_mlp, mlp_reference
+from .rglru import rglru, rglru_reference
+from .rwkv6 import wkv6, wkv6_reference
+from .rmsnorm import rmsnorm, rmsnorm_reference
+
+__all__ = ["flash_attention", "mha_reference", "fused_mlp", "mlp_reference",
+           "rglru", "rglru_reference", "wkv6", "wkv6_reference",
+           "rmsnorm", "rmsnorm_reference"]

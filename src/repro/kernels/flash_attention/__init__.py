@@ -1,0 +1,4 @@
+from .ops import flash_attention
+from .ref import mha_reference
+
+__all__ = ["flash_attention", "mha_reference"]

@@ -1,0 +1,43 @@
+"""Jit'd public wrapper for the flash-attention kernel.
+
+On CPU (this container) the kernel body executes in Pallas interpret mode —
+numerics identical, used by tests; on TPU it compiles through Mosaic.
+Head dims that aren't lane-aligned (multiples of 128) are zero-padded: QK^T
+over zero-padded features adds zero, padded V columns are sliced off.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention as _flash_kernel_call
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "scale",
+                                             "q_block", "kv_block",
+                                             "interpret"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    scale: Optional[float] = None,
+                    q_block: int = 512, kv_block: int = 512,
+                    interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Fused attention, lane-aligned. q (B,H,S,E); k,v (B,KVH,T,E)."""
+    interp = _on_cpu() if interpret is None else interpret
+    E = q.shape[-1]
+    Ep = -(-E // 128) * 128
+    if Ep != E:
+        pad = ((0, 0), (0, 0), (0, 0), (0, Ep - E))
+        # scale must follow the true head dim, not the padded one
+        scale = scale if scale is not None else E ** -0.5
+        q, k, v = (jnp.pad(t, pad) for t in (q, k, v))
+    out = _flash_kernel_call(q, k, v, causal=causal, window=window,
+                             scale=scale, q_block=q_block, kv_block=kv_block,
+                             interpret=interp)
+    return out[..., :E]

@@ -1,0 +1,44 @@
+"""Pure-jnp oracle for flash attention (causal / sliding-window / GQA)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+
+def mha_reference(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                  causal: bool = True, window: Optional[int] = None,
+                  scale: Optional[float] = None) -> jnp.ndarray:
+    """Reference attention.
+
+    Args:
+      q: (B, H, S, E)
+      k, v: (B, KVH, T, E) with H % KVH == 0 (GQA broadcast)
+      causal: apply causal mask (q position i attends to kv positions <= i,
+        aligned at the end: kv position j corresponds to query i = j + S - T
+        offsets when T != S).
+      window: if set, query i attends only to j in (i - window, i].
+    Returns: (B, H, S, E) in q.dtype.
+    """
+    B, H, S, E = q.shape
+    KVH, T = k.shape[1], k.shape[2]
+    assert H % KVH == 0
+    rep = H // KVH
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    scale = scale if scale is not None else E ** -0.5
+    logits = jnp.einsum("bhse,bhte->bhst", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    qi = jnp.arange(S)[:, None] + (T - S)       # absolute kv-aligned position
+    kj = jnp.arange(T)[None, :]
+    mask = jnp.ones((S, T), dtype=bool)
+    if causal:
+        mask &= kj <= qi
+    if window is not None:
+        mask &= kj > qi - window
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    probs = jnp.nan_to_num(jnp.exp(logits - logits.max(-1, keepdims=True)))
+    probs = probs / jnp.maximum(probs.sum(-1, keepdims=True), 1e-30)
+    out = jnp.einsum("bhst,bhte->bhse", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,4 @@
+from .ops import fused_mlp
+from .ref import mlp_reference
+
+__all__ = ["fused_mlp", "mlp_reference"]

@@ -1,0 +1,29 @@
+"""Jit'd public wrapper for the fused MLP kernel."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import fused_mlp as _fused_mlp_call
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@functools.partial(jax.jit, static_argnames=("activation", "m_block",
+                                             "f_block", "interpret"))
+def fused_mlp(x: jnp.ndarray, w_gate: Optional[jnp.ndarray],
+              w_up: jnp.ndarray, w_down: jnp.ndarray, *,
+              activation: str = "silu", m_block: int = 256,
+              f_block: int = 512,
+              interpret: Optional[bool] = None) -> jnp.ndarray:
+    interp = _on_cpu() if interpret is None else interpret
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    out = _fused_mlp_call(x2, w_gate, w_up, w_down, activation=activation,
+                          m_block=m_block, f_block=f_block, interpret=interp)
+    return out.reshape(*lead, -1)

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the fused gated MLP."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _act(h: jnp.ndarray, kind: str) -> jnp.ndarray:
+    if kind == "silu":
+        return jax.nn.silu(h)
+    if kind == "gelu":
+        return jax.nn.gelu(h, approximate=True)
+    if kind == "relu2":
+        r = jax.nn.relu(h)
+        return r * r
+    raise ValueError(kind)
+
+
+def mlp_reference(x: jnp.ndarray, w_gate, w_up, w_down, *,
+                  activation: str = "silu") -> jnp.ndarray:
+    """x: (M, D). Gated: h = act(x@w_gate) * (x@w_up); non-gated (w_gate is
+    None): h = act(x@w_up).  Returns h @ w_down, in x.dtype, f32 compute."""
+    xf = x.astype(jnp.float32)
+    if w_gate is not None:
+        g = xf @ w_gate.astype(jnp.float32)
+        u = xf @ w_up.astype(jnp.float32)
+        h = _act(g, activation) * u
+    else:
+        h = _act(xf @ w_up.astype(jnp.float32), activation)
+    return (h @ w_down.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,4 @@
+from .ops import rglru
+from .ref import rglru_reference
+
+__all__ = ["rglru", "rglru_reference"]

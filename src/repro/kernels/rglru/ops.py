@@ -1,0 +1,24 @@
+"""Jit'd public wrapper for the RG-LRU kernel."""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import rglru as _rglru_call
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@functools.partial(jax.jit, static_argnames=("d_block", "interpret"))
+def rglru(x: jnp.ndarray, gate_r: jnp.ndarray, gate_i: jnp.ndarray,
+          a_param: jnp.ndarray, h0: Optional[jnp.ndarray] = None, *,
+          d_block: int = 512,
+          interpret: Optional[bool] = None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    interp = _on_cpu() if interpret is None else interpret
+    return _rglru_call(x, gate_r, gate_i, a_param, h0, d_block=d_block,
+                       interpret=interp)

@@ -1,0 +1,41 @@
+"""Pure-jnp oracle for the RG-LRU recurrence (recurrentgemma / Griffin).
+
+    r_t = sigmoid(gate_r_t)                 (recurrence gate, pre-act input)
+    i_t = sigmoid(gate_i_t)                 (input gate)
+    a_t = exp(c * softplus(a_param) * (-r_t))       elementwise, c = 8
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+All math in f32; returns h in x.dtype plus the final state.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+RGLRU_C = 8.0
+
+
+def rglru_reference(x: jnp.ndarray, gate_r: jnp.ndarray, gate_i: jnp.ndarray,
+                    a_param: jnp.ndarray,
+                    h0: Optional[jnp.ndarray] = None
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x, gate_r, gate_i: (B, S, D); a_param: (D,); h0: (B, D) or None."""
+    B, S, D = x.shape
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(gate_r.astype(jnp.float32))
+    i = jax.nn.sigmoid(gate_i.astype(jnp.float32))
+    log_a = -RGLRU_C * jax.nn.softplus(a_param.astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    gated_x = i * xf
+    # sqrt(1 - a^2) input normalisation (Griffin eq. 4)
+    beta = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12))
+    h = jnp.zeros((B, D), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+
+    def step(h, t):
+        h = a[:, t] * h + beta[:, t] * gated_x[:, t]
+        return h, h
+
+    hT, hs = jax.lax.scan(step, h, jnp.arange(S))
+    return jnp.swapaxes(hs, 0, 1).astype(x.dtype), hT

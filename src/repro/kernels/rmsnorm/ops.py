@@ -1,0 +1,25 @@
+"""Jit'd public wrapper for the fused RMSNorm kernel."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import rmsnorm as _rmsnorm_call
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "row_block", "interpret"))
+def rmsnorm(x: jnp.ndarray, w: jnp.ndarray, *, eps: float = 1e-6,
+            row_block: int = 256,
+            interpret: Optional[bool] = None) -> jnp.ndarray:
+    interp = _on_cpu() if interpret is None else interpret
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    out = _rmsnorm_call(x2, w, eps=eps, row_block=row_block, interpret=interp)
+    return out.reshape(*lead, -1)

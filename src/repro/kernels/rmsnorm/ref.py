@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for fused RMSNorm."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rmsnorm_reference(x: jnp.ndarray, w: jnp.ndarray,
+                      eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = (xf * xf).mean(axis=-1, keepdims=True)
+    y = xf * jnp.reciprocal(jnp.sqrt(var + eps)) * (1.0 + w.astype(jnp.float32))
+    return y.astype(x.dtype)

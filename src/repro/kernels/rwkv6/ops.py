@@ -1,0 +1,22 @@
+"""Jit'd public wrapper for the WKV6 kernel."""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import wkv6 as _wkv6_call
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def wkv6(r: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, w: jnp.ndarray,
+         u: jnp.ndarray, s0: Optional[jnp.ndarray] = None, *,
+         interpret: Optional[bool] = None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    interp = _on_cpu() if interpret is None else interpret
+    return _wkv6_call(r, k, v, w, u, s0, interpret=interp)

@@ -1,0 +1,44 @@
+"""Pure-jnp oracle for the RWKV-6 (Finch) WKV recurrence.
+
+Per head with key/value dim E, state S in R^{E×E}:
+
+    y_t   = (S_t + (u ⊙ k_t) v_t^T)^T r_t
+    S_t+1 = diag(w_t) S_t + k_t v_t^T
+
+with data-dependent decay w_t = exp(-exp(w̃_t)) and learned bonus u.
+All math f32; returns y in r.dtype plus the final state.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6_reference(r: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                   w: jnp.ndarray, u: jnp.ndarray,
+                   s0: Optional[jnp.ndarray] = None
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """r,k,v,w: (B, H, S, E); u: (H, E); s0: (B, H, E, E) or None.
+
+    ``w`` is the log-decay pre-activation w̃ (decay = exp(-exp(w̃))).
+    Returns (y: (B,H,S,E), sT: (B,H,E,E))."""
+    B, H, S, E = r.shape
+    rf, kf, vf = (t.astype(jnp.float32) for t in (r, k, v))
+    decay = jnp.exp(-jnp.exp(w.astype(jnp.float32)))
+    uf = u.astype(jnp.float32)
+    s = (jnp.zeros((B, H, E, E), jnp.float32) if s0 is None
+         else s0.astype(jnp.float32))
+
+    def step(s, t):
+        rt, kt, vt, dt = rf[:, :, t], kf[:, :, t], vf[:, :, t], decay[:, :, t]
+        kv = kt[..., :, None] * vt[..., None, :]            # (B,H,E,E)
+        # y_t[j] = sum_i r_t[i] * (S[i,j] + u[i] k_t[i] v_t[j])
+        y = jnp.einsum("bhi,bhij->bhj", rt, s + uf[None, :, :, None] * kv)
+        s = dt[..., :, None] * s + kv
+        return s, y
+
+    sT, ys = jax.lax.scan(step, s, jnp.arange(S))
+    y = jnp.moveaxis(ys, 0, 2)                              # (B,H,S,E)
+    return y.astype(r.dtype), sT

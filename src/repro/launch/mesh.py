@@ -1,0 +1,26 @@
+"""Mesh construction (function, not module constant — importing this module
+never touches jax device state)."""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """Production mesh: 16×16 = 256 chips per pod; 2 pods when multi_pod.
+
+    Axes: ("data", "model") single-pod; ("pod", "data", "model") multi-pod.
+    DP runs over ("pod", "data"), TP/EP over "model"."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(data: int = 1, model: int = 1) -> Mesh:
+    """Small mesh over whatever devices exist (tests / examples)."""
+    n = len(jax.devices())
+    if data * model > n:
+        raise ValueError(f"need {data * model} devices, have {n}")
+    devs = jax.devices()[: data * model]
+    import numpy as np
+    return Mesh(np.array(devs).reshape(data, model), ("data", "model"))

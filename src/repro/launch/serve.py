@@ -1,0 +1,87 @@
+"""Serving: prefill + decode steps and a batched generation driver."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ArchConfig
+from ..core.policy import CelloPlan
+from ..models import decode_step, forward, init_cache, set_mesh_context
+from . import shardings as shd
+
+PyTree = Any
+
+
+def make_prefill_fn(cfg: ArchConfig, plan: CelloPlan, *,
+                    unroll: bool = False):
+    def prefill(params, tokens, frames=None, img=None):
+        logits, _ = forward(params, cfg, plan, tokens, frames=frames,
+                            img=img, mode="prefill", unroll=unroll)
+        return logits
+    return prefill
+
+
+def make_decode_fn(cfg: ArchConfig, plan: CelloPlan, *,
+                   unroll: bool = False):
+    def serve_step(params, cache, tokens, pos):
+        return decode_step(params, cache, cfg, plan, tokens, pos,
+                           unroll=unroll)
+    return serve_step
+
+
+def jit_decode_step(cfg: ArchConfig, plan: CelloPlan, mesh: Mesh,
+                    batch: int, seq_len: int, *, unroll: bool = False):
+    """AOT-ready decode step with cache/params shardings bound."""
+    set_mesh_context(mesh)
+    _, p_shardings = shd.params_for(cfg, mesh)
+    _, c_shardings = shd.cache_for(cfg, mesh, batch, seq_len)
+    tok_sh = shd.batch_sharding(mesh, 2, batch)
+    logits_sh = NamedSharding(mesh, P(None, None, "model"))
+    return jax.jit(
+        make_decode_fn(cfg, plan, unroll=unroll),
+        in_shardings=(p_shardings, c_shardings, tok_sh,
+                      NamedSharding(mesh, P())),
+        out_shardings=(logits_sh, c_shardings),
+        donate_argnums=(1,),
+    )
+
+
+def greedy_generate(params, cfg: ArchConfig, plan: CelloPlan,
+                    prompt: jnp.ndarray, n_new: int,
+                    cache_len: Optional[int] = None) -> jnp.ndarray:
+    """Batched greedy decoding (CPU-scale driver for examples/tests).
+
+    prompt: (B, P) int32.  Returns (B, P + n_new).
+    """
+    B, Plen = prompt.shape
+    Z = cache_len or (Plen + n_new)
+    cache = init_cache(cfg, B, Z)
+    step = jax.jit(make_decode_fn(cfg, plan))
+    toks = prompt
+    # feed the prompt token-by-token (simple driver; a production server
+    # would run a batched prefill and hand the cache to decode)
+    logits = None
+    for t in range(Plen):
+        logits, cache = step(params, cache, toks[:, t:t + 1], jnp.int32(t))
+    for t in range(n_new):
+        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        toks = jnp.concatenate([toks, nxt], axis=1)
+        if t < n_new - 1:
+            logits, cache = step(params, cache, nxt,
+                                 jnp.int32(Plen + t))
+    return toks
+
+
+@dataclasses.dataclass
+class ServeStats:
+    tokens_generated: int
+    steps: int
+    wall_s: float
+
+    @property
+    def tok_per_s(self) -> float:
+        return self.tokens_generated / max(self.wall_s, 1e-9)

@@ -1,0 +1,12 @@
+"""Model zoo: config-driven assembly of the ten assigned architectures."""
+from .common import (COMPUTE_DTYPE, PARAM_DTYPE, constrain, get_mesh,
+                     named_sharding, pspec, rms_norm, set_mesh_context)
+from .transformer import (cache_pspecs, decode_step, forward, init_cache,
+                          init_params, param_pspecs, period_structure)
+
+__all__ = [
+    "COMPUTE_DTYPE", "PARAM_DTYPE", "constrain", "get_mesh",
+    "named_sharding", "pspec", "rms_norm", "set_mesh_context",
+    "cache_pspecs", "decode_step", "forward", "init_cache", "init_params",
+    "param_pspecs", "period_structure",
+]

@@ -1,0 +1,150 @@
+"""Attention for the model zoo: chunked-flash (JAX), Pallas, naive, decode.
+
+Three execution paths, selected by the CelloPlan:
+
+* ``chunked_flash`` — pure-JAX online-softmax attention, blocked along KV
+  with a `lax.scan`.  This is the *schedulable* form CELLO's fusion group
+  lowers to on any backend: the score tile is bounded (S × kv_block) so the
+  full score matrix never materialises.  Used by the dry-run so the HLO
+  cost analysis reflects the fused schedule.
+* ``pallas`` — the `repro.kernels.flash_attention` TPU kernel (explicit
+  VMEM residency; interpret-mode on CPU).  Same math, kernel-level control.
+* ``naive`` — materialises (B,H,S,T) scores.  This is the *seq-implicit
+  baseline* of the paper: op-by-op execution with all intermediates round-
+  tripping through the memory system.  Kept as a first-class config for the
+  §Perf before/after measurements.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .common import COMPUTE_DTYPE
+
+NEG_INF = -1e30
+
+
+def naive_attention(q, k, v, *, causal: bool, window: Optional[int] = None,
+                    q_offset: int = 0) -> jnp.ndarray:
+    """q: (B,S,H,E); k,v: (B,T,KVH,E) -> (B,S,H,E). Materialises scores."""
+    B, S, H, E = q.shape
+    T, KVH = k.shape[1], k.shape[2]
+    rep = H // KVH
+    scale = E ** -0.5
+    kr = jnp.repeat(k, rep, axis=2) if rep > 1 else k
+    vr = jnp.repeat(v, rep, axis=2) if rep > 1 else v
+    s = jnp.einsum("bshe,bthe->bhst", q.astype(jnp.float32),
+                   kr.astype(jnp.float32)) * scale
+    qi = jnp.arange(S)[:, None] + q_offset
+    kj = jnp.arange(T)[None, :]
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask &= kj <= qi
+    if window is not None:
+        mask &= kj > qi - window
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhst,bthe->bshe", p, vr.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def chunked_flash_attention(q, k, v, *, causal: bool,
+                            window: Optional[int] = None,
+                            kv_block: int = 512,
+                            q_offset: int = 0,
+                            unroll: bool = False) -> jnp.ndarray:
+    """Online-softmax attention blocked along KV (pure JAX lax.scan).
+
+    q: (B,S,H,E); k,v: (B,T,KVH,E) -> (B,S,H,E).  Peak intermediate is the
+    (B,H,S,kv_block) score tile — the CELLO fusion-group working set.
+    """
+    B, S, H, E = q.shape
+    T, KVH = k.shape[1], k.shape[2]
+    G = H // KVH                    # GQA group size — grouped einsums, no
+    scale = E ** -0.5               # repeated K/V ever materialises
+    kv_block = min(kv_block, T)
+    Tp = -(-T // kv_block) * kv_block
+    if Tp != T:
+        k = jnp.pad(k, ((0, 0), (0, Tp - T), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, Tp - T), (0, 0), (0, 0)))
+    nblk = Tp // kv_block
+
+    # q: (B, KVH, G, S, E); k/v blocks: (nblk, B, KVH, kv_block, E)
+    # operands stay in their storage dtype; contractions accumulate in f32
+    # (preferred_element_type) so no full-tensor f32 copies materialise.
+    qf = (q * jnp.asarray(scale, q.dtype)).reshape(B, S, KVH, G, E)
+    qf = qf.transpose(0, 2, 3, 1, 4)
+    kb = k.reshape(B, nblk, kv_block, KVH, E).transpose(1, 0, 3, 2, 4)
+    vb = v.reshape(B, nblk, kv_block, KVH, E).transpose(1, 0, 3, 2, 4)
+
+    qi = jnp.arange(S)[:, None] + q_offset                       # (S,1)
+
+    def step(carry, blk):
+        m, l, acc = carry
+        kblk, vblk, j = blk                                      # (B,KVH,kb,E)
+        s = jnp.einsum("bkgse,bkte->bkgst", qf, kblk,
+                       preferred_element_type=jnp.float32)
+        kj = j * kv_block + jnp.arange(kv_block)[None, :]        # (1,kb)
+        mask = kj < T
+        if causal:
+            mask = mask & (kj <= qi)
+        if window is not None:
+            mask = mask & (kj > qi - window)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(-1, keepdims=True))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new)
+        l_new = alpha * l + p.sum(-1, keepdims=True)
+        acc_new = acc * alpha + jnp.einsum(
+            "bkgst,bkte->bkgse", p.astype(vblk.dtype), vblk,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    init = (jnp.full((B, KVH, G, S, 1), NEG_INF, jnp.float32),
+            jnp.zeros((B, KVH, G, S, 1), jnp.float32),
+            jnp.zeros((B, KVH, G, S, E), jnp.float32))
+    (m, l, acc), _ = jax.lax.scan(step, init,
+                                  (kb, vb, jnp.arange(nblk)),
+                                  unroll=nblk if unroll else 1)
+    out = acc / jnp.maximum(l, 1e-30)                 # (B,KVH,G,S,E)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, S, H, E)
+    return out.astype(q.dtype)
+
+
+def pallas_attention(q, k, v, *, causal: bool, window: Optional[int] = None,
+                     q_block: int = 512, kv_block: int = 512) -> jnp.ndarray:
+    """(B,S,H,E)/(B,T,KVH,E) adapter over the Pallas kernel layout."""
+    from ..kernels.flash_attention import flash_attention
+    out = flash_attention(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                          v.transpose(0, 2, 1, 3), causal=causal,
+                          window=window, q_block=q_block, kv_block=kv_block)
+    return out.transpose(0, 2, 1, 3)
+
+
+def decode_attention(q, k_cache, v_cache, pos, *,
+                     window: Optional[int] = None) -> jnp.ndarray:
+    """One-token attention against a cache.
+
+    q: (B,1,H,E); caches: (B,Z,KVH,E); pos: () current position (the caches
+    hold valid entries at [0, pos]).  Window masking matches the ring-buffer
+    layout used by `transformer.Cache` (entries older than `window` are
+    overwritten, so any valid cache slot is in-window by construction).
+    """
+    B, _, H, E = q.shape
+    Z, KVH = k_cache.shape[1], k_cache.shape[2]
+    G = H // KVH
+    scale = E ** -0.5
+    qg = (q * jnp.asarray(scale, q.dtype)).reshape(B, KVH, G, E)
+    s = jnp.einsum("bkge,btke->bkgt", qg, k_cache,
+                   preferred_element_type=jnp.float32)        # (B,KVH,G,Z)
+    kj = jnp.arange(Z)[None, None, None, :]
+    valid = kj <= pos
+    if window is not None:
+        valid &= kj > pos - window
+    s = jnp.where(valid, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgt,btke->bkge", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, 1, H, E).astype(q.dtype)

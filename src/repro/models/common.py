@@ -1,0 +1,146 @@
+"""Shared model utilities: sharding context, dtype policy, RoPE, activations.
+
+Sharding uses *logical* axis names resolved through a process-wide context
+(`set_mesh_context`), so model code never hard-codes the physical mesh:
+
+    logical axis   single-pod          multi-pod
+    "batch"     -> ("data",)        -> ("pod", "data")
+    "model"     -> ("model",)       -> ("model",)
+    "seq"       -> used for sequence sharding in long-context cells
+
+Outside a mesh context every constraint is a no-op — smoke tests on one CPU
+device run the exact same model code.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_CTX = threading.local()
+
+COMPUTE_DTYPE = jnp.bfloat16
+PARAM_DTYPE = jnp.float32
+
+
+def set_mesh_context(mesh: Optional[Mesh]) -> None:
+    _CTX.mesh = mesh
+    if mesh is None:
+        _CTX.axes = {}
+        return
+    names = mesh.axis_names
+    _CTX.axes = {
+        "batch": tuple(n for n in ("pod", "data") if n in names) or None,
+        "model": "model" if "model" in names else None,
+        "data": tuple(n for n in ("pod", "data") if n in names) or None,
+    }
+
+
+def get_mesh() -> Optional[Mesh]:
+    return getattr(_CTX, "mesh", None)
+
+
+def resolve_axis(name):
+    if name is None:
+        return None
+    return getattr(_CTX, "axes", {}).get(name)
+
+
+def pspec(*logical) -> P:
+    return P(*(resolve_axis(a) for a in logical))
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        n = 1
+        for a in axis:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[axis]
+
+
+def constrain(x: jnp.ndarray, *logical) -> jnp.ndarray:
+    """with_sharding_constraint on logical axes; no-op without a mesh.
+
+    Axes whose mesh extent does not divide the corresponding array dim are
+    dropped (left to XLA's propagation) — e.g. recurrentgemma's 10 heads
+    cannot shard 16-way, so the head axis stays unconstrained there.
+    """
+    mesh = get_mesh()
+    if mesh is None:
+        return x
+    resolved = [resolve_axis(a) for a in logical]
+    resolved += [None] * (x.ndim - len(resolved))
+    safe = tuple(
+        a if a is not None and d % _axis_size(mesh, a) == 0 else None
+        for a, d in zip(resolved, x.shape))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*safe)))
+
+
+def named_sharding(*logical) -> Optional[NamedSharding]:
+    mesh = get_mesh()
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, pspec(*logical))
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float = 10_000.0) -> jnp.ndarray:
+    """x: (..., S, H, E) or (..., S, E); positions: (..., S)."""
+    E = x.shape[-1]
+    freqs = rope_freqs(E, theta)                              # (E/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs    # (..., S, E/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    extra = x.ndim - ang.ndim - 1
+    for _ in range(extra):
+        cos, sin = cos[..., None, :], sin[..., None, :]
+    x1, x2 = x[..., :E // 2], x[..., E // 2:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin,
+                           xf2 * cos + xf1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# activations
+# ---------------------------------------------------------------------------
+
+def activation_fn(kind: str):
+    if kind in ("swiglu", "silu"):
+        return jax.nn.silu
+    if kind in ("geglu", "gelu"):
+        return lambda x: jax.nn.gelu(x, approximate=True)
+    if kind == "relu2":
+        return lambda x: jnp.square(jax.nn.relu(x))
+    raise ValueError(kind)
+
+
+def is_gated(kind: str) -> bool:
+    return kind in ("swiglu", "geglu")
+
+
+def rms_norm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * (1.0 + w.astype(jnp.float32))
+            ).astype(x.dtype)
+
+
+def tag(x: jnp.ndarray, name: str) -> jnp.ndarray:
+    """checkpoint_name tag — the hook the CELLO remat policy grips."""
+    from jax.ad_checkpoint import checkpoint_name
+    return checkpoint_name(x, name)

@@ -1,0 +1,152 @@
+"""Top-k MoE FFN with GShard-style 2D grouped dispatch + expert parallelism.
+
+Tokens are viewed as (groups, tokens/group); groups align with the data-
+parallel shards and experts shard over the "model" axis, so the dispatch
+buffer (G, E, C, D) is sharded on *both* leading axes and every scatter/
+gather stays shard-local — the naive global-scatter formulation partitions
+catastrophically (the SPMD partitioner replicates the scatter; measured ~20×
+FLOP inflation at 256 chips, recorded in EXPERIMENTS.md §Perf).
+
+Capacity C = tokens_per_group × top_k × capacity_factor / E; overflow tokens
+are dropped (standard Switch/GShard semantics) and their combine weight is
+zero.
+
+CELLO view: router probabilities and the dispatch permutation are *data
+dependent* — their reuse is irregular, so the co-designer leaves them to the
+implicit buffer region; the expert weight tiles stream through the explicit
+region like any other matmul fusion group.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .common import (COMPUTE_DTYPE, activation_fn, constrain, get_mesh,
+                     is_gated, tag)
+
+
+def init_moe_params(key, d_model: int, d_ff: int, n_experts: int,
+                    activation: str, dtype) -> Dict[str, jnp.ndarray]:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    gated = is_gated(activation)
+    scale_in = d_model ** -0.5
+    scale_out = d_ff ** -0.5
+    p = {
+        "w_router": (jax.random.normal(k1, (d_model, n_experts)) *
+                     scale_in).astype(dtype),
+        "w_up": (jax.random.normal(k2, (n_experts, d_model, d_ff)) *
+                 scale_in).astype(dtype),
+        "w_down": (jax.random.normal(k3, (n_experts, d_ff, d_model)) *
+                   scale_out).astype(dtype),
+    }
+    if gated:
+        p["w_gate"] = (jax.random.normal(k4, (n_experts, d_model, d_ff)) *
+                       scale_in).astype(dtype)
+    return p
+
+
+def moe_pspecs(activation: str) -> Dict[str, tuple]:
+    """Logical PartitionSpec per param (expert axis on "model")."""
+    specs = {
+        "w_router": (None, None),
+        "w_up": ("model", None, None),
+        "w_down": ("model", None, None),
+    }
+    if is_gated(activation):
+        specs["w_gate"] = ("model", None, None)
+    return specs
+
+
+def _n_groups(T: int, groups: Optional[int]) -> int:
+    if groups is not None:
+        return groups
+    mesh = get_mesh()
+    if mesh is None:
+        return 1
+    g = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            g *= mesh.shape[a]
+    while g > 1 and T % g != 0:
+        g //= 2
+    return max(1, g)
+
+
+def apply_moe(params: Dict[str, jnp.ndarray], x: jnp.ndarray, *,
+              top_k: int, activation: str,
+              capacity_factor: float = 1.25,
+              groups: Optional[int] = None) -> jnp.ndarray:
+    """x: (tokens, d_model) -> (tokens, d_model)."""
+    T, D = x.shape
+    E = params["w_router"].shape[1]
+    act = activation_fn(activation)
+    gated = is_gated(activation)
+    G = _n_groups(T, groups)
+    Tg = T // G
+    C = max(top_k, int(Tg * top_k * capacity_factor) // E)
+
+    xg = constrain(x.reshape(G, Tg, D), "batch", None, None)
+
+    # --- routing (f32 numerics) ---------------------------------------
+    logits = jnp.einsum("gtd,de->gte", xg.astype(jnp.float32),
+                        params["w_router"].astype(jnp.float32))
+    logits = tag(logits, "router_logits")
+    gates, idx = jax.lax.top_k(jax.nn.softmax(logits, axis=-1), top_k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    # --- per-(group, expert) slot assignment ----------------------------
+    flat_e = idx.reshape(G, Tg * top_k)                       # (G, Tg*k)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)       # (G, Tg*k, E)
+    pos = (jnp.cumsum(onehot, axis=1) * onehot).sum(-1) - 1   # (G, Tg*k)
+    keep = (pos >= 0) & (pos < C)
+    slot = jnp.clip(pos, 0, C - 1)
+
+    # --- dispatch: per-group scatter (shard-local under SPMD) ----------
+    xk = jnp.repeat(xg, top_k, axis=1)                        # (G, Tg*k, D)
+    contrib = jnp.where(keep[..., None], xk.astype(COMPUTE_DTYPE), 0)
+
+    def scatter_group(fe, sl, xb):
+        return jnp.zeros((E, C, D), COMPUTE_DTYPE).at[fe, sl].add(xb)
+
+    buf = jax.vmap(scatter_group)(flat_e, slot, contrib)      # (G, E, C, D)
+    # two-step reshard: materialise the buffer token-local first, THEN move
+    # it to expert shards — the backward of the reshard then travels on the
+    # compact (G,E,C,D) buffer instead of all-reducing the full (G,Tg·k,D)
+    # dispatched activation over the model axis (§Perf iteration 2b).
+    buf = constrain(buf, "batch", None, None, None)
+    buf = constrain(buf, "batch", "model", None, None)
+
+    # --- expert FFN (experts sharded over "model") ----------------------
+    up = jnp.einsum("gecd,edf->gecf", buf,
+                    params["w_up"].astype(COMPUTE_DTYPE))
+    if gated:
+        g_ = jnp.einsum("gecd,edf->gecf", buf,
+                        params["w_gate"].astype(COMPUTE_DTYPE))
+        h = act(g_.astype(jnp.float32)).astype(COMPUTE_DTYPE) * up
+    else:
+        h = act(up.astype(jnp.float32)).astype(COMPUTE_DTYPE)
+    h = tag(h, "mlp_hidden")
+    out_buf = jnp.einsum("gecf,efd->gecd", h,
+                         params["w_down"].astype(COMPUTE_DTYPE))
+    out_buf = constrain(out_buf, "batch", "model", None, None)
+
+    # --- combine ---------------------------------------------------------
+    # Reshard the compact (G,E,C,D) buffer back to token owners BEFORE the
+    # gather.  Without this, XLA computes the gather against the expert-
+    # sharded buffer and all-reduces the full dispatched activation
+    # (G, Tg·k, D) in f32 over the model axis — measured 2 GiB/layer/dir on
+    # granite-moe train_4k (EXPERIMENTS.md §Perf iteration 2a).  The
+    # explicit reshard moves ~C/(Tg·k)·bf16 as a buffer collective instead.
+    out_buf = constrain(out_buf, "batch", None, None, None)
+
+    def gather_group(buf_g, fe, sl):
+        return buf_g[fe, sl]                                  # (Tg*k, D)
+
+    y = jax.vmap(gather_group)(out_buf, flat_e, slot)
+    y = jnp.where(keep[..., None], y, 0)
+    y = y.reshape(G, Tg, top_k, D) * gates[..., None].astype(COMPUTE_DTYPE)
+    out = y.sum(axis=2).reshape(T, D)
+    out = constrain(out, "batch", None)
+    return out.astype(x.dtype)

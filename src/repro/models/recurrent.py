@@ -1,0 +1,157 @@
+"""Recurrent blocks: RG-LRU (recurrentgemma) and RWKV-6 time-mix.
+
+Both expose (a) a full-sequence form used by train/prefill (lowered either
+through the Pallas kernel or the pure-JAX scan) and (b) a single-step form
+used by decode, carrying the recurrent state — CELLO's canonical
+explicit-buffer resident (it is read+written every token; the plan pins it).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import COMPUTE_DTYPE, constrain, tag
+from ..kernels.rglru.ref import RGLRU_C, rglru_reference
+from ..kernels.rwkv6.ref import wkv6_reference
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU block (Griffin recurrent block: proj → conv-less gated recurrence)
+# ---------------------------------------------------------------------------
+
+def init_rglru_params(key, d_model: int, dtype) -> Dict[str, jnp.ndarray]:
+    ks = jax.random.split(key, 5)
+    s = d_model ** -0.5
+    return {
+        "w_x": (jax.random.normal(ks[0], (d_model, d_model)) * s).astype(dtype),
+        "w_gate_r": (jax.random.normal(ks[1], (d_model, d_model)) * s).astype(dtype),
+        "w_gate_i": (jax.random.normal(ks[2], (d_model, d_model)) * s).astype(dtype),
+        "w_out": (jax.random.normal(ks[3], (d_model, d_model)) * s).astype(dtype),
+        "a_param": jnp.asarray(
+            jax.random.uniform(ks[4], (d_model,), minval=0.9, maxval=1.1),
+            jnp.float32),
+    }
+
+
+def rglru_pspecs() -> Dict[str, tuple]:
+    # channel dim sharded on "model": the recurrence is elementwise in d
+    return {"w_x": (None, "model"), "w_gate_r": (None, "model"),
+            "w_gate_i": (None, "model"), "w_out": ("model", None),
+            "a_param": ("model",)}
+
+
+def apply_rglru_seq(params, x: jnp.ndarray, h0=None, *,
+                    use_kernel: bool = False
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B,S,D) -> (y: (B,S,D), hT: (B,D))."""
+    xc = x.astype(COMPUTE_DTYPE)
+    xb = xc @ params["w_x"].astype(COMPUTE_DTYPE)
+    gr = xc @ params["w_gate_r"].astype(COMPUTE_DTYPE)
+    gi = xc @ params["w_gate_i"].astype(COMPUTE_DTYPE)
+    xb = constrain(xb, "batch", None, "model")
+    if use_kernel:
+        from ..kernels.rglru import rglru as rglru_kernel
+        h, hT = rglru_kernel(xb, gr, gi, params["a_param"], h0)
+    else:
+        h, hT = rglru_reference(xb, gr, gi, params["a_param"], h0)
+    h = tag(h, "rnn_state")
+    y = h.astype(COMPUTE_DTYPE) @ params["w_out"].astype(COMPUTE_DTYPE)
+    return y.astype(x.dtype), hT
+
+
+def apply_rglru_step(params, x: jnp.ndarray, h: jnp.ndarray
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B,1,D), h: (B,D) -> (y: (B,1,D), h')."""
+    xc = x[:, 0].astype(COMPUTE_DTYPE)
+    xb = (xc @ params["w_x"].astype(COMPUTE_DTYPE)).astype(jnp.float32)
+    r = jax.nn.sigmoid((xc @ params["w_gate_r"].astype(COMPUTE_DTYPE))
+                       .astype(jnp.float32))
+    i = jax.nn.sigmoid((xc @ params["w_gate_i"].astype(COMPUTE_DTYPE))
+                       .astype(jnp.float32))
+    a = jnp.exp(-RGLRU_C * jax.nn.softplus(params["a_param"]) * r)
+    beta = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12))
+    h_new = a * h + beta * (i * xb)
+    y = (h_new.astype(COMPUTE_DTYPE) @ params["w_out"].astype(COMPUTE_DTYPE))
+    return y[:, None].astype(x.dtype), h_new
+
+
+# ---------------------------------------------------------------------------
+# RWKV-6 time-mix block
+# ---------------------------------------------------------------------------
+
+def init_rwkv_params(key, d_model: int, n_heads: int, dtype
+                     ) -> Dict[str, jnp.ndarray]:
+    ks = jax.random.split(key, 7)
+    s = d_model ** -0.5
+    E = d_model // n_heads
+    return {
+        "w_r": (jax.random.normal(ks[0], (d_model, d_model)) * s).astype(dtype),
+        "w_k": (jax.random.normal(ks[1], (d_model, d_model)) * s).astype(dtype),
+        "w_v": (jax.random.normal(ks[2], (d_model, d_model)) * s).astype(dtype),
+        "w_w": (jax.random.normal(ks[3], (d_model, d_model)) * s * 0.1
+                ).astype(dtype),
+        "w_o": (jax.random.normal(ks[4], (d_model, d_model)) * s).astype(dtype),
+        "u": (jax.random.normal(ks[5], (n_heads, E)) * 0.1).astype(jnp.float32),
+        "w_bias": (jax.random.normal(ks[6], (d_model,)) * 0.1 - 0.5
+                   ).astype(jnp.float32),
+    }
+
+
+def rwkv_pspecs() -> Dict[str, tuple]:
+    # head dim sharded on "model" (heads are independent in the recurrence)
+    return {"w_r": (None, "model"), "w_k": (None, "model"),
+            "w_v": (None, "model"), "w_w": (None, "model"),
+            "w_o": ("model", None), "u": ("model", None),
+            "w_bias": ("model",)}
+
+
+def _split_heads(t: jnp.ndarray, H: int) -> jnp.ndarray:
+    B, S, D = t.shape
+    return t.reshape(B, S, H, D // H).transpose(0, 2, 1, 3)   # (B,H,S,E)
+
+
+def apply_rwkv_seq(params, x: jnp.ndarray, n_heads: int, s0=None, *,
+                   use_kernel: bool = False
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B,S,D) -> (y: (B,S,D), sT: (B,H,E,E))."""
+    B, S, D = x.shape
+    xc = x.astype(COMPUTE_DTYPE)
+    r = _split_heads(xc @ params["w_r"].astype(COMPUTE_DTYPE), n_heads)
+    k = _split_heads(xc @ params["w_k"].astype(COMPUTE_DTYPE), n_heads)
+    v = _split_heads(xc @ params["w_v"].astype(COMPUTE_DTYPE), n_heads)
+    w = _split_heads((xc @ params["w_w"].astype(COMPUTE_DTYPE))
+                     .astype(jnp.float32)
+                     + params["w_bias"].astype(jnp.float32), n_heads)
+    if use_kernel:
+        from ..kernels.rwkv6 import wkv6 as wkv6_kernel
+        y, sT = wkv6_kernel(r, k, v, w, params["u"], s0)
+    else:
+        y, sT = wkv6_reference(r, k, v, w, params["u"], s0)
+    y = tag(y, "rnn_state")
+    y = y.transpose(0, 2, 1, 3).reshape(B, S, D)
+    out = y.astype(COMPUTE_DTYPE) @ params["w_o"].astype(COMPUTE_DTYPE)
+    return out.astype(x.dtype), sT
+
+
+def apply_rwkv_step(params, x: jnp.ndarray, s: jnp.ndarray, n_heads: int
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B,1,D), s: (B,H,E,E) -> (y: (B,1,D), s')."""
+    B, _, D = x.shape
+    E = D // n_heads
+    xc = x[:, 0].astype(COMPUTE_DTYPE)
+    r = (xc @ params["w_r"].astype(COMPUTE_DTYPE)).reshape(B, n_heads, E)
+    k = (xc @ params["w_k"].astype(COMPUTE_DTYPE)).reshape(B, n_heads, E)
+    v = (xc @ params["w_v"].astype(COMPUTE_DTYPE)).reshape(B, n_heads, E)
+    wt = ((xc @ params["w_w"].astype(COMPUTE_DTYPE)).astype(jnp.float32)
+          + params["w_bias"]).reshape(B, n_heads, E)
+    rf, kf, vf = (t.astype(jnp.float32) for t in (r, k, v))
+    decay = jnp.exp(-jnp.exp(wt))
+    kv = kf[..., :, None] * vf[..., None, :]                  # (B,H,E,E)
+    y = jnp.einsum("bhi,bhij->bhj", rf,
+                   s + params["u"][None, :, :, None] * kv)
+    s_new = decay[..., :, None] * s + kv
+    y = y.reshape(B, 1, D).astype(COMPUTE_DTYPE)
+    out = y @ params["w_o"].astype(COMPUTE_DTYPE)
+    return out.astype(x.dtype), s_new

@@ -1,0 +1,545 @@
+"""Config-driven model assembly for all ten assigned architectures.
+
+Layers execute under a `lax.scan` over *periods* (one period = the repeating
+kind pattern, e.g. ``[rglru, rglru, attn]`` for recurrentgemma or
+``[attn]*4 + [xattn]`` for llama-vision); a remainder shorter than one
+period is unrolled.  Scan keeps the HLO size O(1) in depth — essential for
+the 80-compile dry-run matrix.
+
+Execution paths (attention/MLP) are selected by the CelloPlan — the lowered
+form of the schedule/buffer co-design (see core.policy).  Remat wrapping
+happens in launch.train using the plan's checkpoint policy; the models tag
+intermediates with `checkpoint_name` so the policy can grip them.
+
+Modes:
+  forward(..., mode="train"|"prefill") — full-sequence; prefill also
+    returns the filled per-layer cache/state.
+  decode_step(...) — one token against the cache (ring-buffered when the
+    architecture uses a bounded attention window).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..core.policy import CelloPlan
+from .attention import (chunked_flash_attention, decode_attention,
+                        naive_attention, pallas_attention)
+from .common import (COMPUTE_DTYPE, PARAM_DTYPE, activation_fn, apply_rope,
+                     constrain, is_gated, rms_norm, tag)
+from .moe import apply_moe, init_moe_params, moe_pspecs
+from .recurrent import (apply_rglru_seq, apply_rglru_step, apply_rwkv_seq,
+                        apply_rwkv_step, init_rglru_params, init_rwkv_params,
+                        rglru_pspecs, rwkv_pspecs)
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# period decomposition
+# ---------------------------------------------------------------------------
+
+def period_structure(cfg: ArchConfig) -> Tuple[List[str], int, List[str]]:
+    """(period_kinds, n_periods, remainder_kinds)."""
+    kinds = cfg.layer_kinds()
+    if cfg.hybrid_period:
+        plen = cfg.hybrid_period
+    elif cfg.cross_attn_every:
+        plen = cfg.cross_attn_every
+    else:
+        plen = 1
+    n_periods = len(kinds) // plen
+    return kinds[:plen], n_periods, kinds[n_periods * plen:]
+
+
+# ---------------------------------------------------------------------------
+# parameter init + partition specs
+# ---------------------------------------------------------------------------
+
+def _dense(key, shape, scale, dtype):
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+def init_block_params(key, cfg: ArchConfig, kind: str,
+                      dtype=PARAM_DTYPE) -> Dict[str, PyTree]:
+    D, H, KVH, E = (cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                    cfg.resolved_head_dim)
+    keys = jax.random.split(key, 8)
+    p: Dict[str, PyTree] = {
+        "ln1": jnp.zeros((D,), dtype),
+        "ln2": jnp.zeros((D,), dtype),
+    }
+    s = D ** -0.5
+    if kind in ("attn", "xattn"):
+        p["attn"] = {
+            "wq": _dense(keys[0], (D, H * E), s, dtype),
+            "wk": _dense(keys[1], (D, KVH * E), s, dtype),
+            "wv": _dense(keys[2], (D, KVH * E), s, dtype),
+            "wo": _dense(keys[3], (H * E, D), (H * E) ** -0.5, dtype),
+        }
+    elif kind == "rglru":
+        p["rglru"] = init_rglru_params(keys[0], D, dtype)
+    elif kind == "rwkv":
+        p["rwkv"] = init_rwkv_params(keys[0], D, cfg.n_heads, dtype)
+    else:
+        raise ValueError(kind)
+
+    if cfg.is_moe:
+        p["moe"] = init_moe_params(keys[4], D, cfg.d_ff, cfg.n_experts,
+                                   cfg.activation, dtype)
+    else:
+        F = cfg.d_ff
+        p["mlp"] = {"w_up": _dense(keys[5], (D, F), s, dtype),
+                    "w_down": _dense(keys[6], (F, D), F ** -0.5, dtype)}
+        if is_gated(cfg.activation):
+            p["mlp"]["w_gate"] = _dense(keys[7], (D, F), s, dtype)
+    return p
+
+
+def block_pspecs(cfg: ArchConfig, kind: str) -> Dict[str, PyTree]:
+    p: Dict[str, PyTree] = {"ln1": (None,), "ln2": (None,)}
+    if kind in ("attn", "xattn"):
+        p["attn"] = {"wq": (None, "model"), "wk": (None, "model"),
+                     "wv": (None, "model"), "wo": ("model", None)}
+    elif kind == "rglru":
+        p["rglru"] = rglru_pspecs()
+    elif kind == "rwkv":
+        p["rwkv"] = rwkv_pspecs()
+    if cfg.is_moe:
+        p["moe"] = moe_pspecs(cfg.activation)
+    else:
+        p["mlp"] = {"w_up": (None, "model"), "w_down": ("model", None)}
+        if is_gated(cfg.activation):
+            p["mlp"]["w_gate"] = (None, "model")
+    return p
+
+
+def init_params(key, cfg: ArchConfig, dtype=PARAM_DTYPE) -> Dict[str, PyTree]:
+    period, n_periods, rest = period_structure(cfg)
+    k_embed, k_head, k_layers = jax.random.split(key, 3)
+    params: Dict[str, PyTree] = {
+        "embed": _dense(k_embed, (cfg.padded_vocab, cfg.d_model),
+                        cfg.d_model ** -0.5, dtype),
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+        "lm_head": _dense(k_head, (cfg.d_model, cfg.padded_vocab),
+                          cfg.d_model ** -0.5, dtype),
+    }
+    lkeys = jax.random.split(k_layers, cfg.n_layers)
+    periods: Dict[str, PyTree] = {}
+    for s, kind in enumerate(period):
+        stack = [init_block_params(lkeys[p_ * len(period) + s], cfg, kind,
+                                   dtype)
+                 for p_ in range(n_periods)]
+        periods[f"slot{s}"] = jax.tree.map(lambda *xs: jnp.stack(xs), *stack)
+    params["periods"] = periods
+    params["rest"] = [
+        init_block_params(lkeys[n_periods * len(period) + i], cfg, kind,
+                          dtype)
+        for i, kind in enumerate(rest)]
+    return params
+
+
+def param_pspecs(cfg: ArchConfig) -> Dict[str, PyTree]:
+    """Logical PartitionSpec tree matching init_params structure."""
+    period, n_periods, rest = period_structure(cfg)
+
+    def lift(tree):   # stacked period params get a leading (replicated) axis
+        return jax.tree.map(lambda spec: (None,) + tuple(spec), tree,
+                            is_leaf=lambda x: isinstance(x, tuple))
+
+    specs: Dict[str, PyTree] = {
+        "embed": ("model", None),
+        "final_norm": (None,),
+        "lm_head": (None, "model"),
+        "periods": {f"slot{s}": lift(block_pspecs(cfg, kind))
+                    for s, kind in enumerate(period)},
+        "rest": [block_pspecs(cfg, kind) for kind in rest],
+    }
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# block application — full sequence
+# ---------------------------------------------------------------------------
+
+def _attend(p_attn, x, *, cfg: ArchConfig, plan: CelloPlan, causal: bool,
+            img: Optional[jnp.ndarray], rope: bool,
+            positions: Optional[jnp.ndarray],
+            unroll: bool = False) -> Tuple[jnp.ndarray, Tuple]:
+    B, S, D = x.shape
+    H, KVH, E = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    xc = x.astype(COMPUTE_DTYPE)
+    q = (xc @ p_attn["wq"].astype(COMPUTE_DTYPE)).reshape(B, S, H, E)
+    src = xc if img is None else img.astype(COMPUTE_DTYPE)
+    T = src.shape[1]
+    k = (src @ p_attn["wk"].astype(COMPUTE_DTYPE)).reshape(B, T, KVH, E)
+    v = (src @ p_attn["wv"].astype(COMPUTE_DTYPE)).reshape(B, T, KVH, E)
+    if rope and img is None:
+        pos = positions if positions is not None else jnp.arange(S)
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+    q = tag(constrain(q, "batch", None, "model", None), "q_out")
+    k = constrain(k, "batch", None, "model" if KVH > 1 else None, None)
+    v = constrain(v, "batch", None, "model" if KVH > 1 else None, None)
+    window = cfg.window if img is None else None
+    if plan.use_flash_attention:
+        if jax.default_backend() == "tpu":
+            ctx = pallas_attention(q, k, v, causal=causal, window=window,
+                                   q_block=plan.q_block,
+                                   kv_block=plan.kv_block)
+        else:
+            ctx = chunked_flash_attention(q, k, v, causal=causal,
+                                          window=window,
+                                          kv_block=plan.kv_block,
+                                          unroll=unroll)
+    else:
+        ctx = naive_attention(q, k, v, causal=causal, window=window)
+    out = (ctx.reshape(B, S, H * E).astype(COMPUTE_DTYPE)
+           @ p_attn["wo"].astype(COMPUTE_DTYPE))
+    return tag(out, "attn_out").astype(x.dtype), (k, v)
+
+
+def _mlp(p, x, cfg: ArchConfig, plan: CelloPlan) -> jnp.ndarray:
+    B, S, D = x.shape
+    flat = x.reshape(B * S, D)
+    if cfg.is_moe:
+        out = apply_moe(p["moe"], flat, top_k=cfg.top_k,
+                        activation=cfg.activation,
+                        capacity_factor=plan.moe_capacity_factor)
+        return tag(out.reshape(B, S, D), "mlp_out")
+    m = p["mlp"]
+    gated = is_gated(cfg.activation)
+    act_name = {"swiglu": "silu", "geglu": "gelu", "relu2": "relu2",
+                "gelu": "gelu"}[cfg.activation]
+    if plan.use_fused_mlp and jax.default_backend() == "tpu":
+        from ..kernels.fused_mlp import fused_mlp
+        out = fused_mlp(flat.astype(COMPUTE_DTYPE),
+                        m.get("w_gate"), m["w_up"], m["w_down"],
+                        activation=act_name, m_block=plan.mlp_block_m,
+                        f_block=plan.mlp_block_f)
+    else:
+        xc = flat.astype(COMPUTE_DTYPE)
+        act = activation_fn(cfg.activation)
+        up = xc @ m["w_up"].astype(COMPUTE_DTYPE)
+        up = constrain(up, "batch", "model")
+        if gated:
+            g = xc @ m["w_gate"].astype(COMPUTE_DTYPE)
+            g = constrain(g, "batch", "model")
+            h = act(g.astype(jnp.float32)).astype(COMPUTE_DTYPE) * up
+        else:
+            h = act(up.astype(jnp.float32)).astype(COMPUTE_DTYPE)
+        h = tag(h, "mlp_hidden")
+        out = h @ m["w_down"].astype(COMPUTE_DTYPE)
+    return tag(out.reshape(B, S, D).astype(x.dtype), "mlp_out")
+
+
+def apply_block(p, x, kind: str, *, cfg: ArchConfig, plan: CelloPlan,
+                img: Optional[jnp.ndarray] = None,
+                positions: Optional[jnp.ndarray] = None,
+                unroll: bool = False) -> Tuple[jnp.ndarray, PyTree]:
+    """Full-sequence block. Returns (x_out, cache_entry)."""
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if kind in ("attn", "xattn"):
+        causal = (not cfg.encoder_only) and kind == "attn"
+        y, kv = _attend(p["attn"], h, cfg=cfg, plan=plan, causal=causal,
+                        img=img if kind == "xattn" else None,
+                        rope=not cfg.encoder_only, positions=positions,
+                        unroll=unroll)
+        cache_entry = kv
+    elif kind == "rglru":
+        y, hT = apply_rglru_seq(p["rglru"], h)
+        cache_entry = hT
+    elif kind == "rwkv":
+        y, sT = apply_rwkv_seq(p["rwkv"], h, cfg.n_heads)
+        cache_entry = sT
+    else:
+        raise ValueError(kind)
+    x = tag(x + y, "x_mid")
+    h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+    x = x + _mlp(p, h2, cfg, plan)
+    x = constrain(x, "batch", None, None)
+    return x, cache_entry
+
+
+# ---------------------------------------------------------------------------
+# full forward
+# ---------------------------------------------------------------------------
+
+def embed_tokens(params, cfg: ArchConfig, tokens: jnp.ndarray) -> jnp.ndarray:
+    emb = params["embed"].astype(COMPUTE_DTYPE)
+    x = emb[tokens] * math.sqrt(cfg.d_model)
+    return constrain(x, "batch", None, None)
+
+
+def forward(params, cfg: ArchConfig, plan: CelloPlan, tokens: jnp.ndarray, *,
+            frames: Optional[jnp.ndarray] = None,
+            img: Optional[jnp.ndarray] = None,
+            mode: str = "train",
+            remat_policy=None,
+            unroll: bool = False) -> Tuple[jnp.ndarray, PyTree]:
+    """Full-sequence forward.
+
+    tokens: (B, S) int32 (ignored for audio when ``frames`` given);
+    frames:  (B, S, D) stubbed frame embeddings (audio);
+    img:     (B, V, D) stubbed patch embeddings (vlm).
+    unroll:  replace the period scan with a Python loop — used by the
+      dry-run so XLA cost_analysis counts every layer (a `while` body is
+      costed once, not ×trip-count).
+    Returns (logits (B,S,vocab), caches pytree).
+    """
+    period, n_periods, rest = period_structure(cfg)
+    if frames is not None:
+        x = constrain(frames.astype(COMPUTE_DTYPE), "batch", None, None)
+    else:
+        x = embed_tokens(params, cfg, tokens)
+    B, S, _ = x.shape
+    positions = jnp.arange(S)
+
+    def period_body(x, p_period):
+        caches = []
+        for s, kind in enumerate(period):
+            x, ce = apply_block(p_period[f"slot{s}"], x, kind, cfg=cfg,
+                                plan=plan, img=img, positions=positions,
+                                unroll=unroll)
+            caches.append(ce)
+        return x, tuple(caches)
+
+    body = period_body
+    if remat_policy is not None:
+        body = jax.checkpoint(period_body, policy=remat_policy,
+                              prevent_cse=False)
+
+    if n_periods > 0:
+        if isinstance(params["periods"], (list, tuple)):
+            # split form (dry-run): one leaf per layer — avoids stacked-leaf
+            # slicing that XLA cost-analysis charges at full-tensor cost
+            caches_list = []
+            for p_i in params["periods"]:
+                x, ce = body(x, p_i)
+                caches_list.append(ce)
+            period_caches = tuple(caches_list)
+        elif unroll:
+            caches_list = []
+            for i in range(n_periods):
+                p_i = jax.tree.map(lambda a: a[i], params["periods"])
+                x, ce = body(x, p_i)
+                caches_list.append(ce)
+            period_caches = tuple(caches_list)
+        else:
+            x, period_caches = jax.lax.scan(body, x, params["periods"])
+    else:
+        period_caches = ()
+    rest_caches = []
+    for p_layer, kind in zip(params["rest"], rest):
+        x, ce = apply_block(p_layer, x, kind, cfg=cfg, plan=plan, img=img,
+                            positions=positions, unroll=unroll)
+        rest_caches.append(ce)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = (x.astype(COMPUTE_DTYPE)
+              @ params["lm_head"].astype(COMPUTE_DTYPE)).astype(jnp.float32)
+    logits = constrain(logits, "batch", None, "model")
+    caches = {"periods": period_caches, "rest": tuple(rest_caches)}
+    return logits, caches
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class CacheSpec:
+    """Shapes for the decode cache of one arch at one shape cell."""
+    cfg: ArchConfig
+    seq_len: int
+
+    def z_for(self, kind: str) -> int:
+        if kind in ("attn", "xattn"):
+            return (min(self.cfg.window, self.seq_len) if self.cfg.window
+                    else self.seq_len)
+        return 0
+
+
+def init_cache(cfg: ArchConfig, batch: int, seq_len: int) -> PyTree:
+    """Zero cache pytree matching the period structure."""
+    period, n_periods, rest = period_structure(cfg)
+    spec = CacheSpec(cfg, seq_len)
+    E = cfg.resolved_head_dim
+
+    def entry(kind: str):
+        if kind in ("attn", "xattn"):
+            Z = spec.z_for(kind)
+            return {
+                "k": jnp.zeros((batch, Z, cfg.n_kv_heads, E), COMPUTE_DTYPE),
+                "v": jnp.zeros((batch, Z, cfg.n_kv_heads, E), COMPUTE_DTYPE),
+                "pos_idx": jnp.full((Z,), -1, jnp.int32),
+            }
+        if kind == "rglru":
+            return {"h": jnp.zeros((batch, cfg.d_model), jnp.float32)}
+        if kind == "rwkv":
+            return {"s": jnp.zeros((batch, cfg.n_heads, E, E), jnp.float32)}
+        raise ValueError(kind)
+
+    def stacked_entry(kind: str):
+        return jax.tree.map(
+            lambda z: jnp.broadcast_to(z, (n_periods,) + z.shape), entry(kind))
+
+    return {
+        "periods": {f"slot{s}": stacked_entry(kind)
+                    for s, kind in enumerate(period)},
+        "rest": [entry(kind) for kind in rest],
+    }
+
+
+def cache_pspecs(cfg: ArchConfig, batch: int, *, seq_len: int = 0,
+                 tp: int = 16) -> PyTree:
+    """Logical pspecs for the cache.
+
+    Batch shards on "batch" when it divides; the TP axis goes on the
+    kv-head dim when kv_heads % tp == 0, otherwise on the cache-length dim
+    (sequence-sharded KV — the standard long-context fallback; softmax
+    normalisation over the sharded axis lowers to psums)."""
+    period, n_periods, rest = period_structure(cfg)
+    batch_axis = "batch" if batch > 1 else None
+    spec_obj = CacheSpec(cfg, seq_len or cfg.window or 1)
+
+    def kv_spec(kind: str):
+        Z = spec_obj.z_for(kind) if seq_len else 0
+        if cfg.n_kv_heads % tp == 0:
+            return (batch_axis, None, "model", None)
+        if Z and Z % tp == 0:
+            return (batch_axis, "model", None, None)
+        return (batch_axis, None, None, None)
+
+    def entry(kind: str):
+        if kind in ("attn", "xattn"):
+            return {"k": kv_spec(kind), "v": kv_spec(kind),
+                    "pos_idx": (None,)}
+        if kind == "rglru":
+            return {"h": (batch_axis, "model")}
+        if kind == "rwkv":
+            return {"s": (batch_axis, "model", None, None)}
+        raise ValueError(kind)
+
+    def lifted(kind: str):
+        return jax.tree.map(lambda sp: (None,) + tuple(sp), entry(kind),
+                            is_leaf=lambda x: isinstance(x, tuple))
+
+    return {"periods": {f"slot{s}": lifted(kind)
+                        for s, kind in enumerate(period)},
+            "rest": [entry(kind) for kind in rest]}
+
+
+def _decode_block(p, cache, x, kind: str, pos, *, cfg: ArchConfig,
+                  plan: CelloPlan) -> Tuple[jnp.ndarray, PyTree]:
+    B = x.shape[0]
+    H, KVH, E = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if kind in ("attn", "xattn"):
+        xc = h.astype(COMPUTE_DTYPE)
+        q = (xc @ p["attn"]["wq"].astype(COMPUTE_DTYPE)).reshape(B, 1, H, E)
+        k_new = (xc @ p["attn"]["wk"].astype(COMPUTE_DTYPE)
+                 ).reshape(B, 1, KVH, E)
+        v_new = (xc @ p["attn"]["wv"].astype(COMPUTE_DTYPE)
+                 ).reshape(B, 1, KVH, E)
+        q = apply_rope(q, pos[None], cfg.rope_theta)
+        k_new = apply_rope(k_new, pos[None], cfg.rope_theta)
+        Z = cache["k"].shape[1]
+        slot = pos % Z
+        if plan.cache_select_update:
+            # shard-local write: broadcast-select keeps every shard's update
+            # local even when Z is the sharded dim (no SPMD full-remat)
+            hit = (jnp.arange(Z) == slot)[None, :, None, None]
+            k_c = jnp.where(hit, k_new.astype(cache["k"].dtype), cache["k"])
+            v_c = jnp.where(hit, v_new.astype(cache["v"].dtype), cache["v"])
+            pos_idx = jnp.where(jnp.arange(Z) == slot,
+                                pos.astype(jnp.int32), cache["pos_idx"])
+        else:
+            k_c = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new,
+                                                      slot, 1)
+            v_c = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new,
+                                                      slot, 1)
+            pos_idx = jax.lax.dynamic_update_slice_in_dim(
+                cache["pos_idx"], pos[None].astype(jnp.int32), slot, 0)
+        # mask by true positions (ring-buffer safe); grouped GQA einsums —
+        # the repeated K/V never materialises (no reshard of the cache)
+        valid = (pos_idx >= 0) & (pos_idx <= pos)
+        if cfg.window:
+            valid &= pos_idx > pos - cfg.window
+        G = H // KVH
+        qg = (q * jnp.asarray(E ** -0.5, q.dtype)).reshape(B, KVH, G, E)
+        s = jnp.einsum("bkge,btke->bkgt", qg, k_c,
+                       preferred_element_type=jnp.float32)
+        s = jnp.where(valid[None, None, None, :], s, -1e30)
+        pr = jax.nn.softmax(s, axis=-1)
+        ctx = jnp.einsum("bkgt,btke->bkge", pr.astype(v_c.dtype), v_c,
+                         preferred_element_type=jnp.float32)
+        y = (ctx.reshape(B, 1, H * E).astype(COMPUTE_DTYPE)
+             @ p["attn"]["wo"].astype(COMPUTE_DTYPE)).astype(x.dtype)
+        new_cache = {"k": k_c, "v": v_c, "pos_idx": pos_idx}
+    elif kind == "rglru":
+        y, h_new = apply_rglru_step(p["rglru"], h, cache["h"])
+        new_cache = {"h": h_new}
+    elif kind == "rwkv":
+        y, s_new = apply_rwkv_step(p["rwkv"], h, cache["s"], cfg.n_heads)
+        new_cache = {"s": s_new}
+    else:
+        raise ValueError(kind)
+    x = x + y
+    h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+    x = x + _mlp(p, h2, cfg, plan)
+    return x, new_cache
+
+
+def decode_step(params, cache, cfg: ArchConfig, plan: CelloPlan,
+                tokens: jnp.ndarray, pos: jnp.ndarray, *,
+                unroll: bool = False) -> Tuple[jnp.ndarray, PyTree]:
+    """One decode step. tokens: (B, 1) int32; pos: () int32 current position.
+    Returns (logits (B, 1, vocab), new_cache)."""
+    period, n_periods, rest = period_structure(cfg)
+    x = embed_tokens(params, cfg, tokens)
+
+    def period_body(x, slices):
+        p_period, c_period = slices
+        new_c = {}
+        for s, kind in enumerate(period):
+            x, nc = _decode_block(p_period[f"slot{s}"], c_period[f"slot{s}"],
+                                  x, kind, pos, cfg=cfg, plan=plan)
+            new_c[f"slot{s}"] = nc
+        return x, new_c
+
+    if n_periods > 0:
+        if isinstance(params["periods"], (list, tuple)):
+            outs = []
+            for p_i, c_i in zip(params["periods"], cache["periods"]):
+                x, nc = period_body(x, (p_i, c_i))
+                outs.append(nc)
+            new_periods = outs                  # stays split
+        elif unroll:
+            outs = []
+            for i in range(n_periods):
+                sl = jax.tree.map(lambda a: a[i],
+                                  (params["periods"], cache["periods"]))
+                x, nc = period_body(x, sl)
+                outs.append(nc)
+            new_periods = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+        else:
+            x, new_periods = jax.lax.scan(
+                period_body, x, (params["periods"], cache["periods"]))
+    else:
+        new_periods = cache["periods"]
+    new_rest = []
+    for p_layer, c_layer, kind in zip(params["rest"], cache["rest"], rest):
+        x, nc = _decode_block(p_layer, c_layer, x, kind, pos, cfg=cfg,
+                              plan=plan)
+        new_rest.append(nc)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = (x.astype(COMPUTE_DTYPE)
+              @ params["lm_head"].astype(COMPUTE_DTYPE)).astype(jnp.float32)
+    return logits, {"periods": new_periods, "rest": new_rest}

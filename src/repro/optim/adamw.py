@@ -1,0 +1,118 @@
+"""AdamW with ZeRO-1 optimizer-state sharding.
+
+Plain-pytree implementation (no optax dependency): f32 moments, decoupled
+weight decay, global-norm clipping, cosine schedule with linear warmup.
+
+ZeRO-1: the (m, v) moments are additionally sharded along the *data* mesh
+axis — `zero1_pspecs` rewrites each parameter's PartitionSpec by placing the
+data axis on the first dimension that is (a) currently unsharded and (b)
+divisible by the data-axis size.  Parameters and gradients keep their
+original (TP) sharding; only optimizer state pays the extra partition, which
+is what ZeRO stage 1 means.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+def cosine_lr(cfg: AdamWConfig, step: jnp.ndarray) -> jnp.ndarray:
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    frac = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * cos
+    return cfg.lr * warm * frac
+
+
+def adamw_init(params: PyTree) -> Dict[str, PyTree]:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree: PyTree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adamw_update(cfg: AdamWConfig, grads: PyTree, state: Dict[str, PyTree],
+                 params: PyTree) -> Tuple[PyTree, Dict[str, PyTree], Dict]:
+    count = state["count"] + 1
+    lr = cosine_lr(cfg, count.astype(jnp.float32))
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-12))
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.beta1 * m + (1 - cfg.beta1) * g
+        v = cfg.beta2 * v + (1 - cfg.beta2) * g * g
+        mh = m / (1 - cfg.beta1 ** count.astype(jnp.float32))
+        vh = v / (1 - cfg.beta2 ** count.astype(jnp.float32))
+        step_ = mh / (jnp.sqrt(vh) + cfg.eps)
+        p32 = p.astype(jnp.float32)
+        p_new = p32 - lr * (step_ + cfg.weight_decay * p32)
+        return p_new.astype(p.dtype), m, v
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    flat_p = treedef.flatten_up_to(params)
+    new_p, new_m, new_v = [], [], []
+    for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p):
+        pn, mn, vn = upd(g, m, v, p)
+        new_p.append(pn)
+        new_m.append(mn)
+        new_v.append(vn)
+    params = jax.tree.unflatten(treedef, new_p)
+    state = {"m": jax.tree.unflatten(treedef, new_m),
+             "v": jax.tree.unflatten(treedef, new_v),
+             "count": count}
+    return params, state, {"lr": lr, "grad_norm": gnorm}
+
+
+# ---------------------------------------------------------------------------
+# ZeRO-1 sharding of optimizer state
+# ---------------------------------------------------------------------------
+
+def _zero1_spec(spec: Tuple, shape: Tuple[int, ...],
+                data_size: int, data_axes) -> Tuple:
+    spec = tuple(spec) + (None,) * (len(shape) - len(spec))
+    out = list(spec)
+    for i, (ax, dim) in enumerate(zip(spec, shape)):
+        if ax is None and dim % data_size == 0 and dim >= data_size:
+            out[i] = data_axes
+            break
+    return tuple(out)
+
+
+def zero1_pspecs(param_pspecs: PyTree, param_shapes: PyTree,
+                 data_size: int, data_axes="data") -> PyTree:
+    """Moment pspecs: param pspecs with the data axis added on the first
+    divisible unsharded dim (falls back to the param spec when none fits)."""
+    def one(spec, shaped):
+        return _zero1_spec(tuple(spec), tuple(shaped.shape), data_size,
+                           data_axes)
+    return jax.tree.map(one, param_pspecs, param_shapes,
+                        is_leaf=lambda x: isinstance(x, tuple))

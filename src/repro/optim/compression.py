@@ -1,0 +1,67 @@
+"""Gradient compression (int8 with error feedback) for slow cross-pod links.
+
+Within a pod, gradients reduce over fast ICI at full precision (implicit in
+the sharded backward).  Across pods, the link is the bottleneck collective:
+quantising to int8 cuts that traffic 4× (bf16→int8 plus a per-tensor f32
+scale).  Error feedback accumulates the quantisation residual locally and
+re-injects it next step, which preserves convergence (Karimireddy et al.
+style) — `tests/test_optim.py` checks the residual-correction property.
+
+`error_feedback_compress` is pure (pytree → pytree) so it can be applied
+inside a shard_map over the "pod" axis; `launch.train` wires it in when
+``compress_cross_pod`` is enabled.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class CompressionState:
+    error: PyTree          # residual feedback buffer, same structure as grads
+
+    @staticmethod
+    def init(grads_like: PyTree) -> "CompressionState":
+        return CompressionState(error=jax.tree.map(
+            lambda g: jnp.zeros(g.shape, jnp.float32), grads_like))
+
+
+def compress_int8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Symmetric per-tensor int8 quantisation. Returns (q, scale)."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def error_feedback_compress(grads: PyTree, state: CompressionState
+                            ) -> Tuple[PyTree, PyTree, CompressionState]:
+    """Quantise (grads + carried error); return (q_tree, scale_tree, state').
+
+    The caller reduces (q * scale) across pods, then calls nothing else —
+    decompression is `decompress_int8` leaf-wise.
+    """
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        q, scale = compress_int8(corrected)
+        new_e = corrected - decompress_int8(q, scale)
+        return (q, scale, new_e)
+
+    triples = jax.tree.map(one, grads, state.error)
+    q_tree = jax.tree.map(lambda t: t[0], triples,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    s_tree = jax.tree.map(lambda t: t[1], triples,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    e_tree = jax.tree.map(lambda t: t[2], triples,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    return q_tree, s_tree, CompressionState(error=e_tree)

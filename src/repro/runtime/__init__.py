@@ -1,0 +1,5 @@
+from .fault_tolerance import (ElasticPlan, ElasticScaler, HeartbeatMonitor,
+                              StragglerDetector, run_with_restarts)
+
+__all__ = ["ElasticPlan", "ElasticScaler", "HeartbeatMonitor",
+           "StragglerDetector", "run_with_restarts"]

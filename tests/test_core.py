@@ -1,0 +1,248 @@
+"""Unit tests for the CELLO core: graph IR, reuse analysis, hybrid buffer,
+co-design search, cost model, and policy lowering."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (BufferConfig, OpGraph, TensorKind, analyze,
+                        build_groups, co_design, evaluate, layer_graph,
+                        decode_graph, plan_from_codesign, default_plan,
+                        sequential_groups, simulate, V5E)
+from repro.core.buffer import MiB
+from repro.configs import get_config
+
+
+def small_chain(n_ops: int = 3, dim: int = 256) -> OpGraph:
+    g = OpGraph("chain")
+    g.tensor("x0", (dim, dim), kind=TensorKind.INPUT)
+    for i in range(n_ops):
+        g.tensor(f"w{i}", (dim, dim), kind=TensorKind.WEIGHT)
+        kind = TensorKind.OUTPUT if i == n_ops - 1 else TensorKind.INTERMEDIATE
+        g.einsum(f"mm{i}", "mk,kn->mn", [f"x{i}", f"w{i}"], f"x{i+1}",
+                 out_kind=kind)
+    g.validate()
+    return g
+
+
+# ---------------------------------------------------------------------------
+# graph IR
+# ---------------------------------------------------------------------------
+
+class TestGraph:
+    def test_einsum_shape_inference(self):
+        g = OpGraph()
+        g.tensor("a", (4, 8), kind=TensorKind.INPUT)
+        g.tensor("b", (8, 16), kind=TensorKind.WEIGHT)
+        op = g.einsum("mm", "mk,kn->mn", ["a", "b"], "c")
+        assert g.tensors["c"].shape == (4, 16)
+        assert op.flops == 2 * 4 * 8 * 16
+
+    def test_einsum_mismatch_raises(self):
+        g = OpGraph()
+        g.tensor("a", (4, 8), kind=TensorKind.INPUT)
+        g.tensor("b", (9, 16), kind=TensorKind.WEIGHT)
+        with pytest.raises(ValueError):
+            g.einsum("mm", "mk,kn->mn", ["a", "b"], "c")
+
+    def test_use_before_def_raises(self):
+        g = OpGraph()
+        g.tensor("a", (4, 4), kind=TensorKind.INPUT)
+        with pytest.raises(KeyError):
+            g.einsum("mm", "mk,kn->mn", ["a", "ghost"], "c")
+
+    def test_compulsory_bytes(self):
+        g = small_chain(2, 16)
+        # inputs: x0 + w0 + w1, output x2; intermediates excluded
+        expect = (16 * 16 * 2) * 4
+        assert g.compulsory_bytes() == expect
+
+    def test_topo_orders_enumeration(self):
+        g = small_chain(3)
+        orders = g.all_topo_orders()
+        assert orders == [["mm0", "mm1", "mm2"]]   # chain: unique order
+
+    def test_ai_best_matches_formula(self):
+        g = OpGraph()
+        M, K, N = 64, 32, 16
+        g.tensor("a", (M, K), kind=TensorKind.INPUT)
+        g.tensor("b", (K, N), kind=TensorKind.INPUT)
+        g.einsum("mm", "mk,kn->mn", ["a", "b"], "z",
+                 out_kind=TensorKind.OUTPUT)
+        ai = g.arithmetic_intensity_best()
+        expect = 2 * M * K * N / (2 * (M * K + K * N + M * N))
+        assert abs(ai - expect) < 1e-9
+
+
+# ---------------------------------------------------------------------------
+# reuse analysis
+# ---------------------------------------------------------------------------
+
+class TestReuse:
+    def test_multi_consumer_distances(self):
+        g = OpGraph()
+        g.tensor("x", (128, 128), kind=TensorKind.INPUT)
+        g.tensor("w1", (128, 128), kind=TensorKind.WEIGHT)
+        g.tensor("w2", (128, 128), kind=TensorKind.WEIGHT)
+        g.einsum("a", "mk,kn->mn", ["x", "w1"], "y1")
+        g.elementwise("b", ["y1"], "y1b")                    # gap op
+        g.einsum("c", "mk,kn->mn", ["x", "w2"], "y2")        # x reused later
+        g.elementwise("d", ["y1b", "y2"], "z", out_kind=TensorKind.OUTPUT)
+        info = analyze(g)
+        x = info.tensors["x"]
+        assert x.frequency == 2
+        # inputs have no def anchor: one consecutive-use distance, which
+        # counts the bytes touched by the gap op between the two uses
+        assert len(x.reuse_distances) == 1
+        assert x.reuse_distances[0] > 0
+        # an intermediate does get a def→first-use distance
+        y1 = info.tensors["y1"]
+        assert len(y1.reuse_distances) == y1.frequency
+
+    def test_pin_value_ranking(self):
+        g = small_chain(3)
+        info = analyze(g)
+        # every weight used once: pin value 0; intermediates used once too
+        for c in info.ranked_pin_candidates():
+            assert c.pin_value() >= 0
+
+
+# ---------------------------------------------------------------------------
+# hybrid buffer simulator
+# ---------------------------------------------------------------------------
+
+class TestBuffer:
+    def test_sequential_traffic_at_least_compulsory(self):
+        g = small_chain(3)
+        cfg = BufferConfig(capacity_bytes=4 * MiB, explicit_frac=0.0,
+                           last_use_invalidate=False)
+        rep = simulate(g, sequential_groups(g), cfg)
+        assert rep.hbm_total >= g.compulsory_bytes()
+
+    def test_infinite_cache_hits_compulsory(self):
+        g = small_chain(3, dim=64)
+        cfg = BufferConfig(capacity_bytes=1 << 30, explicit_frac=0.0,
+                           last_use_invalidate=True)
+        rep = simulate(g, sequential_groups(g), cfg)
+        assert rep.hbm_total == g.compulsory_bytes()
+
+    def test_pinning_removes_rereads(self):
+        g = OpGraph()
+        g.tensor("x", (256, 256), kind=TensorKind.INPUT)
+        g.tensor("w1", (256, 256), kind=TensorKind.WEIGHT)
+        g.tensor("w2", (256, 256), kind=TensorKind.WEIGHT)
+        g.einsum("a", "mk,kn->mn", ["x", "w1"], "y1")
+        g.einsum("b", "mk,kn->mn", ["x", "w2"], "y2")
+        g.elementwise("c", ["y1", "y2"], "z", out_kind=TensorKind.OUTPUT)
+        tiny = BufferConfig(capacity_bytes=300 * 1024, explicit_frac=0.5,
+                            chunk_bytes=4 * 1024)
+        nopin = simulate(g, sequential_groups(g), tiny)
+        pin = simulate(g, sequential_groups(g), tiny,
+                       pins={"x": (0, 1)})
+        assert pin.hbm_total <= nopin.hbm_total
+
+    def test_pin_overflow_raises(self):
+        g = small_chain(2, dim=1024)
+        cfg = BufferConfig(capacity_bytes=1 * MiB, explicit_frac=0.5)
+        with pytest.raises(ValueError):
+            simulate(g, sequential_groups(g), cfg,
+                     pins={"x1": (0, 1), "x0": (0, 1), "w0": (0, 1),
+                           "w1": (0, 1)})
+
+    def test_fused_group_hides_intermediate(self):
+        g = small_chain(2, dim=512)
+        cfg = BufferConfig(capacity_bytes=64 * MiB, explicit_frac=0.5)
+        seq = simulate(g, sequential_groups(g), cfg)
+        fused = simulate(g, [["mm0", "mm1"]], cfg)
+        # x1 (the intermediate) never reaches HBM or the implicit region
+        assert fused.per_tensor.get("x1", 0) == 0
+        assert fused.onchip > 0
+        assert fused.hbm_total <= seq.hbm_total
+
+    def test_bypass_for_giant_stream(self):
+        g = OpGraph()
+        g.tensor("x", (1 << 13, 1 << 12), kind=TensorKind.INPUT)  # 64 MiB
+        g.elementwise("e", ["x"], "y", out_kind=TensorKind.OUTPUT)
+        cfg = BufferConfig(capacity_bytes=1 * MiB, explicit_frac=0.0)
+        rep = simulate(g, sequential_groups(g), cfg)
+        assert rep.hbm_read >= g.tensors["x"].bytes
+
+
+# ---------------------------------------------------------------------------
+# co-design search
+# ---------------------------------------------------------------------------
+
+class TestCoDesign:
+    def test_cello_not_worse_than_baselines(self):
+        for arch in ("granite-3-8b", "moonshot-v1-16b-a3b", "rwkv6-7b"):
+            cfg = get_config(arch)
+            g = layer_graph(cfg, batch=2, seq=1024)
+            res = co_design(g)
+            for name, base in res.baselines.items():
+                assert res.best.metrics.time_s <= base.metrics.time_s * 1.001, \
+                    (arch, name)
+
+    def test_memory_bound_case_speedup(self):
+        cfg = get_config("granite-3-8b")
+        g = layer_graph(cfg, batch=1, seq=32768)
+        res = co_design(g)
+        assert res.speedup() > 1.5          # flash fusion must pay off
+        assert res.energy_ratio() > 1.2
+
+    def test_decode_graph_builds_for_all(self):
+        for arch in ("granite-3-8b", "rwkv6-7b", "h2o-danube-1.8b"):
+            cfg = get_config(arch)
+            g = decode_graph(cfg, batch=8, kv_len=4096)
+            res = co_design(g)
+            assert res.best.metrics.time_s > 0
+
+    def test_groups_are_partition(self):
+        cfg = get_config("gemma-7b")
+        g = layer_graph(cfg, batch=2, seq=2048)
+        groups = build_groups(g, g.topo_order(), 64 * MiB)
+        flat = [o for grp in groups for o in grp]
+        assert sorted(flat) == sorted(g.ops)
+
+    @settings(max_examples=15, deadline=None)
+    @given(dim=st.sampled_from([64, 128, 256]),
+           n=st.integers(min_value=2, max_value=5),
+           frac=st.sampled_from([0.0, 0.25, 0.5, 1.0]))
+    def test_property_traffic_bounds(self, dim, n, frac):
+        """Any schedule's traffic is >= compulsory and <= fully-missed."""
+        g = small_chain(n, dim)
+        cfg = BufferConfig(capacity_bytes=2 * MiB, explicit_frac=frac)
+        rep = simulate(g, sequential_groups(g), cfg)
+        worst = sum(3 * gBytes for gBytes in
+                    [sum(g.tensors[t].bytes
+                         for t in list(op.inputs) + [op.output])
+                     for op in g.ops.values()])
+        assert g.compulsory_bytes() <= rep.hbm_total <= worst
+
+
+# ---------------------------------------------------------------------------
+# policy lowering
+# ---------------------------------------------------------------------------
+
+class TestPolicy:
+    def test_plan_from_codesign_turns_on_fusion(self):
+        cfg = get_config("granite-3-8b")
+        g = layer_graph(cfg, batch=1, seq=8192)
+        res = co_design(g)
+        plan = plan_from_codesign(cfg, res, seq=8192)
+        assert plan.use_flash_attention
+        assert plan.use_fused_mlp
+        assert plan.q_block % 128 == 0 and plan.kv_block % 128 == 0
+
+    def test_default_plan_blocks_fit_vmem(self):
+        for arch in ("gemma-7b", "granite-3-8b", "hubert-xlarge"):
+            cfg = get_config(arch)
+            plan = default_plan(cfg, seq=4096)
+            e = cfg.resolved_head_dim
+            ws = (plan.q_block * e * 2 + 2 * plan.kv_block * e * 2
+                  + plan.q_block * plan.kv_block * 4
+                  + plan.q_block * e * 4 + 2 * plan.q_block * 4)
+            assert ws <= V5E.vmem_bytes // 2
+
+    def test_checkpoint_policy_builds(self):
+        plan = default_plan(get_config("granite-3-8b"))
+        assert plan.checkpoint_policy() is not None

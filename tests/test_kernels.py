@@ -1,0 +1,190 @@
+"""Per-kernel validation: Pallas (interpret mode) vs pure-jnp oracles,
+swept over shapes and dtypes, plus hypothesis property tests."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention import flash_attention, mha_reference
+from repro.kernels.fused_mlp import fused_mlp, mlp_reference
+from repro.kernels.rglru import rglru, rglru_reference
+from repro.kernels.rwkv6 import wkv6, wkv6_reference
+from repro.kernels.rmsnorm import rmsnorm, rmsnorm_reference
+
+RNG = np.random.default_rng(42)
+
+
+def rand(shape, dtype=jnp.float32, scale=1.0):
+    return jnp.asarray(RNG.standard_normal(shape) * scale, dtype)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+ATTN_CASES = [
+    # B, H, KVH, S, T, E, causal, window
+    (2, 4, 4, 128, 128, 64, True, None),
+    (2, 4, 2, 128, 128, 64, True, None),       # GQA
+    (1, 4, 1, 256, 256, 64, True, None),       # MQA
+    (2, 4, 2, 128, 128, 64, False, None),      # encoder (hubert)
+    (2, 4, 2, 256, 256, 64, True, 96),         # sliding window (danube)
+    (1, 2, 2, 100, 100, 80, True, None),       # unaligned S and E
+    (1, 2, 2, 64, 192, 64, True, None),        # T > S (query offset)
+    (1, 2, 2, 64, 160, 64, True, 64),          # window + offset
+]
+
+
+@pytest.mark.parametrize("B,H,KVH,S,T,E,causal,window", ATTN_CASES)
+def test_flash_attention_matches_reference(B, H, KVH, S, T, E, causal,
+                                           window):
+    q, k, v = (rand((B, H, S, E)), rand((B, KVH, T, E)), rand((B, KVH, T, E)))
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          q_block=64, kv_block=64)
+    ref = mha_reference(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=1e-3)
+
+
+@pytest.mark.parametrize("dtype,atol", [(jnp.float32, 2e-5),
+                                        (jnp.bfloat16, 3e-2)])
+def test_flash_attention_dtypes(dtype, atol):
+    q = rand((2, 4, 128, 64), dtype)
+    k = rand((2, 2, 128, 64), dtype)
+    v = rand((2, 2, 128, 64), dtype)
+    out = flash_attention(q, k, v, causal=True, q_block=64, kv_block=64)
+    ref = mha_reference(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=atol, rtol=2e-2)
+
+
+@settings(max_examples=10, deadline=None)
+@given(s=st.integers(2, 6), blocks=st.sampled_from([32, 64, 128]))
+def test_flash_attention_block_size_invariance(s, blocks):
+    """Output must not depend on the BlockSpec tiling (pure schedule)."""
+    S = s * 32
+    q, k, v = rand((1, 2, S, 32)), rand((1, 2, S, 32)), rand((1, 2, S, 32))
+    a = flash_attention(q, k, v, causal=True, q_block=32, kv_block=32)
+    b = flash_attention(q, k, v, causal=True, q_block=blocks,
+                        kv_block=blocks)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               atol=3e-5, rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# fused MLP
+# ---------------------------------------------------------------------------
+
+MLP_CASES = [
+    (64, 128, 256, "silu", True),
+    (100, 64, 96, "gelu", True),        # unaligned M and F
+    (64, 128, 256, "relu2", False),     # minitron / rwkv channel-mix
+    (64, 128, 200, "gelu", False),      # hubert
+]
+
+
+@pytest.mark.parametrize("M,D,F,act,gated", MLP_CASES)
+def test_fused_mlp_matches_reference(M, D, F, act, gated):
+    x = rand((M, D), scale=0.5)
+    wg = rand((D, F), scale=0.1) if gated else None
+    wu, wd = rand((D, F), scale=0.1), rand((F, D), scale=0.1)
+    out = fused_mlp(x, wg, wu, wd, activation=act, m_block=32, f_block=64)
+    ref = mlp_reference(x, wg, wu, wd, activation=act)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=5e-5, rtol=1e-4)
+
+
+def test_fused_mlp_block_invariance():
+    x, wg = rand((96, 64), scale=.5), rand((64, 192), scale=.1)
+    wu, wd = rand((64, 192), scale=.1), rand((192, 64), scale=.1)
+    a = fused_mlp(x, wg, wu, wd, m_block=32, f_block=32)
+    b = fused_mlp(x, wg, wu, wd, m_block=96, f_block=192)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               atol=5e-5, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,S,D,db", [(2, 16, 64, 64), (1, 33, 100, 32),
+                                      (3, 8, 256, 128)])
+def test_rglru_matches_reference(B, S, D, db):
+    x, gr, gi = rand((B, S, D)), rand((B, S, D)), rand((B, S, D))
+    ap, h0 = rand((D,)), rand((B, D))
+    y, hT = rglru(x, gr, gi, ap, h0, d_block=db)
+    yr, hTr = rglru_reference(x, gr, gi, ap, h0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               atol=2e-5, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(hT), np.asarray(hTr),
+                               atol=2e-5, rtol=1e-4)
+
+
+def test_rglru_state_carry_composes():
+    """Running two halves with carried state == running the whole seq."""
+    B, S, D = 2, 32, 64
+    x, gr, gi = rand((B, S, D)), rand((B, S, D)), rand((B, S, D))
+    ap = rand((D,))
+    y_full, hT_full = rglru(x, gr, gi, ap, d_block=64)
+    y1, h1 = rglru(x[:, :16], gr[:, :16], gi[:, :16], ap, d_block=64)
+    y2, h2 = rglru(x[:, 16:], gr[:, 16:], gi[:, 16:], ap, h1, d_block=64)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
+                               np.asarray(y_full), atol=2e-5, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(h2), np.asarray(hT_full),
+                               atol=2e-5, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# WKV6
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,H,S,E", [(1, 2, 16, 32), (2, 3, 9, 64),
+                                     (1, 1, 40, 16)])
+def test_wkv6_matches_reference(B, H, S, E):
+    r, k, v = rand((B, H, S, E)), rand((B, H, S, E), scale=.3), rand((B, H, S, E))
+    w, u = rand((B, H, S, E), scale=.5), rand((H, E), scale=.3)
+    s0 = rand((B, H, E, E), scale=.2)
+    y, sT = wkv6(r, k, v, w, u, s0)
+    yr, sTr = wkv6_reference(r, k, v, w, u, s0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               atol=3e-5, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(sT), np.asarray(sTr),
+                               atol=3e-5, rtol=1e-4)
+
+
+def test_wkv6_state_carry_composes():
+    B, H, S, E = 1, 2, 24, 32
+    r, k, v = rand((B, H, S, E)), rand((B, H, S, E), scale=.3), rand((B, H, S, E))
+    w, u = rand((B, H, S, E), scale=.5), rand((H, E), scale=.3)
+    y_full, sT = wkv6(r, k, v, w, u)
+    y1, s1 = wkv6(r[:, :, :12], k[:, :, :12], v[:, :, :12], w[:, :, :12], u)
+    y2, s2 = wkv6(r[:, :, 12:], k[:, :, 12:], v[:, :, 12:], w[:, :, 12:], u, s1)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 2)),
+                               np.asarray(y_full), atol=3e-5, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(s2), np.asarray(sT),
+                               atol=3e-5, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("M,D", [(64, 128), (100, 96), (7, 512)])
+def test_rmsnorm_matches_reference(M, D):
+    x, w = rand((M, D)), rand((D,), scale=.1)
+    out = rmsnorm(x, w, row_block=32)
+    ref = rmsnorm_reference(x, w)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(m=st.integers(1, 65), d=st.sampled_from([32, 64, 128]))
+def test_rmsnorm_property_unit_scale(m, d):
+    """rmsnorm output with w=0 has rms ≈ 1 along the feature dim."""
+    x = rand((m, d), scale=3.0)
+    out = rmsnorm(x, jnp.zeros((d,)), row_block=16)
+    rms = np.sqrt(np.mean(np.square(np.asarray(out)), axis=-1))
+    np.testing.assert_allclose(rms, 1.0, atol=1e-3)

@@ -1,0 +1,208 @@
+"""Per-architecture smoke tests (reduced configs) + model-level invariants."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, list_archs, SHAPES
+from repro.core.policy import default_plan
+from repro.models import (decode_step, forward, init_cache, init_params,
+                          param_pspecs, period_structure)
+from repro.models.attention import (chunked_flash_attention, naive_attention)
+from repro.models.moe import apply_moe, init_moe_params
+
+KEY = jax.random.PRNGKey(0)
+
+
+def make_batch(cfg, B=2, S=32):
+    tokens = jax.random.randint(KEY, (B, S), 0, cfg.vocab)
+    kwargs = {}
+    if cfg.family == "audio":
+        kwargs["frames"] = jax.random.normal(KEY, (B, S, cfg.d_model),
+                                             jnp.bfloat16)
+    if cfg.family == "vlm":
+        kwargs["img"] = jax.random.normal(KEY, (B, cfg.vision_seq,
+                                                cfg.d_model), jnp.bfloat16)
+    return tokens, kwargs
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_arch_smoke_forward_and_decode(arch):
+    """Reduced config: one forward (and decode step) on CPU — output shapes
+    correct and finite."""
+    cfg = get_config(arch).reduced()
+    params = init_params(KEY, cfg)
+    plan = default_plan(cfg, seq=32)
+    B, S = 2, 32
+    tokens, kwargs = make_batch(cfg, B, S)
+    logits, caches = forward(params, cfg, plan, tokens, **kwargs)
+    assert logits.shape == (B, S, cfg.padded_vocab)
+    assert bool(jnp.isfinite(logits).all())
+    if not cfg.encoder_only:
+        cache = init_cache(cfg, B, 64)
+        lg, cache2 = decode_step(params, cache, cfg, plan, tokens[:, :1],
+                                 jnp.int32(0))
+        assert lg.shape == (B, 1, cfg.padded_vocab)
+        assert bool(jnp.isfinite(lg).all())
+        # cache structure preserved
+        assert jax.tree.structure(cache) == jax.tree.structure(cache2)
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_arch_param_specs_cover_tree(arch):
+    cfg = get_config(arch).reduced()
+    params = jax.eval_shape(lambda k: init_params(k, cfg), KEY)
+    specs = param_pspecs(cfg)
+    flat_p = jax.tree.leaves(params)
+    flat_s = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, tuple))
+    assert len(flat_p) == len(flat_s)
+    for p, s in zip(flat_p, flat_s):
+        assert len(s) <= len(p.shape), (s, p.shape)
+
+
+@pytest.mark.parametrize("arch", ["recurrentgemma-2b", "llama-3.2-vision-11b",
+                                  "granite-3-8b"])
+def test_scan_unroll_parity(arch):
+    """The scan (production) and unrolled (dry-run) paths agree to bf16
+    accumulation noise."""
+    cfg = get_config(arch).reduced()
+    params = init_params(KEY, cfg)
+    plan = default_plan(cfg, seq=32)
+    tokens, kwargs = make_batch(cfg)
+    l1, _ = forward(params, cfg, plan, tokens, unroll=True, **kwargs)
+    l2, _ = forward(params, cfg, plan, tokens, unroll=False, **kwargs)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2),
+                               atol=0.08, rtol=0.05)
+
+
+def test_moe_scan_unroll_parity_loose():
+    """MoE: top-k routing flips on near-tie logits under bf16 noise, so
+    compare with a mismatch-budget instead of elementwise tolerance."""
+    cfg = get_config("moonshot-v1-16b-a3b").reduced()
+    params = init_params(KEY, cfg)
+    plan = default_plan(cfg, seq=32)
+    tokens, _ = make_batch(cfg)
+    l1, _ = forward(params, cfg, plan, tokens, unroll=True)
+    l2, _ = forward(params, cfg, plan, tokens, unroll=False)
+    close = np.isclose(np.asarray(l1), np.asarray(l2), atol=0.08, rtol=0.05)
+    assert close.mean() > 0.95
+
+
+def test_prefill_then_decode_consistency():
+    """Greedy next-token from full forward == from incremental decode."""
+    cfg = get_config("granite-3-8b").reduced()
+    params = init_params(KEY, cfg)
+    plan = default_plan(cfg, seq=16)
+    B, S = 1, 8
+    tokens, _ = make_batch(cfg, B, S)
+    full_logits, _ = forward(params, cfg, plan, tokens, mode="prefill")
+    cache = init_cache(cfg, B, 32)
+    lg = None
+    for t in range(S):
+        lg, cache = decode_step(params, cache, cfg, plan,
+                                tokens[:, t:t + 1], jnp.int32(t))
+    np.testing.assert_allclose(
+        np.asarray(jnp.argmax(full_logits[:, -1], -1)),
+        np.asarray(jnp.argmax(lg[:, -1], -1)))
+
+
+def test_window_ring_buffer_decode():
+    """Sliding-window arch decodes past the window without error and the
+    attention only sees in-window entries."""
+    cfg = get_config("h2o-danube-1.8b").reduced()     # window=32 reduced
+    params = init_params(KEY, cfg)
+    plan = default_plan(cfg, seq=16)
+    B = 1
+    cache = init_cache(cfg, B, cfg.window)            # ring of size window
+    tok = jnp.zeros((B, 1), jnp.int32)
+    for t in range(cfg.window + 8):                   # wrap the ring
+        lg, cache = decode_step(params, cache, cfg, plan, tok, jnp.int32(t))
+        assert bool(jnp.isfinite(lg).all()), t
+
+
+def test_chunked_flash_equals_naive():
+    rng = np.random.default_rng(7)
+    q = jnp.asarray(rng.standard_normal((2, 48, 8, 32)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((2, 48, 2, 32)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((2, 48, 2, 32)), jnp.float32)
+    for causal, win in [(True, None), (True, 16), (False, None)]:
+        a = chunked_flash_attention(q, k, v, causal=causal, window=win,
+                                    kv_block=16)
+        b = naive_attention(q, k, v, causal=causal, window=win)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=3e-5, rtol=1e-4)
+
+
+def test_moe_matches_loop_reference():
+    """Grouped-dispatch MoE == per-token loop reference (at high capacity,
+    bf16 dispatch-buffer tolerance)."""
+    D, F, E, K, T = 32, 16, 8, 2, 64
+    params = init_moe_params(KEY, D, F, E, "swiglu", jnp.float32)
+    x = jax.random.normal(KEY, (T, D), jnp.float32)
+    got = np.asarray(apply_moe(params, x, top_k=K, activation="swiglu",
+                               capacity_factor=8.0))
+    logits = np.asarray(x @ params["w_router"])
+    probs = np.exp(logits - logits.max(-1, keepdims=True))
+    probs /= probs.sum(-1, keepdims=True)
+    want = np.zeros((T, D), np.float32)
+    for t in range(T):
+        topk = np.argsort(probs[t])[::-1][:K]
+        g = probs[t][topk]
+        g = g / g.sum()
+        for gi, e in zip(g, topk):
+            xe = np.asarray(x[t])
+            u = xe @ np.asarray(params["w_up"][e])
+            ga = xe @ np.asarray(params["w_gate"][e])
+            h = (ga / (1 + np.exp(-ga))) * u
+            want[t] += gi * (h @ np.asarray(params["w_down"][e]))
+    np.testing.assert_allclose(got, want, atol=0.02, rtol=0.05)
+
+
+def test_moe_gate_mass_and_capacity():
+    """Router gates are normalised; dropped tokens produce zero output."""
+    D, F, E, k = 32, 16, 8, 2
+    params = init_moe_params(KEY, D, F, E, "swiglu", jnp.float32)
+    x = jax.random.normal(KEY, (64, D), jnp.float32)
+    out = apply_moe(params, x, top_k=k, activation="swiglu")
+    assert out.shape == x.shape
+    assert bool(jnp.isfinite(out).all())
+    # zero input -> zero output (no bias paths)
+    out0 = apply_moe(params, jnp.zeros((8, D)), top_k=k, activation="swiglu")
+    np.testing.assert_allclose(np.asarray(out0), 0.0, atol=1e-5)
+
+
+def test_period_structure_counts():
+    cases = {
+        "recurrentgemma-2b": (3, 8, 2),     # 26 = 8*3 + 2
+        "llama-3.2-vision-11b": (5, 8, 0),  # 40 = 8*5
+        "granite-3-8b": (1, 40, 0),
+        "rwkv6-7b": (1, 32, 0),
+    }
+    for arch, (plen, n, rest) in cases.items():
+        cfg = get_config(arch)
+        period, n_periods, rest_kinds = period_structure(cfg)
+        assert (len(period), n_periods, len(rest_kinds)) == (plen, n, rest)
+
+
+def test_supported_shapes_policy():
+    assert "long_500k" in get_config("rwkv6-7b").supported_shapes()
+    assert "long_500k" in get_config("recurrentgemma-2b").supported_shapes()
+    assert "long_500k" in get_config("h2o-danube-1.8b").supported_shapes()
+    assert "long_500k" not in get_config("gemma-7b").supported_shapes()
+    assert "decode_32k" not in get_config("hubert-xlarge").supported_shapes()
+
+
+def test_total_params_scale():
+    """Sanity: reported sizes are in the ballpark of the names."""
+    approx = {
+        "gemma-7b": 8.5e9, "granite-3-8b": 8.2e9, "minitron-8b": 8.4e9,
+        "rwkv6-7b": 7.6e9, "h2o-danube-1.8b": 1.8e9,
+        # assigned config says 48L (hf Moonlight is 27L) → ~27B total as
+        # configured; its *active* params still land at ~3B ("a3b") ✓
+        "moonshot-v1-16b-a3b": 27e9, "granite-moe-1b-a400m": 1.3e9,
+        "recurrentgemma-2b": 2.7e9, "llama-3.2-vision-11b": 10e9,
+        "hubert-xlarge": 1e9,
+    }
+    for arch, expect in approx.items():
+        n = get_config(arch).total_params()
+        assert 0.5 * expect < n < 1.6 * expect, (arch, n, expect)

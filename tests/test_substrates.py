@@ -1,0 +1,255 @@
+"""Data pipeline, optimizer (AdamW/ZeRO-1), compression, checkpoint,
+fault-tolerance runtime."""
+import os
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.data import DataConfig, SyntheticLMData
+from repro.optim import (AdamWConfig, adamw_init, adamw_update, cosine_lr,
+                         CompressionState, compress_int8, decompress_int8,
+                         error_feedback_compress, global_norm, zero1_pspecs)
+from repro.checkpoint import (AsyncCheckpointer, latest_step, load_checkpoint,
+                              save_checkpoint)
+from repro.runtime import (ElasticScaler, HeartbeatMonitor, StragglerDetector,
+                           run_with_restarts)
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+class TestData:
+    CFG = DataConfig(vocab=64, seq_len=16, global_batch=8, seed=7)
+
+    def test_deterministic_restart(self):
+        a = SyntheticLMData(self.CFG)
+        for _ in range(3):
+            next(a)
+        state = a.state_dict()
+        want = next(a)
+        b = SyntheticLMData(self.CFG)
+        b.load_state_dict(state)
+        got = next(b)
+        np.testing.assert_array_equal(want[0], got[0])
+        np.testing.assert_array_equal(want[1], got[1])
+
+    def test_shards_disjoint_streams(self):
+        a = SyntheticLMData(self.CFG, shard=0, n_shards=2)
+        b = SyntheticLMData(self.CFG, shard=1, n_shards=2)
+        xa, _ = next(a)
+        xb, _ = next(b)
+        assert xa.shape == (4, 16)
+        assert not np.array_equal(xa, xb)
+
+    def test_labels_are_shifted_inputs(self):
+        x, y = next(SyntheticLMData(self.CFG))
+        np.testing.assert_array_equal(x[:, 1:], y[:, :-1])
+
+    def test_markov_tokens_follow_table(self):
+        ds = SyntheticLMData(self.CFG)
+        x, y = next(ds)
+        # every transition must be one of the `branching` successors
+        for row_x, row_y in zip(x, y):
+            for cur, nxt in zip(row_x, row_y):
+                assert nxt in ds._table[cur]
+
+    def test_elastic_reshard_keeps_step(self):
+        ds = SyntheticLMData(self.CFG, shard=0, n_shards=2)
+        next(ds)
+        ds2 = ds.reshard(shard=0, n_shards=4)
+        assert ds2.step == ds.step
+        assert ds2.local_batch == 2
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+class TestAdamW:
+    def test_converges_on_quadratic(self):
+        cfg = AdamWConfig(lr=0.1, weight_decay=0.0, warmup_steps=0,
+                          total_steps=200, clip_norm=10.0)
+        target = jnp.asarray([3.0, -2.0, 0.5])
+        params = {"w": jnp.zeros(3)}
+        state = adamw_init(params)
+        for _ in range(200):
+            grads = {"w": 2 * (params["w"] - target)}
+            params, state, _ = adamw_update(cfg, grads, state, params)
+        np.testing.assert_allclose(np.asarray(params["w"]),
+                                   np.asarray(target), atol=0.05)
+
+    def test_clipping_bounds_update(self):
+        cfg = AdamWConfig(lr=1.0, clip_norm=1e-3, warmup_steps=0,
+                          weight_decay=0.0)
+        params = {"w": jnp.ones(4)}
+        state = adamw_init(params)
+        _, _, info = adamw_update(cfg, {"w": jnp.full(4, 1e6)}, state, params)
+        assert float(info["grad_norm"]) > 1e5     # reported pre-clip
+
+    def test_cosine_schedule_shape(self):
+        cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                          min_lr_frac=0.1)
+        assert float(cosine_lr(cfg, jnp.float32(0))) == 0.0
+        assert abs(float(cosine_lr(cfg, jnp.float32(10))) - 1.0) < 1e-6
+        assert float(cosine_lr(cfg, jnp.float32(100))) == pytest.approx(
+            0.1, rel=1e-3)
+
+    def test_zero1_spec_adds_data_axis(self):
+        specs = {"w": (None, "model")}
+        shapes = {"w": jax.ShapeDtypeStruct((64, 32), jnp.float32)}
+        out = zero1_pspecs(specs, shapes, data_size=16)
+        assert out["w"] == ("data", "model")
+
+    def test_zero1_skips_indivisible(self):
+        specs = {"w": (None,)}
+        shapes = {"w": jax.ShapeDtypeStruct((7,), jnp.float32)}
+        out = zero1_pspecs(specs, shapes, data_size=16)
+        assert out["w"] == (None,)
+
+
+# ---------------------------------------------------------------------------
+# gradient compression
+# ---------------------------------------------------------------------------
+
+class TestCompression:
+    def test_roundtrip_error_bounded(self):
+        g = jnp.asarray(np.random.default_rng(0).standard_normal(1000),
+                        jnp.float32)
+        q, s = compress_int8(g)
+        err = np.abs(np.asarray(decompress_int8(q, s) - g))
+        assert err.max() <= float(s) / 2 + 1e-6
+
+    def test_error_feedback_accumulates_residual(self):
+        """Sum of (dequantised + residual) equals sum of true grads —
+        the EF invariant that preserves convergence."""
+        rng = np.random.default_rng(1)
+        grads = {"w": jnp.zeros(64)}
+        state = CompressionState.init(grads)
+        total_true = np.zeros(64)
+        total_sent = np.zeros(64)
+        for _ in range(20):
+            g = {"w": jnp.asarray(rng.standard_normal(64) * 0.01,
+                                  jnp.float32)}
+            total_true += np.asarray(g["w"])
+            q, s, state = error_feedback_compress(g, state)
+            total_sent += np.asarray(decompress_int8(q["w"], s["w"]))
+        resid = np.asarray(state.error["w"])
+        np.testing.assert_allclose(total_sent + resid, total_true,
+                                   atol=1e-5)
+
+    @settings(max_examples=10, deadline=None)
+    @given(scale=st.floats(1e-4, 1e3))
+    def test_compression_scale_invariance(self, scale):
+        g = jnp.asarray([0.5, -1.0, 0.25]) * scale
+        q, s = compress_int8(g)
+        back = decompress_int8(q, s)
+        np.testing.assert_allclose(np.asarray(back), np.asarray(g),
+                                   rtol=0.02, atol=float(s))
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+class TestCheckpoint:
+    def tree(self):
+        return {"params": {"w": jnp.arange(12, dtype=jnp.float32)
+                           .reshape(3, 4)},
+                "opt": {"m": jnp.ones(5), "count": jnp.int32(7)}}
+
+    def test_roundtrip(self, tmp_path):
+        t = self.tree()
+        save_checkpoint(str(tmp_path), 3, t, extra={"note": "hi"})
+        assert latest_step(str(tmp_path)) == 3
+        restored, extra = load_checkpoint(str(tmp_path), 3, t)
+        assert extra == {"note": "hi"}
+        for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(restored)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_uncommitted_checkpoint_ignored(self, tmp_path):
+        t = self.tree()
+        save_checkpoint(str(tmp_path), 1, t)
+        # simulate a crash mid-write of step 2
+        broken = tmp_path / "step_00000002"
+        (broken / "arrays").mkdir(parents=True)
+        (broken / "meta.json").write_text("{}")
+        assert latest_step(str(tmp_path)) == 1
+
+    def test_shape_mismatch_raises(self, tmp_path):
+        t = self.tree()
+        save_checkpoint(str(tmp_path), 1, t)
+        bad = {"params": {"w": jnp.zeros((4, 4))},
+               "opt": {"m": jnp.ones(5), "count": jnp.int32(0)}}
+        with pytest.raises(ValueError):
+            load_checkpoint(str(tmp_path), 1, bad)
+
+    def test_async_checkpointer_gc(self, tmp_path):
+        ck = AsyncCheckpointer(str(tmp_path), keep=2)
+        t = self.tree()
+        for s in (1, 2, 3, 4):
+            ck.save(s, t)
+        ck.wait()
+        steps = sorted(os.listdir(tmp_path))
+        assert steps == ["step_00000003", "step_00000004"]
+
+
+# ---------------------------------------------------------------------------
+# fault tolerance
+# ---------------------------------------------------------------------------
+
+class TestRuntime:
+    def test_heartbeat_detects_dead(self):
+        clock = [0.0]
+        hb = HeartbeatMonitor([0, 1, 2], timeout_s=10,
+                              clock=lambda: clock[0])
+        clock[0] = 5.0
+        hb.beat(0)
+        hb.beat(1)
+        clock[0] = 12.0
+        assert hb.dead_hosts() == [2]
+
+    def test_straggler_flags_outlier(self):
+        sd = StragglerDetector(threshold=2.0, patience=2)
+        for _ in range(10):
+            assert not sd.record(1.0, host=0)
+        assert sd.record(5.0, host=1)
+        assert not sd.should_evict(1)
+        sd.record(5.0, host=1)
+        assert sd.should_evict(1)
+
+    def test_elastic_plans(self):
+        sc = ElasticScaler(model_axis=16, pod_chips=256)
+        p2 = sc.plan(512, restore_step=100)
+        assert p2.mesh_shape == (2, 16, 16)
+        # one chip short of two pods: falls back to the largest single-pod
+        # mesh with the TP axis intact
+        p1 = sc.plan(511, restore_step=100)
+        assert p1.mesh_shape == (31, 16)
+        assert p1.n_devices == 496
+
+    def test_run_with_restarts_recovers(self):
+        completed = []
+        fail_at = {3, 5}
+
+        def step(i):
+            if i in fail_at:
+                fail_at.discard(i)
+                raise RuntimeError("node died")
+            completed.append(i)
+
+        def restore(failed_step):
+            return max(0, failed_step - 1)        # resume from checkpoint
+
+        stats = run_with_restarts(step, restore, n_steps=8)
+        assert stats["restarts"] == 2
+        assert completed[-1] == 7
+
+    def test_run_with_restarts_gives_up(self):
+        def step(i):
+            raise RuntimeError("always dies")
+        with pytest.raises(RuntimeError):
+            run_with_restarts(step, lambda s: s, n_steps=2, max_restarts=2)
