@@ -5,7 +5,6 @@ from __future__ import annotations
 import time
 from typing import List
 
-from repro.core import co_design
 from repro.core.buffer import MiB
 
 from .workloads import workloads
@@ -17,19 +16,22 @@ SUBSET = ("granite-3-8b/train4k", "granite-3-8b/prefill32k",
 
 
 def run() -> List[str]:
-    rows = ["workload,us_per_call," +
+    rows = ["workload,us_per_call,cache_hits," +
             ",".join(f"hbm_mb@{c // MiB}MiB" for c in CAPACITIES)]
     for name, build in workloads():
         if name not in SUBSET:
             continue
-        g = build()
+        traced = build()
         t0 = time.perf_counter()
-        cells = []
+        cells, hits = [], 0
         for cap in CAPACITIES:
-            res = co_design(g, capacity_bytes=cap)
+            res = traced.codesign(capacity_bytes=cap)
+            hits += int(res.from_cache)
             cells.append(f"{res.best.metrics.hbm_bytes / 1e6:.1f}")
         us = (time.perf_counter() - t0) * 1e6
-        rows.append(f"{name},{us:.0f}," + ",".join(cells))
+        # per-call hit count (0..len(CAPACITIES)): a partially-warm row
+        # (e.g. after adding one capacity) is distinguishable from a cold one
+        rows.append(f"{name},{us:.0f},{hits}," + ",".join(cells))
     return rows
 
 

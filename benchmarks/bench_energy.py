@@ -5,25 +5,25 @@ from __future__ import annotations
 import time
 from typing import List
 
-from repro.core import co_design
+from repro.core import V5E
 
 from .workloads import workloads
 
 
 def run() -> List[str]:
-    rows = ["workload,us_per_call,energy_mj_cello,energy_mj_implicit,"
+    rows = ["workload,us_per_call,cached,energy_mj_cello,energy_mj_implicit,"
             "energy_ratio,hbm_energy_frac"]
     for name, build in workloads():
-        g = build()
+        traced = build()
         t0 = time.perf_counter()
-        res = co_design(g)
+        res = traced.codesign()
         us = (time.perf_counter() - t0) * 1e6
         e_c = res.best.metrics.energy_j * 1e3
         e_i = res.baselines["seq-implicit"].metrics.energy_j * 1e3
         # fraction of CELLO energy still spent on HBM traffic
-        from repro.core import V5E
         hbm_j = res.best.metrics.hbm_bytes * V5E.e_hbm_byte * 1e3
-        rows.append(f"{name},{us:.0f},{e_c:.3f},{e_i:.3f},"
+        rows.append(f"{name},{us:.0f},{int(res.from_cache)},"
+                    f"{e_c:.3f},{e_i:.3f},"
                     f"{e_i / e_c:.3f},{hbm_j / e_c:.3f}")
     return rows
 

@@ -5,27 +5,25 @@ from __future__ import annotations
 import time
 from typing import List
 
-from repro.core import co_design
-
 from .workloads import workloads
 
 
 def run() -> List[str]:
-    rows = ["workload,us_per_call,speedup_vs_implicit,speedup_vs_explicit,"
-            "speedup_vs_fused,hbm_reduction"]
+    rows = ["workload,us_per_call,cached,speedup_vs_implicit,"
+            "speedup_vs_explicit,speedup_vs_fused,hbm_reduction"]
     for name, build in workloads():
-        g = build()
+        traced = build()
         t0 = time.perf_counter()
-        res = co_design(g)
+        res = traced.codesign()
         us = (time.perf_counter() - t0) * 1e6
         m = res.best.metrics
         si = res.speedup("seq-implicit")
-        se = m.speedup_over(res.baselines["seq-explicit"].metrics) \
-            if False else res.baselines["seq-explicit"].metrics.time_s / m.time_s
+        se = res.baselines["seq-explicit"].metrics.time_s / m.time_s
         sf = res.baselines["fused-only"].metrics.time_s / m.time_s
         hbm = (res.baselines["seq-implicit"].metrics.hbm_bytes
                / max(1, m.hbm_bytes))
-        rows.append(f"{name},{us:.0f},{si:.3f},{se:.3f},{sf:.3f},{hbm:.2f}")
+        rows.append(f"{name},{us:.0f},{int(res.from_cache)},"
+                    f"{si:.3f},{se:.3f},{sf:.3f},{hbm:.2f}")
     return rows
 
 

@@ -5,25 +5,23 @@ from __future__ import annotations
 import time
 from typing import List
 
-from repro.core import co_design
-
 from .workloads import workloads
 
 SPLITS = (0.0, 0.25, 0.5, 0.75, 1.0)
 
 
 def run() -> List[str]:
-    rows = ["workload,us_per_call,best_split," +
+    rows = ["workload,us_per_call,cached,best_split," +
             ",".join(f"time_ms@{s}" for s in SPLITS)]
     for name, build in workloads():
-        g = build()
+        traced = build()
         t0 = time.perf_counter()
-        res = co_design(g)
+        res = traced.codesign()
         us = (time.perf_counter() - t0) * 1e6
         sweep = res.split_sweep
         cells = [f"{sweep[s].time_s * 1e3:.3f}" if s in sweep else ""
                  for s in SPLITS]
-        rows.append(f"{name},{us:.0f},"
+        rows.append(f"{name},{us:.0f},{int(res.from_cache)},"
                     f"{res.best.schedule.config.explicit_frac}," +
                     ",".join(cells))
     return rows

@@ -1,11 +1,15 @@
-"""Shared benchmark workload set: representative (arch × shape) layer graphs
-for the CELLO analysis tables (speedup / energy / capacity / split)."""
+"""Shared benchmark workload set: representative (arch × shape) traces
+for the CELLO analysis tables (speedup / energy / capacity / split).
+
+Each entry is ``(name, build)`` where ``build()`` returns a
+``repro.api.TracedGraph``; benches run ``.codesign(...)`` on it, which hits
+the shared disk cache on repeated runs.
+"""
 from __future__ import annotations
 
-from repro.configs import get_config
-from repro.core import decode_graph, layer_graph
+from repro.api import Session
 
-# (name, builder) — per-layer analysis graphs at paper-table shapes
+
 def workloads():
     out = []
     for arch, batch, seq in [
@@ -20,16 +24,18 @@ def workloads():
         ("moonshot-v1-16b-a3b", 4, 4096),
         ("granite-moe-1b-a400m", 4, 4096),
     ]:
-        cfg = get_config(arch)
-        kinds = cfg.layer_kinds()
+        sess = Session(arch)
+        kinds = sess.cfg.layer_kinds()
         kind = "xattn" if "xattn" in kinds else kinds[0]
         out.append((f"{arch}/train4k",
-                    lambda c=cfg, b=batch, s=seq, k=kind:
-                    layer_graph(c, b, s, layer_kind=k)))
+                    lambda s=sess, b=batch, q=seq, k=kind:
+                    s.trace(phase="train", batch=b, seq=q, layer_kind=k)))
     for arch in ("granite-3-8b", "gemma-7b"):
-        cfg = get_config(arch)
+        sess = Session(arch)
         out.append((f"{arch}/prefill32k",
-                    lambda c=cfg: layer_graph(c, 1, 32768)))
+                    lambda s=sess: s.trace(phase="prefill", batch=1,
+                                           seq=32768)))
         out.append((f"{arch}/decode32k",
-                    lambda c=cfg: decode_graph(c, 128, 32768)))
+                    lambda s=sess: s.trace(phase="decode", batch=128,
+                                           kv_len=32768)))
     return out

@@ -2,17 +2,16 @@
 failure restores the latest committed checkpoint, re-partitions the data
 stream for the surviving capacity (elastic), and continues.
 
-    PYTHONPATH=src python examples/elastic_restart.py
+    pip install -e . && python examples/elastic_restart.py
 """
 import argparse
-import dataclasses
 
 import jax
 import jax.numpy as jnp
 
+from repro.api import Session
 from repro.checkpoint import AsyncCheckpointer, latest_step, load_checkpoint
 from repro.configs import get_config
-from repro.core.policy import default_plan
 from repro.data import DataConfig, SyntheticLMData
 from repro.launch.train import AdamWConfig, TrainConfig, make_train_step
 from repro.models import init_params
@@ -28,7 +27,7 @@ def main() -> None:
     args = ap.parse_args()
 
     cfg = get_config("granite-3-8b").reduced()
-    plan = default_plan(cfg, seq=32)
+    plan = Session(cfg).default_plan(seq=32).plan
     opt_cfg = AdamWConfig(lr=1e-3, warmup_steps=4, total_steps=args.steps)
     params = init_params(jax.random.PRNGKey(0), cfg)
     opt_state = adamw_init(params)

@@ -1,51 +1,63 @@
-"""Quickstart: run the CELLO schedule × hybrid-buffer co-design on one
-transformer block and lower the result to an execution plan.
+"""Quickstart: run the CELLO schedule × hybrid-buffer co-design through the
+staged Session API and lower the result to an execution plan.
 
-    PYTHONPATH=src python examples/quickstart.py [--arch granite-3-8b]
+    python examples/quickstart.py [--arch granite-3-8b] [--phase train]
+
+(Install with `pip install -e .` first — or prefix with PYTHONPATH=src.)
 """
 import argparse
 
-from repro.configs import get_config, list_archs
-from repro.core import co_design, layer_graph, plan_from_codesign
+from repro.api import Session
+from repro.configs import list_archs
 from repro.core.buffer import MiB
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="granite-3-8b", choices=list_archs())
+    ap.add_argument("--phase", default="train",
+                    choices=("train", "prefill", "decode"))
     ap.add_argument("--batch", type=int, default=1)
-    ap.add_argument("--seq", type=int, default=8192)
+    ap.add_argument("--seq", type=int, default=8192,
+                    help="sequence length (train/prefill) or KV length "
+                         "(decode)")
     ap.add_argument("--capacity-mib", type=int, default=128)
+    ap.add_argument("--strategy", default="default",
+                    choices=("default", "exhaustive", "greedy", "alap"))
+    ap.add_argument("--no-cache", action="store_true",
+                    help="force a fresh search (skip the disk cache)")
     args = ap.parse_args()
 
-    cfg = get_config(args.arch)
-    g = layer_graph(cfg, args.batch, args.seq)
-    print(f"analysis graph: {g}")
+    sess = Session(args.arch, capacity_bytes=args.capacity_mib * MiB,
+                   use_cache=not args.no_cache)
+    shape = (dict(batch=args.batch, kv_len=args.seq)
+             if args.phase == "decode"
+             else dict(batch=args.batch, seq=args.seq))
 
-    res = co_design(g, capacity_bytes=args.capacity_mib * MiB)
-    best = res.best
-    print(f"\n== CELLO co-design result ({args.arch}, "
-          f"b{args.batch} s{args.seq}, {args.capacity_mib} MiB) ==")
-    print(f"explicit/implicit split : {best.schedule.config.explicit_frac:.3f}")
-    print(f"fusion groups           : "
-          f"{[grp for grp in best.schedule.groups if len(grp) > 1]}")
-    print(f"explicit pins           : {sorted(best.schedule.pins)}")
-    print(f"HBM traffic             : {best.metrics.hbm_bytes / 1e6:,.1f} MB")
-    print(f"arithmetic intensity    : {best.metrics.ai:,.1f} FLOP/B")
-    for name, ev in res.baselines.items():
+    # stage 1+2: trace the op DAG, analyse its reuse structure
+    traced = sess.trace(phase=args.phase, **shape)
+    analyzed = traced.analyze()
+    print(traced)
+    print(analyzed)
+    top = analyzed.pin_candidates()[:3]
+    if top:
+        print("top pin candidates   :",
+              ", ".join(f"{t.name} (saves {t.pin_value():.1f} B/B)"
+                        for t in top))
+
+    # stage 3: the joint schedule × buffer-split search
+    designed = analyzed.codesign(strategy=args.strategy)
+    print(f"\n{designed}")
+    best = designed.best.metrics
+    for name, ev in designed.baselines.items():
         print(f"  vs {name:13s}: speedup "
-              f"{ev.metrics.time_s / best.metrics.time_s:5.2f}x   energy "
-              f"{ev.metrics.energy_j / best.metrics.energy_j:5.2f}x   HBM "
-              f"{ev.metrics.hbm_bytes / max(1, best.metrics.hbm_bytes):6.1f}x")
+              f"{ev.metrics.time_s / best.time_s:5.2f}x   energy "
+              f"{ev.metrics.energy_j / best.energy_j:5.2f}x   HBM "
+              f"{ev.metrics.hbm_bytes / max(1, best.hbm_bytes):6.1f}x")
 
-    plan = plan_from_codesign(cfg, res, seq=args.seq)
-    print("\n== lowered execution plan ==")
-    print(f"flash attention kernel : {plan.use_flash_attention} "
-          f"(q_block={plan.q_block}, kv_block={plan.kv_block})")
-    print(f"fused MLP kernel       : {plan.use_fused_mlp} "
-          f"(m={plan.mlp_block_m}, f={plan.mlp_block_f})")
-    print(f"remat save-set         : {plan.remat_save_names}")
-    print(f"notes                  : {plan.notes}")
+    # stage 4: lower onto kernels + remat policy
+    plan = designed.lower()
+    print("\n" + plan.explain())
 
 
 if __name__ == "__main__":

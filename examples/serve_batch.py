@@ -1,17 +1,16 @@
 """Batched serving example: greedy decoding against a ring-buffered KV cache
-with throughput stats.
+with throughput stats, driven through the Session API.
 
-    PYTHONPATH=src python examples/serve_batch.py --arch h2o-danube-1.8b
+    python examples/serve_batch.py --arch h2o-danube-1.8b
 """
 import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 
+from repro.api import Session
 from repro.configs import get_config, list_archs
-from repro.core.policy import default_plan
-from repro.launch.serve import ServeStats, greedy_generate
+from repro.launch.serve import ServeStats
 from repro.models import init_params
 
 
@@ -26,13 +25,15 @@ def main() -> None:
     cfg = get_config(args.arch).reduced()        # CPU-scale weights
     if cfg.encoder_only:
         raise SystemExit(f"{args.arch} is encoder-only: no decode step")
-    plan = default_plan(cfg, seq=args.prompt_len + args.new_tokens)
+    compiled = Session(cfg).default_plan(seq=args.prompt_len
+                                         + args.new_tokens)
+    bundle = compiled.serve()
     params = init_params(jax.random.PRNGKey(0), cfg)
     prompt = jax.random.randint(jax.random.PRNGKey(1),
                                 (args.batch, args.prompt_len), 0, cfg.vocab)
 
     t0 = time.perf_counter()
-    out = greedy_generate(params, cfg, plan, prompt, n_new=args.new_tokens)
+    out = bundle.generate(params, prompt, n_new=args.new_tokens)
     wall = time.perf_counter() - t0
     stats = ServeStats(tokens_generated=args.batch * args.new_tokens,
                        steps=args.prompt_len + args.new_tokens, wall_s=wall)

@@ -3,19 +3,19 @@ Markov corpus with the CELLO plan, AdamW, checkpointing and straggler
 tracking.  Loss should drop from ~log(vocab) toward the source's conditional
 entropy (~log(branching)).
 
-    PYTHONPATH=src python examples/train_lm.py                 # ~10M params
-    PYTHONPATH=src python examples/train_lm.py --preset 100m   # ~100M params
+    python examples/train_lm.py                 # ~10M params
+    python examples/train_lm.py --preset 100m   # ~100M params
 """
 import argparse
 import dataclasses
 
 import jax
 
+from repro.api import Session
 from repro.checkpoint import AsyncCheckpointer
 from repro.configs import get_config
-from repro.core.policy import default_plan
 from repro.data import DataConfig, SyntheticLMData
-from repro.launch.train import AdamWConfig, TrainConfig, train_loop
+from repro.launch.train import AdamWConfig
 from repro.runtime import StragglerDetector
 
 PRESETS = {
@@ -41,7 +41,7 @@ def main() -> None:
         name=f"granite-{args.preset}")
     print(f"model: {cfg.name}  params≈{cfg.total_params() / 1e6:.1f}M")
 
-    plan = default_plan(cfg, seq=S)
+    compiled = Session(cfg).default_plan(seq=S)
     data = SyntheticLMData(DataConfig(vocab=V, seq_len=S, global_batch=B,
                                       seed=0))
     print(f"data: markov synthetic, loss floor ≈ {data.entropy_floor():.3f} "
@@ -49,11 +49,10 @@ def main() -> None:
 
     straggler = StragglerDetector()
     ck = AsyncCheckpointer(args.ckpt_dir, keep=2)
-    out = train_loop(
-        cfg, plan,
-        AdamWConfig(lr=args.lr, warmup_steps=20, total_steps=args.steps,
-                    weight_decay=0.01),
+    out = compiled.train(
         data_iter=iter(data), n_steps=args.steps,
+        opt_cfg=AdamWConfig(lr=args.lr, warmup_steps=20,
+                            total_steps=args.steps, weight_decay=0.01),
         checkpointer=ck, checkpoint_every=max(50, args.steps // 4),
         straggler=straggler, log_every=10)
 

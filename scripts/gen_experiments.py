@@ -7,7 +7,6 @@ EXPERIMENTS.perf.md and embedded verbatim.
 import glob
 import json
 import os
-import sys
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 DRY = os.path.join(ROOT, "experiments", "dryrun")

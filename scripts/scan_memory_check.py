@@ -7,8 +7,8 @@ import sys; sys.path.insert(0, "src")
 import json
 import jax
 from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.api import Session
 from repro.configs import SHAPES, get_config
-from repro.core.policy import default_plan
 from repro.models import forward, set_mesh_context
 from repro.launch import shardings as shd
 from repro.launch.mesh import make_production_mesh
@@ -24,7 +24,7 @@ for arch, shape_name in [("granite-3-8b", "train_4k"),
     shape = SHAPES[shape_name]
     mesh = make_production_mesh()
     set_mesh_context(mesh)
-    plan = default_plan(cfg, seq=shape.seq_len)
+    plan = Session(cfg).default_plan(seq=shape.seq_len).plan
     specs = shd.input_specs(cfg, shape, mesh)
     params_sds, p_sh = shd.params_for(cfg, mesh)      # STACKED (scan form)
     if shape.mode == "train":

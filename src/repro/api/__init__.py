@@ -1,0 +1,45 @@
+"""`repro.api` — the staged, inspectable front-end for the CELLO toolchain.
+
+The paper's contribution is a *co-designed pipeline*: SCORE's schedule search
+and CHORD's hybrid buffer split are decided jointly and lowered onto the
+hardware together.  This package exposes that pipeline as explicit stages::
+
+    from repro.api import Session
+
+    plan = (Session("gemma_7b")
+            .trace(phase="decode")       # TracedGraph   — the op DAG
+            .analyze()                   # AnalyzedGraph — reuse structure
+            .codesign()                  # CoDesigned    — schedule × buffer
+            .lower())                    # CompiledPlan  — kernels + remat
+    print(plan.explain())
+    plan.serve()                         # or plan.train(...)
+
+Search internals are a registry of composable passes with pluggable ordering
+strategies (``repro.core.search``), re-exported here so new strategies and
+buffer policies plug in without touching call sites.
+
+Old flat entry points (``co_design``, ``plan_from_codesign``) remain as
+deprecation shims for one release — see ``docs/api_migration.md``.
+"""
+from ..core.costmodel import HardwareModel, V5E
+from ..core.search import (DEFAULT_SPLITS, EvaluatePass, FusionPass,
+                           OrderPass, PASS_REGISTRY, Pass, PinPass,
+                           SearchContext, SearchPoint, SearchStrategy,
+                           SplitSweepPass, STRATEGY_REGISTRY,
+                           default_pipeline, get_strategy, register_pass,
+                           register_strategy, run_codesign, run_pipeline)
+from .artifacts import AnalyzedGraph, CoDesigned, CompiledPlan, TracedGraph
+from .cache import CodesignCache, graph_fingerprint
+from .session import PHASES, Session
+
+__all__ = [
+    "Session", "PHASES",
+    "TracedGraph", "AnalyzedGraph", "CoDesigned", "CompiledPlan",
+    "CodesignCache", "graph_fingerprint",
+    "HardwareModel", "V5E",
+    "Pass", "OrderPass", "FusionPass", "PinPass", "SplitSweepPass",
+    "EvaluatePass", "SearchContext", "SearchPoint", "SearchStrategy",
+    "PASS_REGISTRY", "STRATEGY_REGISTRY", "DEFAULT_SPLITS",
+    "default_pipeline", "get_strategy", "register_pass", "register_strategy",
+    "run_codesign", "run_pipeline",
+]

@@ -1,0 +1,253 @@
+"""Frozen stage artifacts for the staged `cello` compilation pipeline.
+
+Each :class:`~repro.api.session.Session` stage returns one of these:
+
+    Session.trace()    -> TracedGraph
+    TracedGraph.analyze()   -> AnalyzedGraph
+    AnalyzedGraph.codesign()-> CoDesigned
+    CoDesigned.lower()      -> CompiledPlan
+
+Artifacts are frozen dataclasses with compact reprs; each keeps a reference
+to its session so the stages chain, but all the decision state is in the
+artifact itself (inspect, cache, or compare them freely).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import TYPE_CHECKING, Any, Dict, Optional
+
+from ..configs.base import ArchConfig
+from ..core.graph import OpGraph
+from ..core.policy import CelloPlan
+from ..core.reuse import ReuseAnalysis
+from ..core.schedule import CoDesignResult, EvaluatedSchedule
+
+if TYPE_CHECKING:                                      # pragma: no cover
+    from .session import Session
+
+
+@dataclasses.dataclass(frozen=True)
+class TracedGraph:
+    """Stage 1: the analysis-level op DAG for one (arch, phase, shape).
+
+    ``Session.trace`` memoizes these per shape, so the carried ``graph``
+    is shared between repeat calls — treat it as read-only; to experiment
+    with graph edits, build your own via ``OpGraph.build()``.
+    """
+    arch: str
+    phase: str                        # "train" | "prefill" | "decode"
+    batch: int
+    seq: Optional[int]                # train/prefill
+    kv_len: Optional[int]             # decode
+    layer_kind: Optional[str]
+    graph: OpGraph = dataclasses.field(repr=False, compare=False)
+    session: "Session" = dataclasses.field(repr=False, compare=False)
+
+    @property
+    def shape_key(self) -> str:
+        span = f"s{self.seq}" if self.phase != "decode" else f"kv{self.kv_len}"
+        return f"b{self.batch}{span}"
+
+    def analyze(self) -> "AnalyzedGraph":
+        return self.session.analyze(self)
+
+    def codesign(self, **kwargs) -> "CoDesigned":
+        """Convenience: codesign straight from the trace.  The reuse
+        analysis is computed only if the search actually runs, so a disk
+        cache hit skips it entirely."""
+        return self.session.codesign(self, **kwargs)
+
+    def __repr__(self) -> str:
+        return (f"TracedGraph({self.arch!r}, phase={self.phase!r}, "
+                f"{self.shape_key}, {len(self.graph.ops)} ops, "
+                f"{self.graph.total_flops:.3e} FLOPs)")
+
+
+@dataclasses.dataclass(frozen=True)
+class AnalyzedGraph:
+    """Stage 2: reuse distances/frequencies over the natural schedule."""
+    trace: TracedGraph
+    analysis: ReuseAnalysis = dataclasses.field(repr=False, compare=False)
+
+    @property
+    def session(self) -> "Session":
+        return self.trace.session
+
+    def reuse_of(self, tensor: str):
+        return self.analysis.tensors[tensor]
+
+    def pin_candidates(self):
+        return self.analysis.ranked_pin_candidates()
+
+    def codesign(self, **kwargs) -> "CoDesigned":
+        return self.session.codesign(self, **kwargs)
+
+    def __repr__(self) -> str:
+        multi = sum(1 for t in self.analysis.tensors.values()
+                    if t.frequency > 1)
+        return (f"AnalyzedGraph({self.trace.arch!r}, "
+                f"phase={self.trace.phase!r}, "
+                f"{len(self.analysis.tensors)} tensors, "
+                f"{multi} with reuse)")
+
+
+@dataclasses.dataclass(frozen=True)
+class CoDesigned:
+    """Stage 3: the joint schedule × buffer decision (plus baselines)."""
+    trace: TracedGraph
+    result: CoDesignResult = dataclasses.field(repr=False, compare=False)
+    strategy: str = "default"
+    capacity_bytes: int = 0
+    from_cache: bool = False
+
+    @property
+    def session(self) -> "Session":
+        return self.trace.session
+
+    # -- passthroughs to the underlying result -------------------------
+    @property
+    def best(self) -> EvaluatedSchedule:
+        return self.result.best
+
+    @property
+    def baselines(self) -> Dict[str, EvaluatedSchedule]:
+        return self.result.baselines
+
+    @property
+    def split_sweep(self):
+        return self.result.split_sweep
+
+    def speedup(self, baseline: str = "seq-implicit") -> float:
+        return self.result.speedup(baseline)
+
+    def energy_ratio(self, baseline: str = "seq-implicit") -> float:
+        return self.result.energy_ratio(baseline)
+
+    def lower(self, *, seq: Optional[int] = None) -> "CompiledPlan":
+        return self.session.lower(self, seq=seq)
+
+    def __repr__(self) -> str:
+        s = self.best.schedule
+        return (f"CoDesigned({self.trace.arch!r}, phase={self.trace.phase!r}, "
+                f"split={s.config.explicit_frac:.3f}, "
+                f"{len(s.groups)} groups, {len(s.pins)} pins, "
+                f"speedup={self.speedup():.2f}x"
+                f"{', cached' if self.from_cache else ''})")
+
+
+@dataclasses.dataclass(frozen=True)
+class CompiledPlan:
+    """Stage 4: the lowered execution plan, ready to serve or train.
+
+    ``.serve()`` / ``.train()`` drive the JAX execution stack with this
+    plan; ``.report()`` returns the headline co-design numbers and
+    ``.explain()`` a human-readable schedule/pin/split summary.
+    """
+    cfg: ArchConfig = dataclasses.field(repr=False)
+    plan: CelloPlan = dataclasses.field(repr=False)
+    trace: Optional[TracedGraph] = dataclasses.field(
+        default=None, repr=False, compare=False)
+    codesigned: Optional[CoDesigned] = dataclasses.field(
+        default=None, repr=False, compare=False)
+
+    @property
+    def arch(self) -> str:
+        return self.cfg.name
+
+    # -- execution ------------------------------------------------------
+    def serve(self, *, unroll: bool = False):
+        """Serving bundle (prefill/decode fns + greedy generate driver)."""
+        from ..launch.serve import make_serving      # lazy: pulls in jax
+        return make_serving(self.cfg, self.plan, unroll=unroll)
+
+    def train(self, *, data_iter, n_steps: int, opt_cfg=None, **kwargs
+              ) -> Dict[str, Any]:
+        """Run the CPU-scale training loop under this plan's remat policy."""
+        from ..launch.train import train_loop        # lazy: pulls in jax
+        from ..optim import AdamWConfig
+        if opt_cfg is None:
+            opt_cfg = AdamWConfig(total_steps=n_steps)
+        return train_loop(self.cfg, self.plan, opt_cfg,
+                          data_iter=data_iter, n_steps=n_steps, **kwargs)
+
+    # -- introspection --------------------------------------------------
+    def report(self) -> Dict[str, Any]:
+        """Headline co-design metrics (empty-ish for default plans)."""
+        out: Dict[str, Any] = {
+            "arch": self.arch,
+            "plan": dataclasses.asdict(self.plan),
+        }
+        if self.trace is not None:
+            out["phase"] = self.trace.phase
+            out["shape"] = self.trace.shape_key
+        cd = self.codesigned
+        if cd is not None:
+            m = cd.best.metrics
+            out.update({
+                "strategy": cd.strategy,
+                "capacity_bytes": cd.capacity_bytes,
+                "explicit_frac": cd.best.schedule.config.explicit_frac,
+                "time_s": m.time_s,
+                "energy_j": m.energy_j,
+                "hbm_bytes": m.hbm_bytes,
+                "arithmetic_intensity": m.ai,
+                "speedup_vs_implicit": cd.speedup(),
+                "energy_ratio_vs_implicit": cd.energy_ratio(),
+                "baselines": {
+                    name: {"time_s": ev.metrics.time_s,
+                           "energy_j": ev.metrics.energy_j,
+                           "hbm_bytes": ev.metrics.hbm_bytes}
+                    for name, ev in cd.baselines.items()},
+                "from_cache": cd.from_cache,
+            })
+        return out
+
+    def explain(self) -> str:
+        """Human-readable schedule / pin / split / kernel summary."""
+        p = self.plan
+        lines = [f"CompiledPlan for {self.arch}"]
+        if self.trace is not None:
+            lines.append(f"  traced phase      : {self.trace.phase} "
+                         f"({self.trace.shape_key})")
+        cd = self.codesigned
+        if cd is not None:
+            s = cd.best.schedule
+            cap = cd.capacity_bytes
+            lines += [
+                f"  search strategy   : {cd.strategy}"
+                + (" [cache hit]" if cd.from_cache else ""),
+                f"  buffer split      : {s.config.explicit_frac:.3f} explicit"
+                f" ({s.config.explicit_bytes // 1024 // 1024} MiB of"
+                f" {cap // 1024 // 1024} MiB)",
+                f"  fusion groups     : "
+                + (", ".join("{" + "+".join(g) + "}"
+                             for g in s.groups if len(g) > 1) or "(none)"),
+                f"  explicit pins     : "
+                + (", ".join(f"{t}[g{a}..g{b}]"
+                             for t, (a, b) in sorted(s.pins.items()))
+                   or "(none)"),
+                f"  speedup           : {cd.speedup():.3f}x vs implicit-only,"
+                f" energy {cd.energy_ratio():.3f}x better",
+                f"  HBM traffic       : "
+                f"{cd.best.metrics.hbm_bytes / 1e6:,.1f} MB "
+                f"(AI {cd.best.metrics.ai:,.1f} FLOP/B)",
+            ]
+        else:
+            lines.append("  (default plan — no search was run)")
+        lines += [
+            f"  flash attention   : {p.use_flash_attention} "
+            f"(q_block={p.q_block}, kv_block={p.kv_block})",
+            f"  fused MLP         : {p.use_fused_mlp} "
+            f"(m={p.mlp_block_m}, f={p.mlp_block_f})",
+            f"  remat save-set    : {', '.join(p.remat_save_names)}",
+        ]
+        if p.notes:
+            lines.append(f"  notes             : {p.notes}")
+        return "\n".join(lines)
+
+    def __repr__(self) -> str:
+        tag = (f"phase={self.trace.phase!r}, " if self.trace else "")
+        how = "codesigned" if self.codesigned else "default"
+        return (f"CompiledPlan({self.arch!r}, {tag}{how}, "
+                f"flash={self.plan.use_flash_attention}, "
+                f"fused_mlp={self.plan.use_fused_mlp})")

@@ -1,0 +1,214 @@
+"""Disk cache for co-design results.
+
+Repeated benchmark / serving runs hit the same (arch, phase, hw, capacity)
+cells over and over; the search is deterministic, so its result is cached on
+disk as JSON and replayed instead of re-searched.  Keys additionally cover a
+content fingerprint of the traced graph and the search knobs, so a config or
+strategy change can never alias a stale entry.
+
+JSON round-trips Python floats exactly (``float(repr(x)) == x``), so a cache
+hit is bit-identical to the search that produced it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import hashlib
+import inspect
+import json
+import os
+import pathlib
+import re
+import tempfile
+from typing import Any, Dict, Optional
+
+from ..core.buffer import BufferConfig, TrafficReport
+from ..core.costmodel import HardwareModel, Metrics
+from ..core.graph import OpGraph
+from ..core.schedule import CoDesignResult, EvaluatedSchedule, Schedule
+
+_FORMAT_VERSION = 1
+
+
+def default_cache_dir() -> pathlib.Path:
+    env = os.environ.get("CELLO_CACHE_DIR")
+    if env:
+        return pathlib.Path(env).expanduser()
+    return pathlib.Path("~/.cache/cello/codesign").expanduser()
+
+
+def cache_disabled_by_env() -> bool:
+    # CELLO_NO_CACHE=0 / =false / ="" means "leave caching on"
+    return os.environ.get("CELLO_NO_CACHE", "").lower() not in ("", "0", "false")
+
+
+def graph_fingerprint(graph: OpGraph) -> str:
+    """Content hash over tensors + ops (shapes, dtypes, kinds, FLOPs)."""
+    h = hashlib.sha256()
+    for t in graph.tensors.values():
+        h.update(repr((t.name, t.shape, t.dtype_bytes, t.kind.value)).encode())
+    for o in graph.topo_order():
+        op = graph.ops[o]
+        h.update(repr((op.name, op.spec, op.inputs, op.output, op.flops,
+                       op.irregular)).encode())
+    return h.hexdigest()
+
+
+def hw_fingerprint(hw: HardwareModel) -> str:
+    return hashlib.sha256(repr(dataclasses.astuple(hw)).encode()).hexdigest()
+
+
+def strategy_fingerprint(strategy) -> Optional[str]:
+    """Hash of the strategy implementation's source code.
+
+    `algo_fingerprint` only covers the core modules, so a user-registered
+    custom strategy edited between runs would otherwise replay a stale
+    cached search under its unchanged name.  Instance state is folded in
+    too: two differently-configured instances of one class (e.g. a beam
+    width knob) must not alias each other's entries.  Returns None when
+    the source is unavailable (e.g. a REPL-defined class): the caller must
+    then skip the disk cache entirely."""
+    try:
+        # the whole MRO (minus object): an edited user base class holding
+        # orders() must invalidate entries keyed by an unchanged subclass
+        src = "\0".join(inspect.getsource(klass)
+                        for klass in type(strategy).__mro__
+                        if klass is not object)
+    except (OSError, TypeError):
+        return None
+    attrs = dict(getattr(strategy, "__dict__", {}))
+    for klass in type(strategy).__mro__:      # __slots__-based state too
+        slots = getattr(klass, "__slots__", ())
+        for slot in ((slots,) if isinstance(slots, str) else slots):
+            if hasattr(strategy, slot):
+                attrs[slot] = getattr(strategy, slot)
+    state = repr(sorted(attrs.items()))
+    if re.search(r"0x[0-9a-fA-F]{6,}", state):
+        # address-bearing default reprs (functions, lambdas, objects) differ
+        # per process — the key would never repeat, a permanent silent miss;
+        # declare the strategy uncacheable instead
+        return None
+    return hashlib.sha256((src + "\0" + state).encode()).hexdigest()
+
+
+@functools.lru_cache(maxsize=1)
+def algo_fingerprint() -> str:
+    """Hash of the search/simulator/cost-model source code.
+
+    Folding this into cache keys means *any* edit to the co-design
+    arithmetic invalidates old entries — no stale replays between version
+    bumps."""
+    from ..core import buffer, costmodel, graph, reuse, schedule, search
+    h = hashlib.sha256()
+    for mod in (buffer, costmodel, graph, reuse, schedule, search):
+        try:
+            h.update(inspect.getsource(mod).encode())
+        except OSError:       # no source (zipapp etc.): fall back to version
+            from .. import __version__
+            h.update(__version__.encode())
+    return h.hexdigest()
+
+
+# --------------------------------------------------------------------------
+# (de)serialization
+# --------------------------------------------------------------------------
+
+def _sched_to(s: Schedule) -> Dict[str, Any]:
+    return {
+        "order": list(s.order),
+        "groups": [list(g) for g in s.groups],
+        "pins": {t: list(ab) for t, ab in s.pins.items()},
+        "config": dataclasses.asdict(s.config),
+    }
+
+
+def _sched_from(d: Dict[str, Any]) -> Schedule:
+    return Schedule(
+        order=list(d["order"]),
+        groups=[list(g) for g in d["groups"]],
+        pins={t: tuple(ab) for t, ab in d["pins"].items()},
+        config=BufferConfig(**d["config"]),
+    )
+
+
+def _ev_to(ev: EvaluatedSchedule) -> Dict[str, Any]:
+    return {
+        "schedule": _sched_to(ev.schedule),
+        "report": dataclasses.asdict(ev.report),
+        "metrics": dataclasses.asdict(ev.metrics),
+    }
+
+
+def _ev_from(d: Dict[str, Any]) -> EvaluatedSchedule:
+    return EvaluatedSchedule(
+        schedule=_sched_from(d["schedule"]),
+        report=TrafficReport(**d["report"]),
+        metrics=Metrics(**d["metrics"]),
+    )
+
+
+def result_to_dict(res: CoDesignResult) -> Dict[str, Any]:
+    return {
+        "v": _FORMAT_VERSION,
+        "best": _ev_to(res.best),
+        "baselines": {k: _ev_to(v) for k, v in res.baselines.items()},
+        # float keys serialized by repr so they round-trip exactly
+        "split_sweep": {repr(k): dataclasses.asdict(v)
+                        for k, v in res.split_sweep.items()},
+    }
+
+
+def result_from_dict(d: Dict[str, Any]) -> CoDesignResult:
+    if d.get("v") != _FORMAT_VERSION:
+        raise ValueError(f"cache format {d.get('v')!r} != {_FORMAT_VERSION}")
+    return CoDesignResult(
+        best=_ev_from(d["best"]),
+        baselines={k: _ev_from(v) for k, v in d["baselines"].items()},
+        split_sweep={float(k): Metrics(**v)
+                     for k, v in d["split_sweep"].items()},
+    )
+
+
+# --------------------------------------------------------------------------
+# the cache
+# --------------------------------------------------------------------------
+
+class CodesignCache:
+    """One JSON file per key under ``root`` (atomic, best-effort writes)."""
+
+    def __init__(self, root: Optional[os.PathLike] = None):
+        self.root = pathlib.Path(root) if root else default_cache_dir()
+
+    @staticmethod
+    def key(**fields: Any) -> str:
+        blob = json.dumps(fields, sort_keys=True, default=repr)
+        return hashlib.sha256(blob.encode()).hexdigest()
+
+    def _path(self, key: str) -> pathlib.Path:
+        return self.root / f"{key}.json"
+
+    def get(self, key: str) -> Optional[CoDesignResult]:
+        path = self._path(key)
+        try:
+            with open(path) as f:
+                return result_from_dict(json.load(f))
+        except (OSError, ValueError, KeyError, TypeError):
+            return None    # miss, corrupt, or stale format: re-search
+
+    def put(self, key: str, res: CoDesignResult) -> None:
+        tmp = None
+        try:
+            self.root.mkdir(parents=True, exist_ok=True)
+            fd, tmp = tempfile.mkstemp(dir=self.root, suffix=".tmp")
+            with os.fdopen(fd, "w") as f:
+                json.dump(result_to_dict(res), f)
+            os.replace(tmp, self._path(key))
+            tmp = None
+        except OSError:
+            pass           # caching is best-effort; the search result stands
+        finally:
+            if tmp is not None:     # failed mid-write: don't orphan the .tmp
+                try:
+                    os.unlink(tmp)
+                except OSError:
+                    pass

@@ -1,0 +1,223 @@
+"""`Session`: the staged front-end for the CELLO toolchain.
+
+One object owns the arch config, hardware model, capacity and result cache;
+explicit stages carry the pipeline::
+
+    from repro.api import Session
+    from repro.core import V5E
+
+    plan = (Session(arch="gemma_7b", hw=V5E)
+            .trace(phase="decode")          # -> TracedGraph   (op DAG)
+            .analyze()                      # -> AnalyzedGraph (reuse info)
+            .codesign(strategy="default")   # -> CoDesigned    (schedule×buffer)
+            .lower())                       # -> CompiledPlan  (kernels+remat)
+    print(plan.explain())
+    bundle = plan.serve()
+
+Each stage returns a frozen, reprable artifact (`repro.api.artifacts`), so
+intermediate decisions are inspectable and cacheable.  ``codesign`` results
+are persisted to a disk cache keyed by (arch, phase, shape, hw, capacity,
+strategy, graph fingerprint): repeated benchmark runs skip the search.
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional, Sequence, Union
+
+from ..configs import get_config, list_archs
+from ..configs.base import ArchConfig
+from ..core.costmodel import HardwareModel, V5E
+from ..core.lowering import decode_graph, layer_graph
+from ..core.policy import default_plan as _default_plan
+from ..core.policy import lower_codesign
+from ..core.reuse import analyze as _analyze
+from ..core.search import DEFAULT_SPLITS, get_strategy, run_codesign
+from .artifacts import AnalyzedGraph, CoDesigned, CompiledPlan, TracedGraph
+from .cache import (CodesignCache, algo_fingerprint, cache_disabled_by_env,
+                    graph_fingerprint, hw_fingerprint, strategy_fingerprint)
+
+PHASES = ("train", "prefill", "decode")
+
+# paper-table default shapes per phase (override per trace() call)
+_PHASE_DEFAULTS = {
+    "train": dict(batch=4, seq=4096),
+    "prefill": dict(batch=1, seq=32768),
+    "decode": dict(batch=128, kv_len=32768),
+}
+
+
+def _resolve_arch(arch: Union[str, ArchConfig]) -> ArchConfig:
+    if isinstance(arch, ArchConfig):
+        return arch
+    try:
+        return get_config(arch)
+    except KeyError:
+        # accept python-identifier spellings (gemma_7b == gemma-7b), incl.
+        # dotted registry names (llama_3_2_vision_11b == llama-3.2-vision-11b)
+        def squash(s: str) -> str:
+            return re.sub(r"[^a-z0-9]", "", s.lower())
+        matches = [n for n in list_archs() if squash(n) == squash(arch)]
+        if len(matches) != 1:
+            raise
+        return get_config(matches[0])
+
+
+class Session:
+    """Staged compilation session for one (arch, hardware) pair."""
+
+    def __init__(self, arch: Union[str, ArchConfig], *,
+                 hw: HardwareModel = V5E,
+                 capacity_bytes: Optional[int] = None,
+                 use_cache: bool = True,
+                 cache_dir=None):
+        self.cfg = _resolve_arch(arch)
+        self.hw = hw
+        self.capacity_bytes = capacity_bytes or hw.vmem_bytes
+        # env kill-switch is checked per codesign() call, not frozen here
+        self.use_cache = use_cache
+        self.cache = CodesignCache(cache_dir)
+        self._trace_memo = {}
+
+    # -- stage 1: trace -------------------------------------------------
+    def trace(self, phase: str = "train", *, batch: Optional[int] = None,
+              seq: Optional[int] = None, kv_len: Optional[int] = None,
+              layer_kind: Optional[str] = None) -> TracedGraph:
+        """Build the analysis-level op DAG for one phase of this arch.
+
+        Traces are memoized per (phase, shape): repeat calls return the
+        same artifact, so treat the carried ``OpGraph`` as read-only.
+        """
+        if phase not in PHASES:
+            raise ValueError(f"phase {phase!r} not in {PHASES}")
+        if phase == "decode" and self.cfg.encoder_only:
+            raise ValueError(f"{self.cfg.name} is encoder-only: no decode")
+        defaults = _PHASE_DEFAULTS[phase]
+        batch = batch if batch is not None else defaults["batch"]
+        if phase == "decode":
+            if seq is not None:
+                raise ValueError("decode traces take kv_len=, not seq=")
+            if layer_kind is not None:
+                raise ValueError("decode traces pick their layer kind from "
+                                 "the arch; layer_kind= is train/prefill-only")
+            kv_len = kv_len if kv_len is not None else defaults["kv_len"]
+        else:
+            if kv_len is not None:
+                raise ValueError(f"{phase} traces take seq=, not kv_len=")
+            seq = seq if seq is not None else defaults["seq"]
+        memo_key = (phase, batch, seq, kv_len, layer_kind)
+        hit = self._trace_memo.get(memo_key)
+        if hit is not None:
+            return hit
+        if phase == "decode":
+            graph = decode_graph(self.cfg, batch, kv_len)
+        else:
+            graph = layer_graph(self.cfg, batch, seq,
+                                layer_kind=layer_kind)
+        traced = TracedGraph(arch=self.cfg.name, phase=phase, batch=batch,
+                             seq=seq, kv_len=kv_len, layer_kind=layer_kind,
+                             graph=graph, session=self)
+        self._trace_memo[memo_key] = traced
+        return traced
+
+    # -- stage 2: analyze -----------------------------------------------
+    def analyze(self, traced: TracedGraph) -> AnalyzedGraph:
+        """Reuse-distance/frequency analysis over the natural order."""
+        return AnalyzedGraph(trace=traced,
+                             analysis=_analyze(traced.graph))
+
+    # -- stage 3: codesign ----------------------------------------------
+    def codesign(self, staged: Union[TracedGraph, AnalyzedGraph], *,
+                 strategy="default",
+                 capacity_bytes: Optional[int] = None,
+                 max_orders: int = 16,
+                 splits: Sequence[float] = DEFAULT_SPLITS,
+                 use_cache: Optional[bool] = None) -> CoDesigned:
+        """The joint schedule × buffer search (disk-cached)."""
+        traced = staged if isinstance(staged, TracedGraph) else staged.trace
+        natural_analysis = (staged.analysis
+                            if isinstance(staged, AnalyzedGraph) else None)
+        splits = list(splits)    # one-shot iterables: key + search see same
+        capacity = capacity_bytes or self.capacity_bytes
+        strategy_obj = get_strategy(strategy)
+        strategy_name = strategy_obj.name
+        cached = self.use_cache if use_cache is None else use_cache
+        if cache_disabled_by_env():     # env kill-switch beats per-call opts
+            cached = False
+        if cached:
+            # the key tracks the strategy's own code + instance state, not
+            # just its name: algo_fingerprint only hashes the core modules,
+            # a registered custom strategy can be edited between runs, and
+            # an instance passed directly (never registered) must not alias
+            # a registered name's entries.  None = no stable identity
+            # (REPL-defined class, address-bearing attr reprs): don't cache.
+            strategy_src = strategy_fingerprint(strategy_obj)
+            if strategy_src is None:
+                cached = False
+        key = None
+        if cached:
+            key = self.cache.key(
+                # any edit to the search/sim/cost code invalidates old entries
+                algo=algo_fingerprint(),
+                arch=traced.arch, phase=traced.phase, batch=traced.batch,
+                seq=traced.seq, kv_len=traced.kv_len,
+                layer_kind=traced.layer_kind, hw=hw_fingerprint(self.hw),
+                capacity=capacity, strategy=strategy_name,
+                strategy_src=strategy_src, max_orders=max_orders,
+                splits=list(splits), graph=graph_fingerprint(traced.graph))
+            hit = self.cache.get(key)
+            if hit is not None:
+                return CoDesigned(trace=traced, result=hit,
+                                  strategy=strategy_name,
+                                  capacity_bytes=capacity, from_cache=True)
+
+        # pass the resolved object so the strategy the cache checks is the
+        # one the search actually runs (a class arg would re-instantiate)
+        result = run_codesign(traced.graph, capacity_bytes=capacity,
+                              hw=self.hw, max_orders=max_orders,
+                              strategy=strategy_obj, splits=splits,
+                              natural_analysis=natural_analysis)
+        if cached:
+            self.cache.put(key, result)
+        return CoDesigned(trace=traced, result=result,
+                          strategy=strategy_name, capacity_bytes=capacity,
+                          from_cache=False)
+
+    # -- stage 4: lower --------------------------------------------------
+    def lower(self, designed: CoDesigned, *,
+              seq: Optional[int] = None) -> CompiledPlan:
+        """Turn the co-design decision into an executable CelloPlan."""
+        traced = designed.trace
+        if seq is None:
+            seq = traced.seq if traced.seq is not None else \
+                (traced.kv_len or 4096)
+        plan = lower_codesign(self.cfg, designed.result, seq=seq, hw=self.hw)
+        return CompiledPlan(cfg=self.cfg, plan=plan, trace=traced,
+                            codesigned=designed)
+
+    # -- fast path (no search) -------------------------------------------
+    def default_plan(self, *, seq: int = 4096) -> CompiledPlan:
+        """Paper-faithful default plan without running the search (smoke
+        tests, dry-runs, CPU-scale examples)."""
+        plan = _default_plan(self.cfg, seq=seq, hw=self.hw)
+        return CompiledPlan(cfg=self.cfg, plan=plan)
+
+    # -- one-shot convenience --------------------------------------------
+    def compile(self, phase: str = "train", *,
+                lower_seq: Optional[int] = None,
+                **trace_kwargs) -> CompiledPlan:
+        """trace → analyze → codesign → lower in one call.
+
+        ``trace_kwargs`` (batch/seq/kv_len/layer_kind) go to :meth:`trace`;
+        ``lower_seq`` overrides the block-sizing seq used by :meth:`lower`
+        (defaults to the traced shape).
+        """
+        traced = self.trace(phase, **trace_kwargs)
+        # codesign straight from the trace: a disk-cache hit then skips the
+        # reuse analysis entirely (it only pre-seeds the search's cache)
+        return self.lower(self.codesign(traced), seq=lower_seq)
+
+    def __repr__(self) -> str:
+        on = self.use_cache and not cache_disabled_by_env()
+        return (f"Session({self.cfg.name!r}, hw={self.hw.name!r}, "
+                f"capacity={self.capacity_bytes // 1024 // 1024} MiB, "
+                f"cache={'on' if on else 'off'})")

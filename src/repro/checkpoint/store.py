@@ -16,7 +16,6 @@ thread off the training critical path; `wait()` joins before the next save.
 """
 from __future__ import annotations
 
-import dataclasses
 import json
 import os
 import re

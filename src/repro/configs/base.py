@@ -7,7 +7,7 @@ table) plus a ``reduced()`` variant used by CPU smoke tests.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional
 
 _REGISTRY: Dict[str, "ArchConfig"] = {}
 

@@ -1,30 +1,45 @@
 """CELLO core: schedule × hybrid implicit/explicit buffer co-design.
 
-Public API:
-  graph.OpGraph / TensorKind      — tensor-op DAG IR
+Public API (prefer the staged ``repro.api.Session`` front-end):
+  graph.OpGraph / OpGraph.build   — tensor-op DAG IR + value-flow builder
   reuse.analyze                   — reuse distance/frequency analysis
   buffer.BufferConfig / simulate  — hybrid buffer traffic simulator
-  schedule.co_design              — the joint search (the paper's technique)
+  search.run_codesign             — the joint search as a pass pipeline
+  search.SearchStrategy           — pluggable candidate-order strategies
   costmodel.HardwareModel / evaluate — speedup + energy model
-  policy.CelloPlan                — lowering onto kernels + remat policies
+  policy.CelloPlan / lower_codesign — lowering onto kernels + remat policies
   lowering.layer_graph            — per-arch analysis graphs
+
+Deprecated shims (one release): ``co_design`` → ``search.run_codesign``,
+``plan_from_codesign`` → ``policy.lower_codesign``.  Both warn and delegate;
+results are identical.
 """
-from .graph import OpGraph, OpNode, TensorKind, TensorSpec
+from .graph import GraphBuilder, OpGraph, OpNode, TensorKind, TensorSpec
 from .reuse import ReuseAnalysis, TensorReuse, analyze
 from .buffer import BufferConfig, TrafficReport, simulate, sequential_groups
 from .costmodel import HardwareModel, Metrics, V5E, evaluate
 from .schedule import (CoDesignResult, EvaluatedSchedule, Schedule,
                        build_groups, choose_pins, co_design)
-from .policy import CelloPlan, default_plan, plan_from_codesign
+from .search import (DEFAULT_SPLITS, EvaluatePass, FusionPass, OrderPass,
+                     PinPass, SearchContext, SearchPoint, SearchStrategy,
+                     SplitSweepPass, PASS_REGISTRY, STRATEGY_REGISTRY,
+                     default_pipeline, get_strategy, register_pass,
+                     register_strategy, run_codesign, run_pipeline)
+from .policy import (CelloPlan, default_plan, lower_codesign,
+                     plan_from_codesign)
 from .lowering import decode_graph, layer_graph
 
 __all__ = [
-    "OpGraph", "OpNode", "TensorKind", "TensorSpec",
+    "GraphBuilder", "OpGraph", "OpNode", "TensorKind", "TensorSpec",
     "ReuseAnalysis", "TensorReuse", "analyze",
     "BufferConfig", "TrafficReport", "simulate", "sequential_groups",
     "HardwareModel", "Metrics", "V5E", "evaluate",
     "CoDesignResult", "EvaluatedSchedule", "Schedule",
     "build_groups", "choose_pins", "co_design",
-    "CelloPlan", "default_plan", "plan_from_codesign",
+    "DEFAULT_SPLITS", "EvaluatePass", "FusionPass", "OrderPass", "PinPass",
+    "SearchContext", "SearchPoint", "SearchStrategy", "SplitSweepPass",
+    "PASS_REGISTRY", "STRATEGY_REGISTRY", "default_pipeline", "get_strategy",
+    "register_pass", "register_strategy", "run_codesign", "run_pipeline",
+    "CelloPlan", "default_plan", "lower_codesign", "plan_from_codesign",
     "decode_graph", "layer_graph",
 ]

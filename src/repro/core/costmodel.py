@@ -14,7 +14,7 @@ not measurements.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Sequence
+from typing import Sequence
 
 from .buffer import TrafficReport
 from .graph import OpGraph

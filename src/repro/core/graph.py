@@ -12,11 +12,12 @@ search (`core.schedule`) to reason about traffic, and enough metadata
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import enum
 import math
 import re
-from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
 
 class TensorKind(enum.Enum):
@@ -88,6 +89,28 @@ class OpGraph:
         self.tensors: Dict[str, TensorSpec] = {}
         self.ops: Dict[str, OpNode] = {}
         self._order: List[str] = []     # insertion order (a valid topo order)
+        # maintained O(1) indices (tensor name -> producing/consuming ops)
+        self._producer_of: Dict[str, OpNode] = {}
+        self._consumers_of: Dict[str, List[OpNode]] = {}
+
+    @classmethod
+    @contextlib.contextmanager
+    def build(cls, name: str = "graph") -> Iterator["GraphBuilder"]:
+        """Context-manager builder; validates the finished graph on exit.
+
+        Builder methods return the produced tensor's name, so DAG wiring
+        flows through values instead of re-derived string keys::
+
+            with OpGraph.build("mlp") as b:
+                x = b.input("x", (128, 512))
+                w = b.weight("w", (512, 512))
+                y = b.einsum("mm", "mk,kn->mn", [x, w], "y",
+                             out_kind=TensorKind.OUTPUT)
+            graph = b.graph
+        """
+        builder = GraphBuilder(cls(name))
+        yield builder
+        builder.graph.validate()
 
     # -- construction -----------------------------------------------------
     def tensor(self, name: str, shape: Sequence[int], *, dtype_bytes: int = 2,
@@ -141,6 +164,10 @@ class OpGraph:
             self._expect(t)
         self.ops[op.name] = op
         self._order.append(op.name)
+        # first writer wins, matching the original linear-scan lookup
+        self._producer_of.setdefault(op.output, op)
+        for t in dict.fromkeys(op.inputs):
+            self._consumers_of.setdefault(t, []).append(op)
         return op
 
     def _expect(self, tname: str) -> TensorSpec:
@@ -150,13 +177,10 @@ class OpGraph:
 
     # -- queries ----------------------------------------------------------
     def producer(self, tname: str) -> Optional[OpNode]:
-        for op in self.ops.values():
-            if op.output == tname:
-                return op
-        return None
+        return self._producer_of.get(tname)
 
     def consumers(self, tname: str) -> List[OpNode]:
-        return [op for op in self.ops.values() if tname in op.inputs]
+        return list(self._consumers_of.get(tname, ()))
 
     def topo_order(self) -> List[str]:
         """Insertion order (construction enforces def-before-use)."""
@@ -225,3 +249,76 @@ class OpGraph:
     def __repr__(self) -> str:
         return (f"OpGraph({self.name!r}, {len(self.ops)} ops, "
                 f"{len(self.tensors)} tensors, {self.total_flops:.3e} FLOPs)")
+
+
+class GraphBuilder:
+    """Value-flow wrapper over :class:`OpGraph` construction.
+
+    Every method returns the name of the tensor it defined, so callers wire
+    the DAG by passing results forward instead of re-assembling string keys.
+    Obtained from :meth:`OpGraph.build`.
+    """
+
+    def __init__(self, graph: OpGraph):
+        self.graph = graph
+
+    # -- tensors ----------------------------------------------------------
+    def input(self, name: str, shape: Sequence[int], *,
+              dtype_bytes: int = 2) -> str:
+        return self.graph.tensor(name, shape, dtype_bytes=dtype_bytes,
+                                 kind=TensorKind.INPUT).name
+
+    def weight(self, name: str, shape: Sequence[int], *,
+               dtype_bytes: int = 2) -> str:
+        return self.graph.tensor(name, shape, dtype_bytes=dtype_bytes,
+                                 kind=TensorKind.WEIGHT).name
+
+    def weights(self, prefix: str, names: Sequence[str],
+                shape: Sequence[int], *, dtype_bytes: int = 2) -> List[str]:
+        return [self.weight(f"{prefix}.{n}", shape, dtype_bytes=dtype_bytes)
+                for n in names]
+
+    # -- ops --------------------------------------------------------------
+    def einsum(self, name: str, spec: str, inputs: Sequence[str],
+               output: str, *, dtype_bytes: int = 2,
+               out_kind: TensorKind = TensorKind.INTERMEDIATE) -> str:
+        return self.graph.einsum(name, spec, inputs, output,
+                                 dtype_bytes=dtype_bytes,
+                                 out_kind=out_kind).output
+
+    def elementwise(self, name: str, inputs: Sequence[str], output: str, *,
+                    flops_per_elem: int = 1, dtype_bytes: int = 2,
+                    out_shape: Optional[Sequence[int]] = None,
+                    out_kind: TensorKind = TensorKind.INTERMEDIATE,
+                    spec: str = "ew", irregular: bool = False) -> str:
+        return self.graph.elementwise(
+            name, inputs, output, flops_per_elem=flops_per_elem,
+            dtype_bytes=dtype_bytes, out_shape=out_shape, out_kind=out_kind,
+            spec=spec, irregular=irregular).output
+
+    def contract(self, name: str, inputs: Sequence[str], output: str,
+                 out_shape: Sequence[int], flops: int, *,
+                 dtype_bytes: int = 2,
+                 out_kind: TensorKind = TensorKind.INTERMEDIATE,
+                 irregular: bool = False) -> str:
+        """Contraction with explicit output shape/FLOPs — covers broadcasty
+        einsums the strict parser can't express (GQA score contractions)."""
+        op = self.graph.elementwise(
+            name, inputs, output, out_shape=out_shape, flops_per_elem=0,
+            dtype_bytes=dtype_bytes, out_kind=out_kind, spec="contract",
+            irregular=irregular)
+        op.flops = int(flops)
+        return op.output
+
+    def scan(self, name: str, inputs: Sequence[str], output: str,
+             out_shape: Sequence[int], *, flops: Optional[int] = None,
+             flops_per_elem: int = 0, dtype_bytes: int = 2,
+             out_kind: TensorKind = TensorKind.INTERMEDIATE) -> str:
+        """Sequential recurrence along the leading axis (spec='scan')."""
+        op = self.graph.elementwise(
+            name, inputs, output, out_shape=out_shape,
+            flops_per_elem=flops_per_elem, dtype_bytes=dtype_bytes,
+            out_kind=out_kind, spec="scan")
+        if flops is not None:
+            op.flops = int(flops)
+        return op.output

@@ -7,6 +7,11 @@ granularity.  The *execution-level* view is `repro.models` + `repro.kernels`;
 `core.policy` connects the two (fusion groups found here select kernels and
 remat save-sets there).
 
+Graphs are assembled through :meth:`OpGraph.build`'s value-flow builder:
+every op returns the name of the tensor it produced, and downstream ops take
+those returned values, so the DAG wiring is carried by data flow rather than
+by re-derived string keys.
+
 Conventions:
   * batch and sequence are flattened where attention doesn't need them apart,
   * GQA is modelled with K/V at their true (smaller) kv-head sizes while the
@@ -21,172 +26,133 @@ from __future__ import annotations
 from typing import Optional
 
 from ..configs.base import ArchConfig
-from .graph import OpGraph, TensorKind
+from .graph import GraphBuilder, OpGraph, TensorKind
 
 BF16 = 2
 F32 = 4
 
 
-def _set_flops(g, name, inputs, out, out_shape, flops, dtype_bytes,
-               out_kind, irregular):
-    """Contraction node with explicit output shape/FLOPs (covers broadcasty
-    einsums the strict parser can't express, e.g. GQA score contractions)."""
-    op = g.elementwise(name, inputs, out, out_shape=out_shape,
-                       flops_per_elem=0, dtype_bytes=dtype_bytes,
-                       out_kind=out_kind, spec="contract",
-                       irregular=irregular)
-    op.flops = int(flops)
-    return op
-
-
-def attention_block(g: OpGraph, cfg: ArchConfig, prefix: str, x: str,
+def attention_block(b: GraphBuilder, cfg: ArchConfig, prefix: str, x: str,
                     batch: int, q_len: int, kv_len: int,
                     cross_kv: Optional[str] = None,
                     out_kind: TensorKind = TensorKind.INTERMEDIATE) -> str:
     """Standard (GQA / sliding-window / cross) attention sub-DAG. Returns the
     name of the block output tensor (pre-residual)."""
     d, h, kvh, e = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
-    b, s = batch, q_len
+    bb, s = batch, q_len
     z = kv_len if cfg.window is None else min(kv_len, cfg.window)
 
-    g.tensor(f"{prefix}.wq", (d, h * e), kind=TensorKind.WEIGHT)
-    g.tensor(f"{prefix}.wo", (h * e, d), kind=TensorKind.WEIGHT)
-    _set_flops(g, f"{prefix}.q", [x, f"{prefix}.wq"], f"{prefix}.q_out",
-               (b, s, h, e), 2 * b * s * d * h * e, BF16,
-               TensorKind.INTERMEDIATE, False)
+    wq = b.weight(f"{prefix}.wq", (d, h * e))
+    wo = b.weight(f"{prefix}.wo", (h * e, d))
+    q = b.contract(f"{prefix}.q", [x, wq], f"{prefix}.q_out",
+                   (bb, s, h, e), 2 * bb * s * d * h * e)
 
     if cross_kv is None:
-        g.tensor(f"{prefix}.wk", (d, kvh * e), kind=TensorKind.WEIGHT)
-        g.tensor(f"{prefix}.wv", (d, kvh * e), kind=TensorKind.WEIGHT)
-        _set_flops(g, f"{prefix}.k", [x, f"{prefix}.wk"], f"{prefix}.k_out",
-                   (b, z, kvh, e), 2 * b * z * d * kvh * e, BF16,
-                   TensorKind.INTERMEDIATE, False)
-        _set_flops(g, f"{prefix}.v", [x, f"{prefix}.wv"], f"{prefix}.v_out",
-                   (b, z, kvh, e), 2 * b * z * d * kvh * e, BF16,
-                   TensorKind.INTERMEDIATE, False)
-        k_t, v_t = f"{prefix}.k_out", f"{prefix}.v_out"
+        wk = b.weight(f"{prefix}.wk", (d, kvh * e))
+        wv = b.weight(f"{prefix}.wv", (d, kvh * e))
+        k_t = b.contract(f"{prefix}.k", [x, wk], f"{prefix}.k_out",
+                         (bb, z, kvh, e), 2 * bb * z * d * kvh * e)
+        v_t = b.contract(f"{prefix}.v", [x, wv], f"{prefix}.v_out",
+                         (bb, z, kvh, e), 2 * bb * z * d * kvh * e)
     else:
         # cross-attention: K/V come from the (pinned-candidate) image tensor
         k_t = v_t = cross_kv
 
     # scores + softmax + PV: FLOPs carry full h heads (GQA broadcast free)
-    _set_flops(g, f"{prefix}.scores", [f"{prefix}.q_out", k_t],
-               f"{prefix}.scores_out", (b, h, s, z),
-               2 * b * h * s * z * e, BF16, TensorKind.INTERMEDIATE, False)
-    g.elementwise(f"{prefix}.softmax", [f"{prefix}.scores_out"],
-                  f"{prefix}.probs", flops_per_elem=5)
-    _set_flops(g, f"{prefix}.pv", [f"{prefix}.probs", v_t],
-               f"{prefix}.pv_out", (b, s, h, e),
-               2 * b * h * s * z * e, BF16, TensorKind.INTERMEDIATE, False)
-    _set_flops(g, f"{prefix}.o", [f"{prefix}.pv_out", f"{prefix}.wo"],
-               f"{prefix}.attn_out", (b, s, d), 2 * b * s * h * e * d,
-               BF16, out_kind, False)
-    return f"{prefix}.attn_out"
+    scores = b.contract(f"{prefix}.scores", [q, k_t], f"{prefix}.scores_out",
+                        (bb, h, s, z), 2 * bb * h * s * z * e)
+    probs = b.elementwise(f"{prefix}.softmax", [scores], f"{prefix}.probs",
+                          flops_per_elem=5)
+    pv = b.contract(f"{prefix}.pv", [probs, v_t], f"{prefix}.pv_out",
+                    (bb, s, h, e), 2 * bb * h * s * z * e)
+    return b.contract(f"{prefix}.o", [pv, wo], f"{prefix}.attn_out",
+                      (bb, s, d), 2 * bb * s * h * e * d, out_kind=out_kind)
 
 
-def mlp_block(g: OpGraph, cfg: ArchConfig, prefix: str, x: str,
+def mlp_block(b: GraphBuilder, cfg: ArchConfig, prefix: str, x: str,
               tokens: int, out_kind: TensorKind = TensorKind.INTERMEDIATE) -> str:
     d, f = cfg.d_model, cfg.d_ff
     gated = cfg.activation in ("swiglu", "geglu")
     if cfg.is_moe:
-        return moe_block(g, cfg, prefix, x, tokens, out_kind)
-    g.tensor(f"{prefix}.w_up", (d, (2 if gated else 1) * f),
-             kind=TensorKind.WEIGHT)
-    g.tensor(f"{prefix}.w_down", (f, d), kind=TensorKind.WEIGHT)
-    _set_flops(g, f"{prefix}.up", [x, f"{prefix}.w_up"], f"{prefix}.h",
-               (tokens, (2 if gated else 1) * f),
-               2 * tokens * d * (2 if gated else 1) * f, BF16,
-               TensorKind.INTERMEDIATE, False)
-    g.elementwise(f"{prefix}.act", [f"{prefix}.h"], f"{prefix}.a",
-                  flops_per_elem=4, out_shape=(tokens, f))
-    _set_flops(g, f"{prefix}.down", [f"{prefix}.a", f"{prefix}.w_down"],
-               f"{prefix}.mlp_out", (tokens, d), 2 * tokens * f * d,
-               BF16, out_kind, False)
-    return f"{prefix}.mlp_out"
+        return moe_block(b, cfg, prefix, x, tokens, out_kind)
+    w_up = b.weight(f"{prefix}.w_up", (d, (2 if gated else 1) * f))
+    w_down = b.weight(f"{prefix}.w_down", (f, d))
+    h = b.contract(f"{prefix}.up", [x, w_up], f"{prefix}.h",
+                   (tokens, (2 if gated else 1) * f),
+                   2 * tokens * d * (2 if gated else 1) * f)
+    a = b.elementwise(f"{prefix}.act", [h], f"{prefix}.a",
+                      flops_per_elem=4, out_shape=(tokens, f))
+    return b.contract(f"{prefix}.down", [a, w_down], f"{prefix}.mlp_out",
+                      (tokens, d), 2 * tokens * f * d, out_kind=out_kind)
 
 
-def moe_block(g: OpGraph, cfg: ArchConfig, prefix: str, x: str,
+def moe_block(b: GraphBuilder, cfg: ArchConfig, prefix: str, x: str,
               tokens: int, out_kind: TensorKind = TensorKind.INTERMEDIATE) -> str:
     """Top-k MoE FFN.  Routing/dispatch are data-dependent ⇒ irregular:
     their reuse must live in the implicit region (the CELLO showcase)."""
     d, f, E, k = cfg.d_model, cfg.d_ff, cfg.n_experts, cfg.top_k
     gated = cfg.activation in ("swiglu", "geglu")
-    g.tensor(f"{prefix}.w_router", (d, E), kind=TensorKind.WEIGHT)
-    g.tensor(f"{prefix}.w_up_e", (E, d, (2 if gated else 1) * f),
-             kind=TensorKind.WEIGHT)
-    g.tensor(f"{prefix}.w_down_e", (E, f, d), kind=TensorKind.WEIGHT)
-    _set_flops(g, f"{prefix}.router", [x, f"{prefix}.w_router"],
-               f"{prefix}.logits", (tokens, E), 2 * tokens * d * E, F32,
-               TensorKind.INTERMEDIATE, False)
-    g.elementwise(f"{prefix}.topk", [f"{prefix}.logits"], f"{prefix}.gates",
-                  flops_per_elem=2, out_shape=(tokens, k), dtype_bytes=F32,
-                  irregular=True)
+    w_router = b.weight(f"{prefix}.w_router", (d, E))
+    w_up_e = b.weight(f"{prefix}.w_up_e", (E, d, (2 if gated else 1) * f))
+    w_down_e = b.weight(f"{prefix}.w_down_e", (E, f, d))
+    logits = b.contract(f"{prefix}.router", [x, w_router],
+                        f"{prefix}.logits", (tokens, E), 2 * tokens * d * E,
+                        dtype_bytes=F32)
+    gates = b.elementwise(f"{prefix}.topk", [logits], f"{prefix}.gates",
+                          flops_per_elem=2, out_shape=(tokens, k),
+                          dtype_bytes=F32, irregular=True)
     # dispatch: gather tokens to experts (data-dependent addressing)
-    g.elementwise(f"{prefix}.dispatch", [x, f"{prefix}.gates"],
-                  f"{prefix}.xe", flops_per_elem=0,
-                  out_shape=(tokens * k, d), irregular=True, spec="gather")
-    _set_flops(g, f"{prefix}.up", [f"{prefix}.xe", f"{prefix}.w_up_e"],
-               f"{prefix}.h", (tokens * k, (2 if gated else 1) * f),
-               2 * tokens * k * d * (2 if gated else 1) * f, BF16,
-               TensorKind.INTERMEDIATE, False)
-    g.elementwise(f"{prefix}.act", [f"{prefix}.h"], f"{prefix}.a",
-                  flops_per_elem=4, out_shape=(tokens * k, f))
-    _set_flops(g, f"{prefix}.down", [f"{prefix}.a", f"{prefix}.w_down_e"],
-               f"{prefix}.ye", (tokens * k, d), 2 * tokens * k * f * d,
-               BF16, TensorKind.INTERMEDIATE, False)
+    xe = b.elementwise(f"{prefix}.dispatch", [x, gates], f"{prefix}.xe",
+                       flops_per_elem=0, out_shape=(tokens * k, d),
+                       irregular=True, spec="gather")
+    h = b.contract(f"{prefix}.up", [xe, w_up_e], f"{prefix}.h",
+                   (tokens * k, (2 if gated else 1) * f),
+                   2 * tokens * k * d * (2 if gated else 1) * f)
+    a = b.elementwise(f"{prefix}.act", [h], f"{prefix}.a",
+                      flops_per_elem=4, out_shape=(tokens * k, f))
+    ye = b.contract(f"{prefix}.down", [a, w_down_e], f"{prefix}.ye",
+                    (tokens * k, d), 2 * tokens * k * f * d)
     # combine: weighted scatter-add back to token order (data-dependent)
-    g.elementwise(f"{prefix}.combine", [f"{prefix}.ye", f"{prefix}.gates"],
-                  f"{prefix}.mlp_out", flops_per_elem=2 * k,
-                  out_shape=(tokens, d), irregular=True, spec="gather",
-                  out_kind=out_kind)
-    return f"{prefix}.mlp_out"
+    return b.elementwise(f"{prefix}.combine", [ye, gates],
+                         f"{prefix}.mlp_out", flops_per_elem=2 * k,
+                         out_shape=(tokens, d), irregular=True, spec="gather",
+                         out_kind=out_kind)
 
 
-def rglru_block(g: OpGraph, cfg: ArchConfig, prefix: str, x: str,
+def rglru_block(b: GraphBuilder, cfg: ArchConfig, prefix: str, x: str,
                 batch: int, seq: int) -> str:
     """RG-LRU recurrent block (recurrentgemma): gated linear recurrence."""
     d = cfg.d_model
-    b, s = batch, seq
-    for w in ("wx", "wgate", "wa", "wout"):
-        g.tensor(f"{prefix}.{w}", (d, d), kind=TensorKind.WEIGHT)
-    _set_flops(g, f"{prefix}.proj", [x, f"{prefix}.wx"], f"{prefix}.xb",
-               (b, s, d), 2 * b * s * d * d, BF16,
-               TensorKind.INTERMEDIATE, False)
-    _set_flops(g, f"{prefix}.gates", [x, f"{prefix}.wgate", f"{prefix}.wa"],
-               f"{prefix}.g", (b, s, 2 * d), 2 * b * s * d * 2 * d, BF16,
-               TensorKind.INTERMEDIATE, False)
+    bb, s = batch, seq
+    wx, wgate, wa, wout = b.weights(prefix, ("wx", "wgate", "wa", "wout"),
+                                    (d, d))
+    xb = b.contract(f"{prefix}.proj", [x, wx], f"{prefix}.xb",
+                    (bb, s, d), 2 * bb * s * d * d)
+    g = b.contract(f"{prefix}.gates", [x, wgate, wa], f"{prefix}.g",
+                   (bb, s, 2 * d), 2 * bb * s * d * 2 * d)
     # the recurrence itself: sequential along s => 'scan' op
-    op = g.elementwise(f"{prefix}.scan", [f"{prefix}.xb", f"{prefix}.g"],
-                       f"{prefix}.h", flops_per_elem=8, out_shape=(b, s, d),
-                       spec="scan")
-    _set_flops(g, f"{prefix}.out", [f"{prefix}.h", f"{prefix}.wout"],
-               f"{prefix}.rglru_out", (b, s, d), 2 * b * s * d * d, BF16,
-               TensorKind.INTERMEDIATE, False)
-    return f"{prefix}.rglru_out"
+    h = b.scan(f"{prefix}.scan", [xb, g], f"{prefix}.h",
+               (bb, s, d), flops_per_elem=8)
+    return b.contract(f"{prefix}.out", [h, wout], f"{prefix}.rglru_out",
+                      (bb, s, d), 2 * bb * s * d * d)
 
 
-def rwkv_block(g: OpGraph, cfg: ArchConfig, prefix: str, x: str,
+def rwkv_block(b: GraphBuilder, cfg: ArchConfig, prefix: str, x: str,
                batch: int, seq: int) -> str:
     """RWKV6 time-mix: r/k/v/g projections + WKV6 recurrence + output."""
     d = cfg.d_model
-    b, s = batch, seq
+    bb, s = batch, seq
     H, e = cfg.n_heads, cfg.resolved_head_dim
-    for w in ("wr", "wk", "wv", "wg", "wo", "ww"):
-        g.tensor(f"{prefix}.{w}", (d, d), kind=TensorKind.WEIGHT)
-    _set_flops(g, f"{prefix}.rkvg", [x, f"{prefix}.wr", f"{prefix}.wk",
-                                     f"{prefix}.wv", f"{prefix}.wg",
-                                     f"{prefix}.ww"],
-               f"{prefix}.rkvg_out", (b, s, 5 * d), 2 * b * s * d * 5 * d,
-               BF16, TensorKind.INTERMEDIATE, False)
+    wr, wk, wv, wg, wo, ww = b.weights(
+        prefix, ("wr", "wk", "wv", "wg", "wo", "ww"), (d, d))
+    rkvg = b.contract(f"{prefix}.rkvg", [x, wr, wk, wv, wg, ww],
+                      f"{prefix}.rkvg_out", (bb, s, 5 * d),
+                      2 * bb * s * d * 5 * d)
     # WKV6 recurrence: per head, state (e x e) updated per step
-    op = g.elementwise(f"{prefix}.wkv", [f"{prefix}.rkvg_out"],
-                       f"{prefix}.wkv_out", flops_per_elem=0,
-                       out_shape=(b, s, d), spec="scan")
-    op.flops = 2 * b * s * H * e * e * 4       # state update + readout
-    _set_flops(g, f"{prefix}.out", [f"{prefix}.wkv_out", f"{prefix}.wo"],
-               f"{prefix}.rwkv_out", (b, s, d), 2 * b * s * d * d, BF16,
-               TensorKind.INTERMEDIATE, False)
-    return f"{prefix}.rwkv_out"
+    wkv = b.scan(f"{prefix}.wkv", [rkvg], f"{prefix}.wkv_out",
+                 (bb, s, d), flops=2 * bb * s * H * e * e * 4)
+    return b.contract(f"{prefix}.out", [wkv, wo], f"{prefix}.rwkv_out",
+                      (bb, s, d), 2 * bb * s * d * d)
 
 
 def layer_graph(cfg: ArchConfig, batch: int, seq: int, *,
@@ -199,40 +165,40 @@ def layer_graph(cfg: ArchConfig, batch: int, seq: int, *,
     output feeds the next norm and the next residual add likewise.
     """
     kind = layer_kind or cfg.layer_kinds()[0]
-    g = OpGraph(f"{cfg.name}:{kind}:b{batch}s{seq}")
     d = cfg.d_model
     tokens = batch * seq
-    g.tensor("x", (batch, seq, d), kind=TensorKind.INPUT)
-    g.tensor("ln1.w", (d,), kind=TensorKind.WEIGHT)
-    g.tensor("ln2.w", (d,), kind=TensorKind.WEIGHT)
-    g.elementwise("ln1", ["x", "ln1.w"], "x_n1", flops_per_elem=6)
+    with OpGraph.build(f"{cfg.name}:{kind}:b{batch}s{seq}") as b:
+        x = b.input("x", (batch, seq, d))
+        ln1_w = b.weight("ln1.w", (d,))
+        ln2_w = b.weight("ln2.w", (d,))
+        x_n1 = b.elementwise("ln1", [x, ln1_w], "x_n1", flops_per_elem=6)
 
-    if kind == "attn":
-        y = attention_block(g, cfg, "attn", "x_n1", batch, seq, seq)
-    elif kind == "xattn":
-        g.tensor("img_kv", (batch, cfg.vision_seq, 2 * cfg.n_kv_heads *
-                            cfg.resolved_head_dim), kind=TensorKind.INPUT)
-        y = attention_block(g, cfg, "xattn", "x_n1", batch, seq,
-                            cfg.vision_seq, cross_kv="img_kv")
-    elif kind == "rglru":
-        y = rglru_block(g, cfg, "rglru", "x_n1", batch, seq)
-    elif kind == "rwkv":
-        y = rwkv_block(g, cfg, "rwkv", "x_n1", batch, seq)
-    else:
-        raise ValueError(kind)
+        if kind == "attn":
+            y = attention_block(b, cfg, "attn", x_n1, batch, seq, seq)
+        elif kind == "xattn":
+            img_kv = b.input("img_kv", (batch, cfg.vision_seq,
+                                        2 * cfg.n_kv_heads *
+                                        cfg.resolved_head_dim))
+            y = attention_block(b, cfg, "xattn", x_n1, batch, seq,
+                                cfg.vision_seq, cross_kv=img_kv)
+        elif kind == "rglru":
+            y = rglru_block(b, cfg, "rglru", x_n1, batch, seq)
+        elif kind == "rwkv":
+            y = rwkv_block(b, cfg, "rwkv", x_n1, batch, seq)
+        else:
+            raise ValueError(kind)
 
-    if include_residuals:
-        g.elementwise("res1", ["x", y], "x_mid", flops_per_elem=1)
-        src = "x_mid"
-    else:
-        src = y
-    g.elementwise("ln2", [src, "ln2.w"], "x_n2", flops_per_elem=6)
-    m = mlp_block(g, cfg, "mlp", "x_n2", tokens)
-    if include_residuals:
-        g.elementwise("res2", [src, m], "x_out", flops_per_elem=1,
-                      out_kind=TensorKind.OUTPUT, out_shape=(batch, seq, d))
-    g.validate()
-    return g
+        if include_residuals:
+            src = b.elementwise("res1", [x, y], "x_mid", flops_per_elem=1)
+        else:
+            src = y
+        x_n2 = b.elementwise("ln2", [src, ln2_w], "x_n2", flops_per_elem=6)
+        m = mlp_block(b, cfg, "mlp", x_n2, tokens)
+        if include_residuals:
+            b.elementwise("res2", [src, m], "x_out", flops_per_elem=1,
+                          out_kind=TensorKind.OUTPUT,
+                          out_shape=(batch, seq, d))
+    return b.graph
 
 
 def decode_graph(cfg: ArchConfig, batch: int, kv_len: int) -> OpGraph:
@@ -243,56 +209,50 @@ def decode_graph(cfg: ArchConfig, batch: int, kv_len: int) -> OpGraph:
     """
     kind = next((k for k in cfg.layer_kinds() if k in ("attn", "rwkv")),
                 cfg.layer_kinds()[0])
-    g = OpGraph(f"{cfg.name}:decode:b{batch}kv{kv_len}")
     d, h, kvh, e = (cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
                     cfg.resolved_head_dim)
-    b = batch
+    bb = batch
     z = kv_len if cfg.window is None else min(kv_len, cfg.window)
-    g.tensor("x", (b, 1, d), kind=TensorKind.INPUT)
-    g.tensor("ln1.w", (d,), kind=TensorKind.WEIGHT)
-    g.elementwise("ln1", ["x", "ln1.w"], "x_n1", flops_per_elem=6)
-    if kind == "rwkv":
-        g.tensor("state", (b, cfg.n_heads, e, e), dtype_bytes=F32,
-                 kind=TensorKind.INPUT)
-        for w in ("wr", "wk", "wv", "wo"):
-            g.tensor(f"t.{w}", (d, d), kind=TensorKind.WEIGHT)
-        _set_flops(g, "t.rkv", ["x_n1", "t.wr", "t.wk", "t.wv"], "t.rkv_out",
-                   (b, 1, 3 * d), 2 * b * d * 3 * d, BF16,
-                   TensorKind.INTERMEDIATE, False)
-        op = g.elementwise("t.wkv", ["t.rkv_out", "state"], "t.y",
-                           flops_per_elem=0, out_shape=(b, 1, d), spec="scan")
-        op.flops = 2 * b * cfg.n_heads * e * e * 4
-        g.elementwise("t.state_new", ["t.rkv_out", "state"], "state_out",
-                      flops_per_elem=2, out_shape=(b, cfg.n_heads, e, e),
-                      dtype_bytes=F32, out_kind=TensorKind.OUTPUT)
-        _set_flops(g, "t.o", ["t.y", "t.wo"], "attn_out", (b, 1, d),
-                   2 * b * d * d, BF16, TensorKind.INTERMEDIATE, False)
-        y = "attn_out"
-    else:
-        g.tensor("k_cache", (b, z, kvh, e), kind=TensorKind.INPUT)
-        g.tensor("v_cache", (b, z, kvh, e), kind=TensorKind.INPUT)
-        g.tensor("attn.wq", (d, h * e), kind=TensorKind.WEIGHT)
-        g.tensor("attn.wk", (d, kvh * e), kind=TensorKind.WEIGHT)
-        g.tensor("attn.wv", (d, kvh * e), kind=TensorKind.WEIGHT)
-        g.tensor("attn.wo", (h * e, d), kind=TensorKind.WEIGHT)
-        _set_flops(g, "attn.q", ["x_n1", "attn.wq"], "q", (b, 1, h, e),
-                   2 * b * d * h * e, BF16, TensorKind.INTERMEDIATE, False)
-        _set_flops(g, "attn.kv_new", ["x_n1", "attn.wk", "attn.wv"], "kv_new",
-                   (b, 1, 2 * kvh, e), 4 * b * d * kvh * e, BF16,
-                   TensorKind.OUTPUT, False)
-        _set_flops(g, "attn.scores", ["q", "k_cache"], "scores", (b, h, 1, z),
-                   2 * b * h * z * e, BF16, TensorKind.INTERMEDIATE, False)
-        g.elementwise("attn.softmax", ["scores"], "probs", flops_per_elem=5)
-        _set_flops(g, "attn.pv", ["probs", "v_cache"], "ctx", (b, 1, h, e),
-                   2 * b * h * z * e, BF16, TensorKind.INTERMEDIATE, False)
-        _set_flops(g, "attn.o", ["ctx", "attn.wo"], "attn_out", (b, 1, d),
-                   2 * b * h * e * d, BF16, TensorKind.INTERMEDIATE, False)
-        y = "attn_out"
-    g.elementwise("res1", ["x", y], "x_mid", flops_per_elem=1)
-    g.tensor("ln2.w", (d,), kind=TensorKind.WEIGHT)
-    g.elementwise("ln2", ["x_mid", "ln2.w"], "x_n2", flops_per_elem=6)
-    m = mlp_block(g, cfg, "mlp", "x_n2", b)
-    g.elementwise("res2", ["x_mid", m], "x_out", flops_per_elem=1,
-                  out_kind=TensorKind.OUTPUT, out_shape=(b, 1, d))
-    g.validate()
-    return g
+    with OpGraph.build(f"{cfg.name}:decode:b{batch}kv{kv_len}") as b:
+        x = b.input("x", (bb, 1, d))
+        ln1_w = b.weight("ln1.w", (d,))
+        x_n1 = b.elementwise("ln1", [x, ln1_w], "x_n1", flops_per_elem=6)
+        if kind == "rwkv":
+            state = b.input("state", (bb, cfg.n_heads, e, e), dtype_bytes=F32)
+            wr, wk, wv, wo = b.weights("t", ("wr", "wk", "wv", "wo"), (d, d))
+            rkv = b.contract("t.rkv", [x_n1, wr, wk, wv], "t.rkv_out",
+                             (bb, 1, 3 * d), 2 * bb * d * 3 * d)
+            ty = b.scan("t.wkv", [rkv, state], "t.y", (bb, 1, d),
+                        flops=2 * bb * cfg.n_heads * e * e * 4)
+            b.elementwise("t.state_new", [rkv, state], "state_out",
+                          flops_per_elem=2, out_shape=(bb, cfg.n_heads, e, e),
+                          dtype_bytes=F32, out_kind=TensorKind.OUTPUT)
+            y = b.contract("t.o", [ty, wo], "attn_out", (bb, 1, d),
+                           2 * bb * d * d)
+        else:
+            k_cache = b.input("k_cache", (bb, z, kvh, e))
+            v_cache = b.input("v_cache", (bb, z, kvh, e))
+            wq = b.weight("attn.wq", (d, h * e))
+            wk = b.weight("attn.wk", (d, kvh * e))
+            wv = b.weight("attn.wv", (d, kvh * e))
+            wo = b.weight("attn.wo", (h * e, d))
+            q = b.contract("attn.q", [x_n1, wq], "q", (bb, 1, h, e),
+                           2 * bb * d * h * e)
+            b.contract("attn.kv_new", [x_n1, wk, wv], "kv_new",
+                       (bb, 1, 2 * kvh, e), 4 * bb * d * kvh * e,
+                       out_kind=TensorKind.OUTPUT)
+            scores = b.contract("attn.scores", [q, k_cache], "scores",
+                                (bb, h, 1, z), 2 * bb * h * z * e)
+            probs = b.elementwise("attn.softmax", [scores], "probs",
+                                  flops_per_elem=5)
+            ctx = b.contract("attn.pv", [probs, v_cache], "ctx",
+                             (bb, 1, h, e), 2 * bb * h * z * e)
+            y = b.contract("attn.o", [ctx, wo], "attn_out", (bb, 1, d),
+                           2 * bb * h * e * d)
+        x_mid = b.elementwise("res1", [x, y], "x_mid", flops_per_elem=1)
+        ln2_w = b.weight("ln2.w", (d,))
+        x_n2 = b.elementwise("ln2", [x_mid, ln2_w], "x_n2", flops_per_elem=6)
+        m = mlp_block(b, cfg, "mlp", x_n2, bb)
+        b.elementwise("res2", [x_mid, m], "x_out", flops_per_elem=1,
+                      out_kind=TensorKind.OUTPUT, out_shape=(bb, 1, d))
+    return b.graph

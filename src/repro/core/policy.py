@@ -16,7 +16,8 @@ The co-design result (fusion groups + pins + buffer split) becomes:
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+import warnings
+from typing import Tuple
 
 import jax
 
@@ -91,9 +92,11 @@ def _pick_mlp_blocks(d_model: int, d_ff: int, explicit_bytes: int
     return best
 
 
-def plan_from_codesign(cfg: ArchConfig, result: CoDesignResult,
-                       seq: int = 4096, hw: HardwareModel = V5E) -> CelloPlan:
-    """Translate a CoDesignResult on the layer graph into an execution plan."""
+def lower_codesign(cfg: ArchConfig, result: CoDesignResult,
+                   seq: int = 4096, hw: HardwareModel = V5E) -> CelloPlan:
+    """Translate a CoDesignResult on the layer graph into an execution plan.
+
+    This is the lowering behind ``repro.api.Session.lower()``."""
     sched = result.best.schedule
     explicit = sched.config.explicit_bytes or hw.vmem_bytes // 2
 
@@ -131,6 +134,21 @@ def plan_from_codesign(cfg: ArchConfig, result: CoDesignResult,
         notes=(f"groups={len(sched.groups)} pins={len(sched.pins)} "
                f"speedup={result.speedup():.2f}x"),
     )
+
+
+def plan_from_codesign(cfg: ArchConfig, result: CoDesignResult,
+                       seq: int = 4096, hw: HardwareModel = V5E) -> CelloPlan:
+    """Deprecated alias of :func:`lower_codesign`.
+
+    .. deprecated:: 0.2
+       Use ``repro.api.Session(...).trace().analyze().codesign().lower()``
+       or :func:`lower_codesign` directly.  Produces identical plans.
+    """
+    warnings.warn(
+        "repro.core.plan_from_codesign() is deprecated; use "
+        "repro.api.Session(...).lower() or repro.core.policy.lower_codesign()",
+        DeprecationWarning, stacklevel=2)
+    return lower_codesign(cfg, result, seq=seq, hw=hw)
 
 
 def default_plan(cfg: ArchConfig, seq: int = 4096,

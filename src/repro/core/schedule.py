@@ -21,15 +21,14 @@ capacity explicit).
 from __future__ import annotations
 
 import dataclasses
-import itertools
+import warnings
 from typing import Dict, List, Optional, Sequence, Tuple
 
-from .buffer import BufferConfig, TrafficReport, sequential_groups, simulate
-from .costmodel import HardwareModel, Metrics, V5E, evaluate
+from .buffer import BufferConfig, TrafficReport
+from .costmodel import HardwareModel, Metrics, V5E
 from .graph import OpGraph, TensorKind
-from .reuse import ReuseAnalysis, analyze
+from .reuse import ReuseAnalysis
 
-_SPLITS = (0.0, 0.125, 0.25, 0.375, 0.5, 0.625, 0.75, 0.875, 1.0)
 _MIN_TILE_ROWS = 8          # TPU sublane granularity
 
 
@@ -200,103 +199,38 @@ def choose_pins(graph: OpGraph, groups: Sequence[Sequence[str]],
 
 
 # --------------------------------------------------------------------------
-# candidate orders
+# candidate orders (kept as a compatibility alias for the strategy registry)
 # --------------------------------------------------------------------------
 
 def candidate_orders(graph: OpGraph, max_orders: int = 64) -> List[List[str]]:
-    orders = [graph.topo_order()]
-    if len(graph.ops) <= 10:
-        for o in graph.all_topo_orders(limit=max_orders):
-            if o not in orders:
-                orders.append(o)
-    else:
-        # heuristic alternative: schedule consumers as late as possible
-        # (shrinks reuse distances of late-used tensors)
-        natural = graph.topo_order()
-        lazy = _lazy_order(graph, natural)
-        if lazy not in orders:
-            orders.append(lazy)
-    return orders[:max_orders]
-
-
-def _lazy_order(graph: OpGraph, natural: Sequence[str]) -> List[str]:
-    """ALAP-flavoured topological order."""
-    remaining = set(natural)
-    placed: List[str] = []
-    produced = {t.name for t in graph.tensors.values()
-                if t.kind in (TensorKind.INPUT, TensorKind.WEIGHT)}
-    natural = list(natural)
-    while remaining:
-        # among ready ops, prefer the one whose output is consumed soonest
-        ready = [o for o in natural
-                 if o in remaining
-                 and all(t in produced for t in graph.ops[o].inputs)]
-        def urgency(o: str) -> int:
-            t = graph.ops[o].output
-            for j, other in enumerate(natural):
-                if other in remaining and other != o and t in graph.ops[other].inputs:
-                    return j
-            return len(natural)
-        ready.sort(key=urgency)
-        pick = ready[0]
-        placed.append(pick)
-        remaining.discard(pick)
-        produced.add(graph.ops[pick].output)
-    return placed
+    """Deprecated alias: the 'default' strategy in ``core.search``."""
+    warnings.warn(
+        "repro.core.candidate_orders() is deprecated; use "
+        "repro.core.search.get_strategy('default').orders()",
+        DeprecationWarning, stacklevel=2)
+    from .search import get_strategy
+    return get_strategy("default").orders(graph, max_orders)
 
 
 # --------------------------------------------------------------------------
-# the co-design search
+# the co-design search (deprecated shim over the pass pipeline)
 # --------------------------------------------------------------------------
-
-def _evaluate_point(graph: OpGraph, order: List[str], split: float,
-                    capacity: int, hw: HardwareModel,
-                    last_use_invalidate: bool = True,
-                    fuse: bool = True, pin: bool = True) -> EvaluatedSchedule:
-    cfg = BufferConfig(capacity_bytes=capacity, explicit_frac=split,
-                       last_use_invalidate=last_use_invalidate)
-    groups = (build_groups(graph, order, cfg.explicit_bytes)
-              if fuse else sequential_groups(graph, order))
-    analysis = analyze(graph, order)
-    pins = (choose_pins(graph, groups, analysis, cfg.explicit_bytes)
-            if pin and cfg.explicit_bytes > 0 else {})
-    rep = simulate(graph, groups, cfg, pins)
-    met = evaluate(graph, groups, rep, hw)
-    return EvaluatedSchedule(Schedule(order, groups, pins, cfg), rep, met)
-
 
 def co_design(graph: OpGraph, *, capacity_bytes: Optional[int] = None,
               hw: HardwareModel = V5E, max_orders: int = 16
               ) -> CoDesignResult:
-    """Joint schedule × buffer-split search. Returns best + baselines."""
-    graph.validate()
-    capacity = capacity_bytes or hw.vmem_bytes
+    """Joint schedule × buffer-split search. Returns best + baselines.
 
-    best: Optional[EvaluatedSchedule] = None
-    split_sweep: Dict[float, Metrics] = {}
-    for order in candidate_orders(graph, max_orders):
-        for split in _SPLITS:
-            ev = _evaluate_point(graph, order, split, capacity, hw)
-            cur = split_sweep.get(split)
-            if cur is None or ev.metrics.time_s < cur.time_s:
-                split_sweep[split] = ev.metrics
-            if (best is None
-                    or (ev.metrics.time_s, ev.metrics.energy_j)
-                    < (best.metrics.time_s, best.metrics.energy_j)):
-                best = ev
-    assert best is not None
-
-    nat = graph.topo_order()
-    baselines = {
-        # plain cache, op-by-op, no hints — the "implicit-only" accelerator
-        "seq-implicit": _evaluate_point(graph, nat, 0.0, capacity, hw,
-                                        last_use_invalidate=False,
-                                        fuse=False, pin=False),
-        # scratchpad-only: pinning but no cache for the rest
-        "seq-explicit": _evaluate_point(graph, nat, 1.0, capacity, hw,
-                                        fuse=False, pin=True),
-        # fusion, all capacity explicit, no implicit region
-        "fused-only": _evaluate_point(graph, nat, 1.0, capacity, hw,
-                                      fuse=True, pin=True),
-    }
-    return CoDesignResult(best=best, baselines=baselines, split_sweep=split_sweep)
+    .. deprecated:: 0.2
+       Use :class:`repro.api.Session` (``Session(arch).trace().analyze()
+       .codesign()``) or :func:`repro.core.search.run_codesign`.  This shim
+       delegates to the pass pipeline and produces identical results.
+    """
+    warnings.warn(
+        "repro.core.co_design() is deprecated; use repro.api.Session "
+        "(staged trace/analyze/codesign/lower) or "
+        "repro.core.search.run_codesign()",
+        DeprecationWarning, stacklevel=2)
+    from .search import run_codesign
+    return run_codesign(graph, capacity_bytes=capacity_bytes, hw=hw,
+                        max_orders=max_orders)

@@ -1,0 +1,376 @@
+"""Composable pass pipeline for the CELLO co-design search.
+
+The joint schedule × buffer search is factored into a registry of passes run
+over a stream of candidate :class:`SearchPoint`\\ s:
+
+  ``OrderPass``      — expand one seed point into candidate topological
+                       orders, delegating to a pluggable
+                       :class:`SearchStrategy` (exhaustive / greedy / ALAP…),
+  ``SplitSweepPass`` — expand each order across explicit/implicit splits,
+  ``FusionPass``     — greedy maximal fusion chains per (order, split),
+  ``PinPass``        — reuse analysis + greedy pin selection,
+  ``EvaluatePass``   — hybrid-buffer simulation + speedup/energy model.
+
+:func:`run_codesign` streams points through the default pipeline and reduces
+them to a :class:`~repro.core.schedule.CoDesignResult`.  The enumeration
+order, tie-breaking, and per-point arithmetic are exactly those of the
+original monolithic ``schedule.co_design`` loop, so results are bit-identical
+— new strategies or passes plug in without perturbing the default search.
+
+New orderings register with :func:`register_strategy`; new passes with
+:func:`register_pass`.  ``repro.api`` re-exports this module's surface.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import (Dict, Iterable, Iterator, List, Optional, Sequence,
+                    Tuple, Type)
+
+from .buffer import BufferConfig, TrafficReport, sequential_groups, simulate
+from .costmodel import HardwareModel, Metrics, V5E, evaluate
+from .graph import OpGraph, TensorKind
+from .reuse import ReuseAnalysis, analyze
+
+DEFAULT_SPLITS = (0.0, 0.125, 0.25, 0.375, 0.5, 0.625, 0.75, 0.875, 1.0)
+
+
+# --------------------------------------------------------------------------
+# search state
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SearchPoint:
+    """One candidate design flowing through the pass pipeline."""
+    order: Optional[List[str]] = None
+    split: Optional[float] = None
+    config: Optional[BufferConfig] = None
+    groups: Optional[List[List[str]]] = None
+    analysis: Optional[ReuseAnalysis] = None
+    pins: Optional[Dict[str, Tuple[int, int]]] = None
+    report: Optional[TrafficReport] = None
+    metrics: Optional[Metrics] = None
+    # baseline knobs (the paper's ablations flow through the same pipeline)
+    fuse: bool = True
+    pin: bool = True
+    last_use_invalidate: bool = True
+
+
+@dataclasses.dataclass
+class SearchContext:
+    """Shared, read-only inputs plus per-run caches for the passes."""
+    graph: OpGraph
+    hw: HardwareModel = V5E
+    capacity_bytes: int = 0
+    max_orders: int = 16
+    splits: Sequence[float] = DEFAULT_SPLITS
+    # analyze(graph, order) is pure in (graph, order): cache it per order so
+    # the split sweep doesn't recompute the same reuse analysis nine times.
+    _analysis_cache: Dict[Tuple[str, ...], ReuseAnalysis] = \
+        dataclasses.field(default_factory=dict)
+
+    def analysis_for(self, order: Sequence[str]) -> ReuseAnalysis:
+        key = tuple(order)
+        hit = self._analysis_cache.get(key)
+        if hit is None:
+            hit = self._analysis_cache[key] = analyze(self.graph, list(order))
+        return hit
+
+
+# --------------------------------------------------------------------------
+# ordering strategies (pluggable)
+# --------------------------------------------------------------------------
+
+class SearchStrategy:
+    """Protocol: produce candidate topological orders for the search."""
+    name: str = "base"
+
+    def orders(self, graph: OpGraph, max_orders: int) -> List[List[str]]:
+        raise NotImplementedError
+
+
+STRATEGY_REGISTRY: Dict[str, SearchStrategy] = {}
+
+
+def register_strategy(strategy) -> SearchStrategy:
+    """Register a strategy instance (or class, instantiated with no args)."""
+    inst = strategy() if isinstance(strategy, type) else strategy
+    STRATEGY_REGISTRY[inst.name] = inst
+    return strategy
+
+
+def get_strategy(name_or_obj) -> SearchStrategy:
+    if isinstance(name_or_obj, str):
+        if name_or_obj not in STRATEGY_REGISTRY:
+            raise KeyError(f"unknown search strategy {name_or_obj!r}; "
+                           f"have {sorted(STRATEGY_REGISTRY)}")
+        return STRATEGY_REGISTRY[name_or_obj]
+    if isinstance(name_or_obj, type):    # mirror register_strategy: a bare
+        return name_or_obj()             # class is instantiated with no args
+    return name_or_obj
+
+
+def _lazy_order(graph: OpGraph, natural: Sequence[str]) -> List[str]:
+    """ALAP-flavoured topological order: among ready ops, prefer the one
+    whose output is consumed soonest (shrinks late-use reuse distances)."""
+    remaining = set(natural)
+    placed: List[str] = []
+    produced = {t.name for t in graph.tensors.values()
+                if t.kind in (TensorKind.INPUT, TensorKind.WEIGHT)}
+    natural = list(natural)
+    while remaining:
+        ready = [o for o in natural
+                 if o in remaining
+                 and all(t in produced for t in graph.ops[o].inputs)]
+
+        def urgency(o: str) -> int:
+            t = graph.ops[o].output
+            for j, other in enumerate(natural):
+                if other in remaining and other != o and t in graph.ops[other].inputs:
+                    return j
+            return len(natural)
+        ready.sort(key=urgency)
+        pick = ready[0]
+        placed.append(pick)
+        remaining.discard(pick)
+        produced.add(graph.ops[pick].output)
+    return placed
+
+
+@register_strategy
+class DefaultStrategy(SearchStrategy):
+    """The paper's search: exhaustive for small DAGs (≤10 ops), natural +
+    ALAP heuristic otherwise."""
+    name = "default"
+
+    def orders(self, graph: OpGraph, max_orders: int) -> List[List[str]]:
+        orders = [graph.topo_order()]
+        if len(graph.ops) <= 10:
+            for o in graph.all_topo_orders(limit=max_orders):
+                if o not in orders:
+                    orders.append(o)
+        else:
+            lazy = _lazy_order(graph, graph.topo_order())
+            if lazy not in orders:
+                orders.append(lazy)
+        return orders[:max_orders]
+
+
+@register_strategy
+class ExhaustiveStrategy(SearchStrategy):
+    """Enumerate topological orders up to ``max_orders`` regardless of size."""
+    name = "exhaustive"
+
+    def orders(self, graph: OpGraph, max_orders: int) -> List[List[str]]:
+        orders = [graph.topo_order()]
+        for o in graph.all_topo_orders(limit=max_orders):
+            if o not in orders:
+                orders.append(o)
+        return orders[:max_orders]
+
+
+@register_strategy
+class GreedyStrategy(SearchStrategy):
+    """Construction (natural) order only — the cheapest search."""
+    name = "greedy"
+
+    def orders(self, graph: OpGraph, max_orders: int) -> List[List[str]]:
+        return [graph.topo_order()]
+
+
+@register_strategy
+class AlapStrategy(SearchStrategy):
+    """Natural + ALAP orders only (skip exhaustive enumeration)."""
+    name = "alap"
+
+    def orders(self, graph: OpGraph, max_orders: int) -> List[List[str]]:
+        orders = [graph.topo_order()]
+        lazy = _lazy_order(graph, graph.topo_order())
+        if lazy not in orders:
+            orders.append(lazy)
+        return orders[:max_orders]
+
+
+# --------------------------------------------------------------------------
+# passes (composable; registered by name)
+# --------------------------------------------------------------------------
+
+class Pass:
+    """Protocol: transform/expand a stream of search points."""
+    name: str = "base"
+
+    def run(self, ctx: SearchContext,
+            points: Iterable[SearchPoint]) -> Iterator[SearchPoint]:
+        raise NotImplementedError
+
+
+PASS_REGISTRY: Dict[str, Type[Pass]] = {}
+
+
+def register_pass(cls: Type[Pass]) -> Type[Pass]:
+    PASS_REGISTRY[cls.name] = cls
+    return cls
+
+
+@register_pass
+class OrderPass(Pass):
+    """Expand each seed point into one point per candidate order."""
+    name = "order"
+
+    def __init__(self, strategy="default"):
+        self.strategy = get_strategy(strategy)
+
+    def run(self, ctx, points):
+        for pt in points:
+            for order in self.strategy.orders(ctx.graph, ctx.max_orders):
+                yield dataclasses.replace(pt, order=order)
+
+
+@register_pass
+class SplitSweepPass(Pass):
+    """Expand each point across the explicit/implicit split grid."""
+    name = "split-sweep"
+
+    def __init__(self, splits: Optional[Sequence[float]] = None):
+        self.splits = splits
+
+    def run(self, ctx, points):
+        splits = self.splits if self.splits is not None else ctx.splits
+        for pt in points:
+            for split in splits:
+                cfg = BufferConfig(
+                    capacity_bytes=ctx.capacity_bytes, explicit_frac=split,
+                    last_use_invalidate=pt.last_use_invalidate)
+                yield dataclasses.replace(pt, split=split, config=cfg)
+
+
+@register_pass
+class FusionPass(Pass):
+    """Greedy maximal fusion chains along the order (or op-by-op when the
+    point is a no-fusion baseline)."""
+    name = "fusion"
+
+    def run(self, ctx, points):
+        from .schedule import build_groups     # late: avoid import cycle
+        for pt in points:
+            groups = (build_groups(ctx.graph, pt.order,
+                                   pt.config.explicit_bytes)
+                      if pt.fuse else sequential_groups(ctx.graph, pt.order))
+            yield dataclasses.replace(pt, groups=groups)
+
+
+@register_pass
+class PinPass(Pass):
+    """Reuse analysis + greedy explicit-region pin selection."""
+    name = "pin"
+
+    def run(self, ctx, points):
+        from .schedule import choose_pins      # late: avoid import cycle
+        for pt in points:
+            if pt.pin and pt.config.explicit_bytes > 0:
+                analysis = ctx.analysis_for(pt.order)
+                pins = choose_pins(ctx.graph, pt.groups, analysis,
+                                   pt.config.explicit_bytes)
+            else:
+                analysis, pins = None, {}
+            yield dataclasses.replace(pt, analysis=analysis, pins=pins)
+
+
+@register_pass
+class EvaluatePass(Pass):
+    """Hybrid-buffer simulation + roofline/energy scoring."""
+    name = "evaluate"
+
+    def run(self, ctx, points):
+        for pt in points:
+            rep = simulate(ctx.graph, pt.groups, pt.config, pt.pins)
+            met = evaluate(ctx.graph, pt.groups, rep, ctx.hw)
+            yield dataclasses.replace(pt, report=rep, metrics=met)
+
+
+def default_pipeline(strategy="default",
+                     splits: Optional[Sequence[float]] = None) -> List[Pass]:
+    return [OrderPass(strategy), SplitSweepPass(splits), FusionPass(),
+            PinPass(), EvaluatePass()]
+
+
+def run_pipeline(ctx: SearchContext, passes: Sequence[Pass],
+                 seed: Optional[SearchPoint] = None) -> Iterator[SearchPoint]:
+    points: Iterable[SearchPoint] = iter([seed or SearchPoint()])
+    for p in passes:
+        points = p.run(ctx, points)
+    return iter(points)
+
+
+# --------------------------------------------------------------------------
+# the co-design driver
+# --------------------------------------------------------------------------
+
+def _to_evaluated(pt: SearchPoint):
+    from .schedule import EvaluatedSchedule, Schedule
+    return EvaluatedSchedule(
+        Schedule(pt.order, pt.groups, pt.pins, pt.config), pt.report,
+        pt.metrics)
+
+
+def evaluate_point(ctx: SearchContext, order: List[str], split: float, *,
+                   last_use_invalidate: bool = True, fuse: bool = True,
+                   pin: bool = True):
+    """Score a single (order, split, knobs) design point."""
+    seed = SearchPoint(order=order, fuse=fuse, pin=pin,
+                       last_use_invalidate=last_use_invalidate)
+    passes = [SplitSweepPass([split]), FusionPass(), PinPass(),
+              EvaluatePass()]
+    return _to_evaluated(next(run_pipeline(ctx, passes, seed)))
+
+
+def run_codesign(graph: OpGraph, *, capacity_bytes: Optional[int] = None,
+                 hw: HardwareModel = V5E, max_orders: int = 16,
+                 strategy="default",
+                 splits: Sequence[float] = DEFAULT_SPLITS,
+                 natural_analysis: Optional[ReuseAnalysis] = None):
+    """Joint schedule × buffer-split search. Returns best + baselines.
+
+    The engine behind the deprecated ``schedule.co_design`` and the staged
+    ``repro.api.Session.codesign`` stage.  ``natural_analysis`` (from a
+    prior analyze() stage) pre-seeds the per-order analysis cache — analyze
+    is pure in (graph, order), so seeding cannot change results.
+    """
+    from .schedule import CoDesignResult
+    graph.validate()
+    splits = list(splits)    # normalize once: a one-shot iterable must not
+    if not splits:           # be consumed by the guard before the sweep
+        raise ValueError("splits must be a non-empty sequence of fractions")
+    ctx = SearchContext(graph=graph, hw=hw,
+                        capacity_bytes=capacity_bytes or hw.vmem_bytes,
+                        max_orders=max_orders, splits=splits)
+    if natural_analysis is not None:
+        ctx._analysis_cache[tuple(natural_analysis.order)] = natural_analysis
+
+    best: Optional[SearchPoint] = None
+    split_sweep: Dict[float, Metrics] = {}
+    for pt in run_pipeline(ctx, default_pipeline(strategy, splits)):
+        cur = split_sweep.get(pt.split)
+        if cur is None or pt.metrics.time_s < cur.time_s:
+            split_sweep[pt.split] = pt.metrics
+        if (best is None
+                or (pt.metrics.time_s, pt.metrics.energy_j)
+                < (best.metrics.time_s, best.metrics.energy_j)):
+            best = pt
+    if best is None:    # a custom strategy returned no candidate orders
+        raise ValueError(f"search produced no candidates: strategy "
+                         f"{get_strategy(strategy).name!r} yielded no "
+                         "orders for this graph")
+
+    nat = graph.topo_order()
+    baselines = {
+        # plain cache, op-by-op, no hints — the "implicit-only" accelerator
+        "seq-implicit": evaluate_point(ctx, nat, 0.0,
+                                       last_use_invalidate=False,
+                                       fuse=False, pin=False),
+        # scratchpad-only: pinning but no cache for the rest
+        "seq-explicit": evaluate_point(ctx, nat, 1.0, fuse=False, pin=True),
+        # fusion, all capacity explicit, no implicit region
+        "fused-only": evaluate_point(ctx, nat, 1.0, fuse=True, pin=True),
+    }
+    return CoDesignResult(best=_to_evaluated(best), baselines=baselines,
+                          split_sweep=split_sweep)

@@ -1,0 +1,11 @@
+"""Version compatibility for Pallas TPU symbols.
+
+`pltpu.TPUCompilerParams` was renamed to `pltpu.CompilerParams` in newer
+JAX releases; resolve whichever this installation provides.
+"""
+from jax.experimental.pallas import tpu as _pltpu
+
+CompilerParams = getattr(_pltpu, "CompilerParams", None) or \
+    _pltpu.TPUCompilerParams
+
+__all__ = ["CompilerParams"]

@@ -39,9 +39,10 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from ..api import Session
 from ..configs import SHAPES, get_config, list_archs
 from ..configs.base import ArchConfig, ShapeSpec
-from ..core.policy import CelloPlan, default_plan
+from ..core.policy import CelloPlan
 from ..models import decode_step, forward, set_mesh_context
 from ..optim import AdamWConfig, adamw_init
 from . import shardings as shd
@@ -52,7 +53,7 @@ from .train import TrainConfig, jit_train_step
 
 def _plan_for(cfg: ArchConfig, shape: ShapeSpec, attention: str,
               ) -> CelloPlan:
-    plan = default_plan(cfg, seq=shape.seq_len)
+    plan = Session(cfg).default_plan(seq=shape.seq_len).plan
     if attention == "naive":
         plan = dataclasses.replace(plan, use_flash_attention=False,
                                    use_fused_mlp=False,

@@ -2,7 +2,8 @@
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional, Tuple
+import functools
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
@@ -52,15 +53,19 @@ def jit_decode_step(cfg: ArchConfig, plan: CelloPlan, mesh: Mesh,
 
 def greedy_generate(params, cfg: ArchConfig, plan: CelloPlan,
                     prompt: jnp.ndarray, n_new: int,
-                    cache_len: Optional[int] = None) -> jnp.ndarray:
+                    cache_len: Optional[int] = None, *,
+                    step_fn=None) -> jnp.ndarray:
     """Batched greedy decoding (CPU-scale driver for examples/tests).
 
-    prompt: (B, P) int32.  Returns (B, P + n_new).
+    prompt: (B, P) int32.  Returns (B, P + n_new).  ``step_fn`` lets a
+    caller supply an already-jitted decode step (stable across calls);
+    otherwise one is built and jitted fresh here.
     """
     B, Plen = prompt.shape
     Z = cache_len or (Plen + n_new)
     cache = init_cache(cfg, B, Z)
-    step = jax.jit(make_decode_fn(cfg, plan))
+    step = step_fn if step_fn is not None else \
+        jax.jit(make_decode_fn(cfg, plan))
     toks = prompt
     # feed the prompt token-by-token (simple driver; a production server
     # would run a batched prefill and hand the cache to decode)
@@ -74,6 +79,50 @@ def greedy_generate(params, cfg: ArchConfig, plan: CelloPlan,
             logits, cache = step(params, cache, nxt,
                                  jnp.int32(Plen + t))
     return toks
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeBundle:
+    """Serving entry points bound to one (cfg, plan) pair.
+
+    Produced by ``repro.api.CompiledPlan.serve()`` — the Session-era way to
+    reach the serving stack; the ``make_*_fn`` helpers above remain for
+    callers that already hold a plan.
+    """
+    cfg: ArchConfig
+    plan: CelloPlan
+    unroll: bool = False
+
+    # cached: stable function identity, so jax.jit(bundle.decode_fn) hits
+    # its trace cache instead of recompiling per access
+    @functools.cached_property
+    def prefill_fn(self):
+        return make_prefill_fn(self.cfg, self.plan, unroll=self.unroll)
+
+    @functools.cached_property
+    def decode_fn(self):
+        return make_decode_fn(self.cfg, self.plan, unroll=self.unroll)
+
+    def jit_decode(self, mesh: Mesh, batch: int, seq_len: int):
+        return jit_decode_step(self.cfg, self.plan, mesh, batch, seq_len,
+                               unroll=self.unroll)
+
+    @functools.cached_property
+    def _jitted_decode_fn(self):
+        return jax.jit(self.decode_fn)
+
+    def generate(self, params, prompt: jnp.ndarray, n_new: int,
+                 cache_len: Optional[int] = None) -> jnp.ndarray:
+        # drive the bundle's own (unroll-respecting) decode step; the jitted
+        # wrapper is cached so repeat generate() calls reuse its trace cache
+        return greedy_generate(params, self.cfg, self.plan, prompt, n_new,
+                               cache_len=cache_len,
+                               step_fn=self._jitted_decode_fn)
+
+
+def make_serving(cfg: ArchConfig, plan: CelloPlan, *,
+                 unroll: bool = False) -> ServeBundle:
+    return ServeBundle(cfg=cfg, plan=plan, unroll=unroll)
 
 
 @dataclasses.dataclass

@@ -15,7 +15,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from ..configs.base import ArchConfig, SHAPES, ShapeSpec
+from ..configs.base import ArchConfig, ShapeSpec
 from ..models import (cache_pspecs, init_cache, init_params, param_pspecs)
 from ..models.common import COMPUTE_DTYPE
 

@@ -5,9 +5,8 @@ fault-tolerant driver used by the examples.
 from __future__ import annotations
 
 import dataclasses
-import functools
 import time
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp

@@ -21,7 +21,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from .common import COMPUTE_DTYPE
+
 
 NEG_INF = -1e30
 

@@ -14,7 +14,7 @@ device run the exact same model code.
 from __future__ import annotations
 
 import threading
-from typing import Optional, Sequence, Tuple, Union
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

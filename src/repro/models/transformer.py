@@ -28,7 +28,7 @@ import jax.numpy as jnp
 
 from ..configs.base import ArchConfig
 from ..core.policy import CelloPlan
-from .attention import (chunked_flash_attention, decode_attention,
+from .attention import (chunked_flash_attention,
                         naive_attention, pallas_attention)
 from .common import (COMPUTE_DTYPE, PARAM_DTYPE, activation_fn, apply_rope,
                      constrain, is_gated, rms_norm, tag)

@@ -13,8 +13,7 @@ is what ZeRO stage 1 means.
 from __future__ import annotations
 
 import dataclasses
-import math
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -1,0 +1,35 @@
+"""Shared test helpers: the optional-hypothesis shim.
+
+`hypothesis` is an optional test dependency (the `test` extra installs it).
+When present, `given`/`settings`/`st` below are the real thing; when absent,
+`@given(...)` replaces the test body with a skip stub so property tests
+report as skipped instead of failing at collection.  Test modules import
+these names from here instead of each carrying its own try/except copy.
+"""
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+except ImportError:
+    import pytest
+
+    class _AnyStrategy:
+        """Accepts any ``st.<name>(...)`` call; the values are never used
+        because ``given`` skips the test before they would be drawn."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _AnyStrategy()
+
+    def settings(*_a, **_k):
+        return lambda fn: fn
+
+    def given(*_a, **_k):
+        def deco(fn):
+            # varargs signature: pytest must not treat the hypothesis
+            # parameters as fixture requests
+            def _skipped(*args, **kwargs):
+                pytest.skip("hypothesis not installed")
+            _skipped.__name__ = fn.__name__
+            _skipped.__doc__ = fn.__doc__
+            return _skipped
+        return deco

@@ -1,0 +1,277 @@
+"""End-to-end tests for the staged `repro.api.Session` pipeline.
+
+The golden values below were captured from the pre-refactor monolithic
+`co_design` loop; the pass-pipeline engine and the Session front-end must
+reproduce them bit-for-bit (same enumeration order, same arithmetic), and
+the disk cache must round-trip them exactly.
+"""
+import warnings
+
+import pytest
+
+from repro.api import (CodesignCache, CompiledPlan, Session, STRATEGY_REGISTRY,
+                       get_strategy, run_codesign)
+from repro.configs import get_config
+from repro.core import OpGraph, TensorKind
+from repro.core.lowering import decode_graph, layer_graph
+from repro.core.policy import lower_codesign
+
+# (arch, phase) -> (speedup, energy_ratio, time_s, energy_j, hbm_bytes)
+# captured from the pre-refactor co_design on these exact shapes
+GOLDEN = {
+    ("gemma-7b", "decode"): (
+        1.003349618286212, 1.0030440092922006,
+        0.0013318201514041514, 0.0451301392384, 1090760704),
+    ("gemma-7b", "prefill"): (
+        1.2486041886321035, 1.26697404526524,
+        0.02863717476840609, 1.7330852265983998, 654323712),
+    ("gemma-7b", "train"): (
+        1.0940315833173384, 1.0826967299077987,
+        0.00593242783577665, 0.3751184891903999, 578826240),
+    ("granite-3-8b", "decode"): (
+        1.0100083018171757, 1.0095089920227445,
+        0.0006506188424908424, 0.022433469235199996, 532856832),
+    ("granite-3-8b", "prefill"): (
+        1.7465935562072885, 1.5494505829857115,
+        0.022209712606213197, 1.35723548672, 532692992),
+    ("granite-3-8b", "train"): (
+        1.121831113680173, 1.0812296777215522,
+        0.004319600847918782, 0.2738933202944, 432029696),
+}
+
+SHAPES = {
+    "decode": dict(batch=8, kv_len=4096),
+    "prefill": dict(batch=1, seq=8192),
+    "train": dict(batch=2, seq=1024),
+}
+
+
+@pytest.fixture(autouse=True)
+def _hermetic_cache_env(monkeypatch):
+    """The suite must behave the same whether or not the operator has the
+    CELLO_NO_CACHE kill-switch or a custom cache dir exported."""
+    monkeypatch.delenv("CELLO_NO_CACHE", raising=False)
+    monkeypatch.delenv("CELLO_CACHE_DIR", raising=False)
+
+
+def _measure(designed):
+    m = designed.best.metrics
+    return (designed.speedup(), designed.energy_ratio(),
+            m.time_s, m.energy_j, m.hbm_bytes)
+
+
+# ---------------------------------------------------------------------------
+# golden end-to-end Session runs
+# ---------------------------------------------------------------------------
+
+class TestSessionGolden:
+    @pytest.mark.parametrize("arch,phase", sorted(GOLDEN))
+    def test_stage_pipeline_matches_pre_refactor(self, arch, phase, tmp_path):
+        sess = Session(arch, cache_dir=tmp_path)
+        designed = (sess.trace(phase=phase, **SHAPES[phase])
+                    .analyze().codesign())
+        assert not designed.from_cache
+        assert _measure(designed) == GOLDEN[(arch, phase)]
+
+    def test_cache_hit_is_bit_identical(self, tmp_path):
+        sess = Session("gemma_7b", cache_dir=tmp_path)
+        traced = sess.trace(phase="decode", **SHAPES["decode"])
+        fresh = traced.codesign()
+        cached = Session("gemma_7b", cache_dir=tmp_path).trace(
+            phase="decode", **SHAPES["decode"]).codesign()
+        assert cached.from_cache
+        assert _measure(cached) == _measure(fresh) == \
+            GOLDEN[("gemma-7b", "decode")]
+        assert cached.best.schedule.pins == fresh.best.schedule.pins
+        assert cached.best.schedule.groups == fresh.best.schedule.groups
+        assert cached.split_sweep == fresh.split_sweep
+        # lowering from a cache hit yields the identical plan
+        assert cached.lower().plan == fresh.lower().plan
+
+    def test_underscore_arch_alias(self, tmp_path):
+        a = Session("gemma_7b", cache_dir=tmp_path)
+        b = Session("gemma-7b", cache_dir=tmp_path)
+        assert a.cfg is b.cfg
+        # dotted registry names round-trip from identifier spellings too
+        assert Session("llama_3_2_vision_11b").cfg.name == \
+            "llama-3.2-vision-11b"
+        assert Session("h2o_danube_1_8b").cfg.name == "h2o-danube-1.8b"
+        with pytest.raises(KeyError):
+            Session("gpt5_colossal")
+
+    def test_wrong_shape_kwarg_for_phase_raises(self, tmp_path):
+        sess = Session("gemma-7b", cache_dir=tmp_path)
+        with pytest.raises(ValueError, match="kv_len"):
+            sess.trace(phase="decode", batch=8, seq=1024)
+        with pytest.raises(ValueError, match="seq"):
+            sess.trace(phase="train", batch=2, kv_len=4096)
+
+    def test_compile_one_shot(self, tmp_path):
+        plan = Session("granite-3-8b", cache_dir=tmp_path).compile(
+            phase="train", **SHAPES["train"])
+        assert isinstance(plan, CompiledPlan)
+        assert plan.codesigned is not None
+        rep = plan.report()
+        assert rep["speedup_vs_implicit"] == GOLDEN[("granite-3-8b",
+                                                     "train")][0]
+        text = plan.explain()
+        assert "buffer split" in text and "remat save-set" in text
+
+
+# ---------------------------------------------------------------------------
+# deprecated shims must produce identical results
+# ---------------------------------------------------------------------------
+
+class TestDeprecatedShims:
+    def test_co_design_shim_identical_and_warns(self, tmp_path):
+        cfg = get_config("gemma-7b")
+        g = decode_graph(cfg, **{"batch": 8, "kv_len": 4096})
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            from repro.core import co_design
+            old = co_design(g)
+        assert any(issubclass(x.category, DeprecationWarning) for x in w)
+        new = Session("gemma-7b", cache_dir=tmp_path).trace(
+            phase="decode", **SHAPES["decode"]).codesign()
+        assert old.speedup() == new.speedup()
+        assert old.energy_ratio() == new.energy_ratio()
+        assert old.best.metrics == new.best.metrics
+        assert old.best.schedule.pins == new.best.schedule.pins
+
+    def test_plan_from_codesign_shim_identical_and_warns(self, tmp_path):
+        cfg = get_config("granite-3-8b")
+        sess = Session(cfg, cache_dir=tmp_path)
+        designed = sess.trace(phase="prefill", **SHAPES["prefill"]) \
+            .analyze().codesign()
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            from repro.core import plan_from_codesign
+            old_plan = plan_from_codesign(cfg, designed.result, seq=8192)
+        assert any(issubclass(x.category, DeprecationWarning) for x in w)
+        assert old_plan == designed.lower(seq=8192).plan
+        assert old_plan == lower_codesign(cfg, designed.result, seq=8192)
+
+
+# ---------------------------------------------------------------------------
+# pass / strategy registries
+# ---------------------------------------------------------------------------
+
+class TestStrategies:
+    def test_registry_has_builtins(self):
+        for name in ("default", "exhaustive", "greedy", "alap"):
+            assert name in STRATEGY_REGISTRY
+            assert get_strategy(name).name == name
+
+    def test_unknown_strategy_raises(self):
+        with pytest.raises(KeyError):
+            get_strategy("simulated-annealing")
+
+    def test_greedy_subset_of_default(self, tmp_path):
+        sess = Session("gemma-7b", cache_dir=tmp_path)
+        a = sess.trace(phase="train", **SHAPES["train"]).analyze()
+        default = a.codesign(strategy="default")
+        greedy = a.codesign(strategy="greedy")
+        # greedy explores a subset of orders: can never beat the default
+        assert greedy.best.metrics.time_s >= default.best.metrics.time_s
+        assert greedy.strategy == "greedy"
+
+    def test_strategies_cache_separately(self, tmp_path):
+        sess = Session("gemma-7b", cache_dir=tmp_path)
+        a = sess.trace(phase="train", **SHAPES["train"]).analyze()
+        a.codesign(strategy="default")
+        greedy = a.codesign(strategy="greedy")
+        assert not greedy.from_cache      # different key: no aliasing
+
+
+# ---------------------------------------------------------------------------
+# graph indices + builder
+# ---------------------------------------------------------------------------
+
+class TestGraphBuilder:
+    def test_build_context_manager_validates(self):
+        with OpGraph.build("t") as b:
+            x = b.input("x", (8, 8))
+            w = b.weight("w", (8, 8))
+            y = b.einsum("mm", "mk,kn->mn", [x, w], "y",
+                         out_kind=TensorKind.OUTPUT)
+        g = b.graph
+        assert y == "y" and g.producer("y").name == "mm"
+        assert [op.name for op in g.consumers("x")] == ["mm"]
+
+    def test_producer_consumer_indices_match_scan(self):
+        g = layer_graph(get_config("gemma-7b"), 2, 256)
+        for t in g.tensors:
+            scan_prod = next((op for op in g.ops.values()
+                              if op.output == t), None)
+            scan_cons = [op for op in g.ops.values() if t in op.inputs]
+            assert g.producer(t) is scan_prod
+            assert g.consumers(t) == scan_cons
+
+    def test_consumers_copy_is_isolated(self):
+        g = layer_graph(get_config("gemma-7b"), 2, 256)
+        got = g.consumers("x")
+        got.clear()
+        assert g.consumers("x")           # internal index untouched
+
+
+# ---------------------------------------------------------------------------
+# cache robustness
+# ---------------------------------------------------------------------------
+
+class TestCache:
+    def test_corrupt_entry_is_a_miss(self, tmp_path):
+        sess = Session("gemma-7b", cache_dir=tmp_path)
+        traced = sess.trace(phase="decode", **SHAPES["decode"])
+        traced.codesign()
+        for f in tmp_path.glob("*.json"):
+            f.write_text("{not json")
+        again = traced.codesign()
+        assert not again.from_cache
+        assert _measure(again) == GOLDEN[("gemma-7b", "decode")]
+
+    def test_capacity_changes_key(self, tmp_path):
+        sess = Session("gemma-7b", cache_dir=tmp_path)
+        traced = sess.trace(phase="decode", **SHAPES["decode"])
+        traced.codesign()
+        other = traced.codesign(capacity_bytes=64 * (1 << 20))
+        assert not other.from_cache
+
+    def test_run_codesign_direct_matches(self, tmp_path):
+        g = layer_graph(get_config("gemma-7b"), 2, 1024)
+        res = run_codesign(g)
+        assert (res.speedup(), res.energy_ratio()) == \
+            GOLDEN[("gemma-7b", "train")][:2]
+        cache = CodesignCache(tmp_path)
+        cache.put("k", res)
+        back = cache.get("k")
+        assert back.speedup() == res.speedup()
+        assert back.split_sweep == res.split_sweep
+
+
+# ---------------------------------------------------------------------------
+# execution integration (CPU-scale reduced config)
+# ---------------------------------------------------------------------------
+
+class TestCompiledPlanExecution:
+    def test_serve_bundle_generates(self):
+        import jax
+        import jax.numpy as jnp
+        from repro.models import init_params
+        cfg = get_config("granite-3-8b").reduced()
+        compiled = Session(cfg).default_plan(seq=8)
+        bundle = compiled.serve()
+        # stable identity: jax.jit(bundle.decode_fn) must hit its cache
+        assert bundle.decode_fn is bundle.decode_fn
+        assert bundle.prefill_fn is bundle.prefill_fn
+        params = init_params(jax.random.PRNGKey(0), cfg)
+        prompt = jnp.zeros((1, 2), jnp.int32)
+        out = bundle.generate(params, prompt, n_new=2)
+        assert out.shape == (1, 4)
+
+    def test_default_plan_report_and_explain(self):
+        compiled = Session("granite-3-8b").default_plan(seq=4096)
+        assert compiled.codesigned is None
+        rep = compiled.report()
+        assert rep["arch"] == "granite-3-8b"
+        assert "speedup_vs_implicit" not in rep
+        assert "default plan" in compiled.explain()

@@ -1,12 +1,10 @@
 """Assignment-table conformance for the 10 configs + launch-layer units."""
-import jax
-import jax.numpy as jnp
 import pytest
 
 from repro.configs import SHAPES, get_config, list_archs
-from repro.configs.base import ArchConfig
+
 from repro.launch.mesh import make_local_mesh
-from repro.launch.roofline import (ICI_BW, PEAK_FLOPS, model_flops, roofline)
+from repro.launch.roofline import model_flops, roofline
 
 # (family, L, d_model, H, KV, d_ff, vocab) — verbatim from the assignment
 ASSIGNED = {

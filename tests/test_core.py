@@ -1,12 +1,12 @@
 """Unit tests for the CELLO core: graph IR, reuse analysis, hybrid buffer,
 co-design search, cost model, and policy lowering."""
-import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from conftest import given, settings, st
 
 from repro.core import (BufferConfig, OpGraph, TensorKind, analyze,
-                        build_groups, co_design, evaluate, layer_graph,
+                        build_groups, co_design, layer_graph,
                         decode_graph, plan_from_codesign, default_plan,
                         sequential_groups, simulate, V5E)
 from repro.core.buffer import MiB

@@ -1,7 +1,6 @@
 """End-to-end integration: training convergence, checkpoint-restart
 equivalence, serving, fault-tolerant driver, dry-run pipeline in-process."""
 import json
-import os
 import subprocess
 import sys
 
@@ -15,9 +14,9 @@ from repro.configs import get_config
 from repro.core.policy import default_plan
 from repro.data import DataConfig, SyntheticLMData
 from repro.launch.serve import greedy_generate
-from repro.launch.train import (AdamWConfig, TrainConfig, train_loop)
+from repro.launch.train import AdamWConfig, train_loop
 from repro.models import init_params
-from repro.optim import adamw_init
+
 from repro.runtime import StragglerDetector
 
 

@@ -2,9 +2,9 @@
 swept over shapes and dtypes, plus hypothesis property tests."""
 import numpy as np
 import pytest
-import jax
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+
+from conftest import given, settings, st
 
 from repro.kernels.flash_attention import flash_attention, mha_reference
 from repro.kernels.fused_mlp import fused_mlp, mlp_reference
@@ -65,7 +65,8 @@ def test_flash_attention_dtypes(dtype, atol):
 def test_flash_attention_block_size_invariance(s, blocks):
     """Output must not depend on the BlockSpec tiling (pure schedule)."""
     S = s * 32
-    q, k, v = rand((1, 2, S, 32)), rand((1, 2, S, 32)), rand((1, 2, S, 32))
+    q, k, v = (rand((1, 2, S, 32)), rand((1, 2, S, 32)),
+               rand((1, 2, S, 32)))
     a = flash_attention(q, k, v, causal=True, q_block=32, kv_block=32)
     b = flash_attention(q, k, v, causal=True, q_block=blocks,
                         kv_block=blocks)

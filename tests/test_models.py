@@ -4,7 +4,7 @@ import pytest
 import jax
 import jax.numpy as jnp
 
-from repro.configs import get_config, list_archs, SHAPES
+from repro.configs import get_config, list_archs
 from repro.core.policy import default_plan
 from repro.models import (decode_step, forward, init_cache, init_params,
                           param_pspecs, period_structure)

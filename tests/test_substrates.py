@@ -6,12 +6,13 @@ import numpy as np
 import pytest
 import jax
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+
+from conftest import given, settings, st
 
 from repro.data import DataConfig, SyntheticLMData
 from repro.optim import (AdamWConfig, adamw_init, adamw_update, cosine_lr,
                          CompressionState, compress_int8, decompress_int8,
-                         error_feedback_compress, global_norm, zero1_pspecs)
+                         error_feedback_compress, zero1_pspecs)
 from repro.checkpoint import (AsyncCheckpointer, latest_step, load_checkpoint,
                               save_checkpoint)
 from repro.runtime import (ElasticScaler, HeartbeatMonitor, StragglerDetector,
