@@ -34,7 +34,9 @@ def run() -> List[str]:
     for c in load_cells():
         name = f"{c['arch']}/{c['shape']}/{c['mesh']}"
         if c.get("status") == "skipped":
-            rows.append(f"{name},0,,,,skipped({c['reason'][:40]}),,")
+            # CSV cell: free-text reasons must not carry the delimiter
+            reason = c["reason"][:40].replace(",", ";")
+            rows.append(f"{name},0,,,,skipped({reason}),,")
             md.append(f"| {c['arch']} | {c['shape']} | {c['mesh']} | — | — "
                       f"| — | skipped | — | — |")
             continue
@@ -54,6 +56,7 @@ def run() -> List[str]:
             f"| {r['useful_flops_ratio']:.2f} "
             f"| {r['roofline_fraction']:.2f} |")
     out_md = os.path.join(DRYRUN_DIR, "..", "roofline.md")
+    os.makedirs(os.path.dirname(out_md), exist_ok=True)
     with open(out_md, "w") as f:
         f.write("\n".join(md) + "\n")
     return rows

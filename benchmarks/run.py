@@ -1,14 +1,28 @@
 """Benchmark harness — one table per paper-style experiment.
-Prints ``name,us_per_call,derived`` CSV blocks."""
+
+Prints ``name,us_per_call,derived...`` CSV blocks; on a table failure the
+full traceback is printed (CI logs must be debuggable) before the
+``ERROR,...`` row.
+
+``--json PATH`` additionally writes a machine-readable dump
+``{table_title: [{name, us_per_call, derived}, ...]}`` so the per-PR perf
+trajectory (``BENCH_*.json``) can be recorded and diffed.  ``--tables``
+filters tables by case-insensitive substring (comma-separated), which is
+what the CI smoke job uses to run one cheap table.
+"""
 from __future__ import annotations
 
+import argparse
+import json
 import sys
+import traceback
+from typing import Any, Dict, List
 
 
-def main() -> None:
+def _tables():
     from . import (bench_speedup, bench_energy, bench_capacity, bench_split,
-                   bench_kernels, bench_roofline)
-    tables = [
+                   bench_kernels, bench_roofline, bench_hpc)
+    return [
         ("TABLE 1 — CELLO speedup vs baselines", bench_speedup),
         ("TABLE 2 — energy vs baselines", bench_energy),
         ("TABLE 3 — HBM traffic vs buffer capacity", bench_capacity),
@@ -17,16 +31,81 @@ def main() -> None:
          bench_kernels),
         ("TABLE 6 — roofline terms from the multi-pod dry-run",
          bench_roofline),
+        ("TABLE 7 — HPC DAG speedup vs implicit/explicit/fused baselines",
+         bench_hpc),
     ]
+
+
+def _maybe_number(cell: str) -> Any:
+    for cast in (int, float):
+        try:
+            return cast(cell)
+        except ValueError:
+            continue
+    return cell
+
+
+def _records(rows: List[str]) -> List[Dict[str, Any]]:
+    """CSV block -> [{name, us_per_call, derived}] (header row first)."""
+    if not rows:
+        return []
+    header = rows[0].split(",")
+    out = []
+    for line in rows[1:]:
+        cells = line.split(",")
+        rec: Dict[str, Any] = {"name": cells[0], "us_per_call": None,
+                               "derived": {}}
+        for col, cell in zip(header[1:], cells[1:]):
+            if col == "us_per_call":
+                try:
+                    rec["us_per_call"] = float(cell)
+                except ValueError:
+                    pass
+            else:
+                rec["derived"][col] = _maybe_number(cell)
+        out.append(rec)
+    return out
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(
+        prog="python -m benchmarks.run",
+        description="Run the paper-style benchmark tables.")
+    ap.add_argument("--json", metavar="PATH",
+                    help="write a machine-readable row dump to PATH")
+    ap.add_argument("--tables", metavar="FILTERS",
+                    help="comma-separated case-insensitive substrings; only "
+                         "matching table titles run (e.g. --tables hpc)")
+    args = ap.parse_args(argv)
+    wanted = ([f.strip().lower() for f in args.tables.split(",") if f.strip()]
+              if args.tables else None)
+
     failures = 0
-    for title, mod in tables:
+    dump: Dict[str, List[Dict[str, Any]]] = {}
+    ran = 0
+    for title, mod in _tables():
+        if wanted and not any(w in title.lower() for w in wanted):
+            continue
+        ran += 1
         print(f"\n# {title}")
         try:
-            for row in mod.run():
-                print(row)
+            rows = list(mod.run())
         except Exception as e:                       # pragma: no cover
             failures += 1
+            traceback.print_exc(file=sys.stdout)
             print(f"ERROR,{type(e).__name__}: {e}")
+            dump[title] = []
+        else:
+            for row in rows:
+                print(row)
+            dump[title] = _records(rows)
+    if wanted and not ran:
+        print(f"no table title matches {args.tables!r}", file=sys.stderr)
+        sys.exit(2)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(dump, f, indent=2, sort_keys=True)
+        print(f"\nwrote {args.json}")
     if failures:
         sys.exit(1)
 

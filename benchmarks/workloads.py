@@ -39,3 +39,27 @@ def workloads():
                     lambda s=sess: s.trace(phase="decode", batch=128,
                                            kv_len=32768)))
     return out
+
+
+#: paper-style HPC DAGs (frontend traces) for the TABLE 7 bench: skewed
+#: (n×n)·(n,) operators sized so the fp64 operator is at/near the 128 MiB
+#: on-chip capacity — where the implicit-only baseline thrashes and the
+#: co-designed explicit pin captures the cross-iteration reuse.
+HPC_SET = [
+    ("cg", dict(n=4096, iters=4)),
+    ("bicgstab", dict(n=4096, iters=3)),
+    ("gmres", dict(n=4096, restart=8)),
+    ("jacobi2d", dict(n=4096, sweeps=8)),
+    ("power_iteration", dict(n=4096, iters=8)),
+    ("mttkrp", dict(i=256, j=256, k=256, rank=64)),
+]
+
+
+def hpc_workloads():
+    """``(name, build)`` pairs like :func:`workloads`, over ``HPC_SET``."""
+    out = []
+    for wl, params in HPC_SET:
+        sess = Session()
+        out.append((f"hpc/{wl}",
+                    lambda s=sess, w=wl, p=params: s.trace(workload=w, **p)))
+    return out

@@ -29,13 +29,13 @@ from ..core.search import (DEFAULT_SPLITS, EvaluatePass, FusionPass,
                            default_pipeline, get_strategy, register_pass,
                            register_strategy, run_codesign, run_pipeline)
 from .artifacts import AnalyzedGraph, CoDesigned, CompiledPlan, TracedGraph
-from .cache import CodesignCache, graph_fingerprint
+from .cache import CodesignCache, frontend_fingerprint, graph_fingerprint
 from .session import PHASES, Session
 
 __all__ = [
     "Session", "PHASES",
     "TracedGraph", "AnalyzedGraph", "CoDesigned", "CompiledPlan",
-    "CodesignCache", "graph_fingerprint",
+    "CodesignCache", "frontend_fingerprint", "graph_fingerprint",
     "HardwareModel", "V5E",
     "Pass", "OrderPass", "FusionPass", "PinPass", "SplitSweepPass",
     "EvaluatePass", "SearchContext", "SearchPoint", "SearchStrategy",

@@ -14,7 +14,7 @@ artifact itself (inspect, cache, or compare them freely).
 from __future__ import annotations
 
 import dataclasses
-from typing import TYPE_CHECKING, Any, Dict, Optional
+from typing import TYPE_CHECKING, Any, Dict, Optional, Tuple
 
 from ..configs.base import ArchConfig
 from ..core.graph import OpGraph
@@ -23,6 +23,7 @@ from ..core.reuse import ReuseAnalysis
 from ..core.schedule import CoDesignResult, EvaluatedSchedule
 
 if TYPE_CHECKING:                                      # pragma: no cover
+    from ..frontends.expr import Program
     from .session import Session
 
 
@@ -33,18 +34,30 @@ class TracedGraph:
     ``Session.trace`` memoizes these per shape, so the carried ``graph``
     is shared between repeat calls — treat it as read-only; to experiment
     with graph edits, build your own via ``OpGraph.build()``.
+
+    Frontend-built traces (``trace(workload=...)`` / ``Session.from_graph``)
+    use ``phase="hpc"`` and carry the source expression ``program`` so the
+    lowered plan can be executed and validated numerically.
     """
     arch: str
-    phase: str                        # "train" | "prefill" | "decode"
+    phase: str                # "train" | "prefill" | "decode" | "hpc"
     batch: int
     seq: Optional[int]                # train/prefill
     kv_len: Optional[int]             # decode
     layer_kind: Optional[str]
     graph: OpGraph = dataclasses.field(repr=False, compare=False)
     session: "Session" = dataclasses.field(repr=False, compare=False)
+    # frontend (HPC) traces only
+    program: Optional["Program"] = dataclasses.field(
+        default=None, repr=False, compare=False)
+    workload: Optional[str] = None
+    wl_params: Tuple[Tuple[str, Any], ...] = ()
 
     @property
     def shape_key(self) -> str:
+        if self.phase == "hpc":
+            return ("-".join(f"{k}{v}" for k, v in self.wl_params)
+                    or self.graph.name)
         span = f"s{self.seq}" if self.phase != "decode" else f"kv{self.kv_len}"
         return f"b{self.batch}{span}"
 
@@ -142,8 +155,12 @@ class CompiledPlan:
     ``.serve()`` / ``.train()`` drive the JAX execution stack with this
     plan; ``.report()`` returns the headline co-design numbers and
     ``.explain()`` a human-readable schedule/pin/split summary.
+
+    Frontend (HPC) plans carry ``cfg=None``: they execute through
+    :meth:`run`, which replays the *scheduled* op order through the
+    ``frontends.reference`` interpreter — no LLM serving stack applies.
     """
-    cfg: ArchConfig = dataclasses.field(repr=False)
+    cfg: Optional[ArchConfig] = dataclasses.field(repr=False)
     plan: CelloPlan = dataclasses.field(repr=False)
     trace: Optional[TracedGraph] = dataclasses.field(
         default=None, repr=False, compare=False)
@@ -152,23 +169,49 @@ class CompiledPlan:
 
     @property
     def arch(self) -> str:
-        return self.cfg.name
+        return self.cfg.name if self.cfg is not None else self.plan.arch
 
     # -- execution ------------------------------------------------------
     def serve(self, *, unroll: bool = False):
         """Serving bundle (prefill/decode fns + greedy generate driver)."""
+        if self.cfg is None:
+            raise ValueError("frontend (HPC) plans have no LLM serving "
+                             "stack; execute them with plan.run()")
         from ..launch.serve import make_serving      # lazy: pulls in jax
         return make_serving(self.cfg, self.plan, unroll=unroll)
 
     def train(self, *, data_iter, n_steps: int, opt_cfg=None, **kwargs
               ) -> Dict[str, Any]:
         """Run the CPU-scale training loop under this plan's remat policy."""
+        if self.cfg is None:
+            raise ValueError("frontend (HPC) plans have no LLM training "
+                             "stack; execute them with plan.run()")
         from ..launch.train import train_loop        # lazy: pulls in jax
         from ..optim import AdamWConfig
         if opt_cfg is None:
             opt_cfg = AdamWConfig(total_steps=n_steps)
         return train_loop(self.cfg, self.plan, opt_cfg,
                           data_iter=data_iter, n_steps=n_steps, **kwargs)
+
+    def run(self, feeds=None, *, seed: int = 0) -> Dict[str, Any]:
+        """Execute a frontend plan: replay the co-designed schedule order
+        through the ``jax.numpy`` reference interpreter.
+
+        Ops are pure, so this must match ``frontends.reference.evaluate``
+        on the same feeds exactly — the numerical validation every HPC
+        plan ships with.
+        """
+        if self.trace is None or self.trace.program is None:
+            raise ValueError("run() needs a frontend-traced plan "
+                             "(Session.trace(workload=...) or "
+                             "Session.from_graph(program))")
+        from ..frontends.reference import execute_plan   # lazy: pulls in jax
+        order = None
+        if self.codesigned is not None:
+            order = [o for g in self.codesigned.best.schedule.groups
+                     for o in g]
+        return execute_plan(self.trace.program, order=order, feeds=feeds,
+                            seed=seed)
 
     # -- introspection --------------------------------------------------
     def report(self) -> Dict[str, Any]:
@@ -234,13 +277,19 @@ class CompiledPlan:
             ]
         else:
             lines.append("  (default plan — no search was run)")
-        lines += [
-            f"  flash attention   : {p.use_flash_attention} "
-            f"(q_block={p.q_block}, kv_block={p.kv_block})",
-            f"  fused MLP         : {p.use_fused_mlp} "
-            f"(m={p.mlp_block_m}, f={p.mlp_block_f})",
-            f"  remat save-set    : {', '.join(p.remat_save_names)}",
-        ]
+        if self.cfg is None:
+            g = self.trace.graph if self.trace is not None else None
+            lines.append(
+                "  execution         : frontends.reference interpreter"
+                + (f" over {len(g.ops)} ops" if g is not None else ""))
+        else:
+            lines += [
+                f"  flash attention   : {p.use_flash_attention} "
+                f"(q_block={p.q_block}, kv_block={p.kv_block})",
+                f"  fused MLP         : {p.use_fused_mlp} "
+                f"(m={p.mlp_block_m}, f={p.mlp_block_f})",
+                f"  remat save-set    : {', '.join(p.remat_save_names)}",
+            ]
         if p.notes:
             lines.append(f"  notes             : {p.notes}")
         return "\n".join(lines)

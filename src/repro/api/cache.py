@@ -58,6 +58,23 @@ def hw_fingerprint(hw: HardwareModel) -> str:
     return hashlib.sha256(repr(dataclasses.astuple(hw)).encode()).hexdigest()
 
 
+def frontend_fingerprint(program) -> Optional[str]:
+    """Cache-key component for frontend-built (HPC) graphs: the expression
+    DAG's content hash plus the frontend lowering code itself, so an edit
+    to ``frontends.expr`` invalidates entries even when the lowered graph
+    would hash the same.  ``None`` for registry (LLM) traces."""
+    if program is None:
+        return None
+    from ..frontends import expr
+    h = hashlib.sha256(program.fingerprint().encode())
+    try:
+        h.update(inspect.getsource(expr).encode())
+    except OSError:                    # no source (zipapp etc.)
+        from .. import __version__
+        h.update(__version__.encode())
+    return h.hexdigest()
+
+
 def strategy_fingerprint(strategy) -> Optional[str]:
     """Hash of the strategy implementation's source code.
 

@@ -27,14 +27,17 @@ from typing import Optional, Sequence, Union
 from ..configs import get_config, list_archs
 from ..configs.base import ArchConfig
 from ..core.costmodel import HardwareModel, V5E
+from ..core.graph import OpGraph
 from ..core.lowering import decode_graph, layer_graph
+from ..core.policy import CelloPlan
 from ..core.policy import default_plan as _default_plan
 from ..core.policy import lower_codesign
 from ..core.reuse import analyze as _analyze
 from ..core.search import DEFAULT_SPLITS, get_strategy, run_codesign
 from .artifacts import AnalyzedGraph, CoDesigned, CompiledPlan, TracedGraph
 from .cache import (CodesignCache, algo_fingerprint, cache_disabled_by_env,
-                    graph_fingerprint, hw_fingerprint, strategy_fingerprint)
+                    frontend_fingerprint, graph_fingerprint, hw_fingerprint,
+                    strategy_fingerprint)
 
 PHASES = ("train", "prefill", "decode")
 
@@ -46,7 +49,11 @@ _PHASE_DEFAULTS = {
 }
 
 
-def _resolve_arch(arch: Union[str, ArchConfig]) -> ArchConfig:
+def _resolve_arch(arch: Union[str, ArchConfig, None]) -> Optional[ArchConfig]:
+    if arch is None or arch == "hpc":
+        # arch-less session: only frontend traces (trace(workload=...) /
+        # Session.from_graph) are available
+        return None
     if isinstance(arch, ArchConfig):
         return arch
     try:
@@ -65,7 +72,7 @@ def _resolve_arch(arch: Union[str, ArchConfig]) -> ArchConfig:
 class Session:
     """Staged compilation session for one (arch, hardware) pair."""
 
-    def __init__(self, arch: Union[str, ArchConfig], *,
+    def __init__(self, arch: Union[str, ArchConfig, None] = None, *,
                  hw: HardwareModel = V5E,
                  capacity_bytes: Optional[int] = None,
                  use_cache: bool = True,
@@ -79,14 +86,41 @@ class Session:
         self._trace_memo = {}
 
     # -- stage 1: trace -------------------------------------------------
-    def trace(self, phase: str = "train", *, batch: Optional[int] = None,
+    def trace(self, phase: Optional[str] = None, *,
+              batch: Optional[int] = None,
               seq: Optional[int] = None, kv_len: Optional[int] = None,
-              layer_kind: Optional[str] = None) -> TracedGraph:
-        """Build the analysis-level op DAG for one phase of this arch.
+              layer_kind: Optional[str] = None,
+              workload: Optional[str] = None,
+              **workload_params) -> TracedGraph:
+        """Build the analysis-level op DAG for one phase of this arch —
+        or, with ``workload=``, for a registered HPC frontend workload::
 
-        Traces are memoized per (phase, shape): repeat calls return the
-        same artifact, so treat the carried ``OpGraph`` as read-only.
+            Session().trace(workload="cg", n=4096, iters=4)
+
+        HPC traces carry ``phase="hpc"`` and need no arch config; extra
+        keyword arguments go to the workload builder
+        (``repro.frontends.hpc``).  Traces are memoized per (phase, shape)
+        or (workload, params): repeat calls return the same artifact, so
+        treat the carried ``OpGraph`` as read-only.
         """
+        if workload is not None:
+            if any(v is not None for v in (batch, seq, kv_len, layer_kind)):
+                raise ValueError("workload= traces take workload builder "
+                                 "params, not batch/seq/kv_len/layer_kind")
+            if phase is not None:
+                raise ValueError("workload= traces have phase='hpc'; do "
+                                 f"not combine workload with "
+                                 f"phase={phase!r}")
+            return self._trace_workload(workload, workload_params)
+        phase = "train" if phase is None else phase
+        if workload_params:
+            raise TypeError(f"unexpected trace() kwargs "
+                            f"{sorted(workload_params)} (workload builder "
+                            "params need workload=)")
+        if self.cfg is None:
+            raise ValueError("this Session has no arch config; pass arch= "
+                             "to Session() or trace a frontend workload "
+                             "via trace(workload=...)")
         if phase not in PHASES:
             raise ValueError(f"phase {phase!r} not in {PHASES}")
         if phase == "decode" and self.cfg.encoder_only:
@@ -118,6 +152,56 @@ class Session:
                              graph=graph, session=self)
         self._trace_memo[memo_key] = traced
         return traced
+
+    def _trace_workload(self, workload: str, params: dict) -> TracedGraph:
+        from ..frontends.hpc import build_workload    # lazy: optional path
+        wl_params = tuple(sorted(params.items()))
+        memo_key = ("hpc", workload, wl_params)
+        hit = self._trace_memo.get(memo_key)
+        if hit is not None:
+            return hit
+        program = build_workload(workload, **params)
+        traced = TracedGraph(arch=f"hpc:{workload}", phase="hpc", batch=1,
+                             seq=None, kv_len=None, layer_kind=None,
+                             graph=program.to_graph(), session=self,
+                             program=program, workload=workload,
+                             wl_params=wl_params)
+        self._trace_memo[memo_key] = traced
+        return traced
+
+    @classmethod
+    def from_graph(cls, obj, *, hw: HardwareModel = V5E,
+                   capacity_bytes: Optional[int] = None,
+                   use_cache: bool = True, cache_dir=None) -> TracedGraph:
+        """Wrap a frontend ``Program`` / ``Expr`` or a raw ``OpGraph`` as a
+        TracedGraph on a fresh arch-less session, ready for
+        ``analyze → codesign → lower``.
+
+        An ``Expr`` is marked as its program's output when none is set;
+        raw ``OpGraph``\\ s lower to an analysis plan but cannot ``run()``
+        (there is no expression program to interpret).
+        """
+        from ..frontends.expr import Expr, Program   # lazy: optional path
+        if isinstance(obj, TracedGraph):
+            return obj
+        sess = cls(None, hw=hw, capacity_bytes=capacity_bytes,
+                   use_cache=use_cache, cache_dir=cache_dir)
+        if isinstance(obj, Expr):
+            if not obj.program.outputs:
+                obj.program.output(obj)
+            obj = obj.program
+        if isinstance(obj, Program):
+            return TracedGraph(arch=f"hpc:{obj.name}", phase="hpc", batch=1,
+                               seq=None, kv_len=None, layer_kind=None,
+                               graph=obj.to_graph(), session=sess,
+                               program=obj)
+        if isinstance(obj, OpGraph):
+            obj.validate()
+            return TracedGraph(arch=f"graph:{obj.name}", phase="hpc",
+                               batch=1, seq=None, kv_len=None,
+                               layer_kind=None, graph=obj, session=sess)
+        raise TypeError(f"from_graph takes a Program, Expr, OpGraph or "
+                        f"TracedGraph, got {type(obj).__name__}")
 
     # -- stage 2: analyze -----------------------------------------------
     def analyze(self, traced: TracedGraph) -> AnalyzedGraph:
@@ -163,7 +247,10 @@ class Session:
                 layer_kind=traced.layer_kind, hw=hw_fingerprint(self.hw),
                 capacity=capacity, strategy=strategy_name,
                 strategy_src=strategy_src, max_orders=max_orders,
-                splits=list(splits), graph=graph_fingerprint(traced.graph))
+                splits=list(splits), graph=graph_fingerprint(traced.graph),
+                # frontend-built graphs fold in the expression DAG + the
+                # frontend lowering code (None for registry traces)
+                frontend=frontend_fingerprint(traced.program))
             hit = self.cache.get(key)
             if hit is not None:
                 return CoDesigned(trace=traced, result=hit,
@@ -187,6 +274,11 @@ class Session:
               seq: Optional[int] = None) -> CompiledPlan:
         """Turn the co-design decision into an executable CelloPlan."""
         traced = designed.trace
+        if traced.phase == "hpc":
+            if seq is not None:
+                raise ValueError("frontend (HPC) plans take no seq=: block "
+                                 "sizing comes from the expression shapes")
+            return self._lower_frontend(designed)
         if seq is None:
             seq = traced.seq if traced.seq is not None else \
                 (traced.kv_len or 4096)
@@ -194,10 +286,31 @@ class Session:
         return CompiledPlan(cfg=self.cfg, plan=plan, trace=traced,
                             codesigned=designed)
 
+    def _lower_frontend(self, designed: CoDesigned) -> CompiledPlan:
+        """HPC/frontend lowering: no LLM kernels or remat save-sets apply;
+        the plan carries the co-designed split and executes through the
+        reference interpreter in the scheduled order (`plan.run()`)."""
+        traced = designed.trace
+        sched = designed.result.best.schedule
+        plan = CelloPlan(
+            arch=traced.arch,
+            use_flash_attention=False, q_block=0, kv_block=0,
+            use_fused_mlp=False, mlp_block_m=0, mlp_block_f=0,
+            use_fused_rmsnorm=False, remat_save_names=(),
+            explicit_frac=sched.config.explicit_frac,
+            notes=(f"frontend graph: groups={len(sched.groups)} "
+                   f"pins={len(sched.pins)} "
+                   f"speedup={designed.result.speedup():.2f}x"))
+        return CompiledPlan(cfg=None, plan=plan, trace=traced,
+                            codesigned=designed)
+
     # -- fast path (no search) -------------------------------------------
     def default_plan(self, *, seq: int = 4096) -> CompiledPlan:
         """Paper-faithful default plan without running the search (smoke
         tests, dry-runs, CPU-scale examples)."""
+        if self.cfg is None:
+            raise ValueError("default_plan needs an arch config; frontend "
+                             "workloads always go through codesign()")
         plan = _default_plan(self.cfg, seq=seq, hw=self.hw)
         return CompiledPlan(cfg=self.cfg, plan=plan)
 
@@ -218,6 +331,7 @@ class Session:
 
     def __repr__(self) -> str:
         on = self.use_cache and not cache_disabled_by_env()
-        return (f"Session({self.cfg.name!r}, hw={self.hw.name!r}, "
+        name = self.cfg.name if self.cfg is not None else "<frontend>"
+        return (f"Session({name!r}, hw={self.hw.name!r}, "
                 f"capacity={self.capacity_bytes // 1024 // 1024} MiB, "
                 f"cache={'on' if on else 'off'})")

@@ -148,14 +148,19 @@ class OpGraph:
                     *, flops_per_elem: int = 1, dtype_bytes: int = 2,
                     out_shape: Optional[Sequence[int]] = None,
                     out_kind: TensorKind = TensorKind.INTERMEDIATE,
-                    spec: str = "ew", irregular: bool = False) -> OpNode:
+                    spec: str = "ew", irregular: bool = False,
+                    flops: Optional[int] = None) -> OpNode:
+        """Elementwise-family op.  ``flops`` (total) overrides the per-elem
+        estimate — used by frontends whose ops (reductions, stencils) don't
+        scale with the *output* element count."""
         t0 = self._expect(inputs[0])
         shape = tuple(out_shape) if out_shape is not None else t0.shape
         if output not in self.tensors:
             self.tensor(output, shape, dtype_bytes=dtype_bytes, kind=out_kind)
-        flops = flops_per_elem * int(math.prod(shape))
+        if flops is None:
+            flops = flops_per_elem * int(math.prod(shape))
         return self._add(OpNode(name, spec, tuple(inputs), output,
-                                flops=flops, irregular=irregular))
+                                flops=int(flops), irregular=irregular))
 
     def _add(self, op: OpNode) -> OpNode:
         if op.name in self.ops:
@@ -290,11 +295,12 @@ class GraphBuilder:
                     flops_per_elem: int = 1, dtype_bytes: int = 2,
                     out_shape: Optional[Sequence[int]] = None,
                     out_kind: TensorKind = TensorKind.INTERMEDIATE,
-                    spec: str = "ew", irregular: bool = False) -> str:
+                    spec: str = "ew", irregular: bool = False,
+                    flops: Optional[int] = None) -> str:
         return self.graph.elementwise(
             name, inputs, output, flops_per_elem=flops_per_elem,
             dtype_bytes=dtype_bytes, out_shape=out_shape, out_kind=out_kind,
-            spec=spec, irregular=irregular).output
+            spec=spec, irregular=irregular, flops=flops).output
 
     def contract(self, name: str, inputs: Sequence[str], output: str,
                  out_shape: Sequence[int], flops: int, *,
@@ -303,22 +309,17 @@ class GraphBuilder:
                  irregular: bool = False) -> str:
         """Contraction with explicit output shape/FLOPs — covers broadcasty
         einsums the strict parser can't express (GQA score contractions)."""
-        op = self.graph.elementwise(
-            name, inputs, output, out_shape=out_shape, flops_per_elem=0,
+        return self.graph.elementwise(
+            name, inputs, output, out_shape=out_shape,
             dtype_bytes=dtype_bytes, out_kind=out_kind, spec="contract",
-            irregular=irregular)
-        op.flops = int(flops)
-        return op.output
+            irregular=irregular, flops=int(flops)).output
 
     def scan(self, name: str, inputs: Sequence[str], output: str,
              out_shape: Sequence[int], *, flops: Optional[int] = None,
              flops_per_elem: int = 0, dtype_bytes: int = 2,
              out_kind: TensorKind = TensorKind.INTERMEDIATE) -> str:
         """Sequential recurrence along the leading axis (spec='scan')."""
-        op = self.graph.elementwise(
+        return self.graph.elementwise(
             name, inputs, output, out_shape=out_shape,
             flops_per_elem=flops_per_elem, dtype_bytes=dtype_bytes,
-            out_kind=out_kind, spec="scan")
-        if flops is not None:
-            op.flops = int(flops)
-        return op.output
+            out_kind=out_kind, spec="scan", flops=flops).output

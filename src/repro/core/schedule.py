@@ -119,6 +119,18 @@ def fusable(graph: OpGraph, group: Sequence[str], nxt: str,
     produced = {graph.ops[o].output for o in group}
     if not any(t in produced for t in op.inputs):
         return False                      # must consume something from group
+    # A fusion group is ONE tile-streaming pass: a tiled op cannot consume a
+    # global reduction (rank-0 dot / norm result) produced in the same pass
+    # — that value only exists after the pass completes.  Scalar→scalar
+    # epilogues (beta = rs'/rs) are fine.  This is what stops an unrolled
+    # Krylov solver from "fusing away" its cross-iteration reuse: each
+    # reduction ends the kernel, so the operator must be re-read — unless
+    # the co-designer pins it in the explicit region.
+    if graph.tensors[op.output].shape != ():
+        scalars = {graph.ops[o].output for o in group
+                   if graph.tensors[graph.ops[o].output].shape == ()}
+        if any(t in scalars for t in op.inputs):
+            return False
     resident, per_row = _group_tile_working_set(graph, list(group) + [nxt])
     return resident + _MIN_TILE_ROWS * per_row <= explicit_bytes
 
@@ -155,7 +167,15 @@ def _group_index(groups: Sequence[Sequence[str]]) -> Dict[str, int]:
 def choose_pins(graph: OpGraph, groups: Sequence[Sequence[str]],
                 analysis: ReuseAnalysis, explicit_bytes: int
                 ) -> Dict[str, Tuple[int, int]]:
-    """Greedy pinning by traffic-saved-per-byte under a liveness-aware cap."""
+    """Greedy pinning under a liveness-aware capacity timeline.
+
+    Two candidate orderings are tried and the statically-better pin set is
+    kept: traffic-saved-per-pinned-*byte* (density — best when many small
+    tensors compete) and *absolute* traffic saved (best when one large
+    operator dominates — an HPC solver's ``(n×n)`` matrix at near-capacity
+    size is starved by density greedy, because any small vector committed
+    first blocks the exact fit).  Ties keep the density set.
+    """
     gi = _group_index(groups)
     internal = set()
     for g in groups:
@@ -168,34 +188,45 @@ def choose_pins(graph: OpGraph, groups: Sequence[Sequence[str]],
                 internal.add(t)
 
     n = len(groups)
-    timeline = [0] * (n + 1)
 
-    def fits(a: int, b: int, nbytes: int) -> bool:
-        running = 0
-        for i in range(n + 1):
-            running += timeline[i]
-            if a <= i <= b and running + nbytes > explicit_bytes:
-                return False
-        return True
+    def greedy(candidates) -> Tuple[Dict[str, Tuple[int, int]], int]:
+        timeline = [0] * (n + 1)
 
-    def commit(a: int, b: int, nbytes: int) -> None:
-        timeline[a] += nbytes
-        timeline[min(b, n - 1) + 1] -= nbytes
+        def fits(a: int, b: int, nbytes: int) -> bool:
+            running = 0
+            for i in range(n + 1):
+                running += timeline[i]
+                if a <= i <= b and running + nbytes > explicit_bytes:
+                    return False
+            return True
 
-    pins: Dict[str, Tuple[int, int]] = {}
-    for cand in analysis.ranked_pin_candidates():
-        if cand.pin_value() <= 0 or cand.name in internal:
-            continue
-        spec = graph.tensors[cand.name]
-        if spec.bytes > explicit_bytes:
-            continue
-        first = (0 if cand.def_step is None
-                 else gi[analysis.order[cand.def_step]])
-        last = gi[analysis.order[cand.uses[-1]]] if cand.uses else first
-        if fits(first, last, spec.bytes):
-            commit(first, last, spec.bytes)
-            pins[cand.name] = (first, last)
-    return pins
+        pins: Dict[str, Tuple[int, int]] = {}
+        saved = 0
+        for cand in candidates:
+            if cand.pin_value() <= 0 or cand.name in internal:
+                continue
+            spec = graph.tensors[cand.name]
+            if spec.bytes > explicit_bytes:
+                continue
+            first = (0 if cand.def_step is None
+                     else gi[analysis.order[cand.def_step]])
+            last = gi[analysis.order[cand.uses[-1]]] if cand.uses else first
+            if fits(first, last, spec.bytes):
+                timeline[first] += spec.bytes
+                timeline[min(last, n - 1) + 1] -= spec.bytes
+                pins[cand.name] = (first, last)
+                saved += cand.traffic_if_missed()
+        return pins, saved
+
+    by_density = analysis.ranked_pin_candidates()
+    by_absolute = sorted(by_density,
+                         key=lambda t: (-t.traffic_if_missed(), t.bytes,
+                                        t.name))
+    dense_pins, dense_saved = greedy(by_density)
+    if by_absolute == by_density:
+        return dense_pins
+    abs_pins, abs_saved = greedy(by_absolute)
+    return abs_pins if abs_saved > dense_saved else dense_pins
 
 
 # --------------------------------------------------------------------------

@@ -1,0 +1,32 @@
+"""`repro.frontends` — workload frontends for the CELLO co-designer.
+
+The core toolchain reasons over :class:`repro.core.OpGraph`; until now the
+only producer of such graphs was the LLM arch registry (`core.lowering`).
+This package opens the paper's *other* workload class — HPC DAGs with
+skewed-shape operators and complex cross-iteration reuse:
+
+  ``expr``       — a small NumPy-like tensor-expression builder whose DAGs
+                   lower to ``OpGraph`` via ``OpGraph.build()`` with correct
+                   ``TensorKind`` tagging and FLOP/byte annotations, so the
+                   reuse / buffer / cost-model layers work unchanged,
+  ``hpc``        — a library of paper-style workloads built on it (CG,
+                   BiCGStab, GMRES(m), Jacobi 2-D sweep, power iteration,
+                   MTTKRP), each parameterized by size / skew,
+  ``reference``  — a ``jax.numpy`` interpreter over the expression DAG, the
+                   numerical oracle every lowered plan is validated against.
+
+Entry points: ``Session(...).trace(workload="cg", n=4096, iters=4)`` or
+``Session.from_graph(program)`` — both flow through the standard
+``analyze → codesign → lower`` stages and the codesign disk cache.
+"""
+from .expr import Expr, ExprNode, Program
+from .hpc import (WORKLOADS, build_workload, cg, bicgstab, gmres, jacobi2d,
+                  list_workloads, mttkrp, power_iteration)
+from .reference import evaluate, execute_plan, make_feeds
+
+__all__ = [
+    "Expr", "ExprNode", "Program",
+    "WORKLOADS", "build_workload", "list_workloads",
+    "cg", "bicgstab", "gmres", "jacobi2d", "power_iteration", "mttkrp",
+    "evaluate", "execute_plan", "make_feeds",
+]

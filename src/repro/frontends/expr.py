@@ -1,0 +1,389 @@
+"""NumPy-like tensor-expression builder that lowers to ``core.OpGraph``.
+
+A :class:`Program` records a DAG of :class:`ExprNode`\\ s; :class:`Expr` is
+the user-facing handle with operator overloads, so HPC kernels read like the
+math they implement::
+
+    p = Program("cg")
+    A = p.operator("A", (n, n))          # WEIGHT: resident, reused
+    b = p.input("b", (n,))
+    x = p.input("x0", (n,), init="zeros")
+    r = b - A @ x
+    rs = p.dot(r, r)
+
+``Program.to_graph()`` lowers the DAG through ``OpGraph.build()``:
+
+* leaves become ``INPUT`` / ``WEIGHT`` tensors, marked outputs ``OUTPUT``,
+* contractions (``matmul`` / ``dot`` / ``einsum``) lower as einsum ops so
+  the strict parser re-derives shapes and FLOPs (2 × MACs),
+* everything else lowers as elementwise-family ops with explicit output
+  shape and FLOP counts (``axpy`` = 2 FLOP/elem, ``stencil2d`` = 6, …),
+* data-dependent ``gather`` is marked *irregular*: the co-designer must
+  leave its reuse to the implicit region.
+
+Node names double as both the produced tensor's name and the op's name in
+the lowered graph (the two namespaces are disjoint in ``OpGraph``), so pins
+and fusion groups in ``plan.explain()`` read as ``A``, ``p1``, ``r2`` …
+
+Precision note: ``dtype_bytes`` (default fp64 — this is HPC) feeds the
+traffic/energy *model* only; the ``reference`` interpreter executes in
+JAX's default float precision regardless.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import math
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
+
+from ..core.graph import OpGraph, TensorKind, _parse_einsum
+
+F64 = 8
+F32 = 4
+I32 = 4
+
+#: expr-op -> OpGraph pseudo-spec for the non-einsum lowerings
+_SPEC = {
+    "add": "ew", "sub": "ew", "mul": "ew", "div": "ew", "neg": "ew",
+    "axpy": "ew", "dot": "reduce", "norm": "reduce",
+    "stencil2d": "stencil2d", "gather": "gather",
+}
+
+#: FLOPs per output element for the simple elementwise ops
+_EW_FLOPS = {"add": 1, "sub": 1, "mul": 1, "div": 1, "neg": 1, "axpy": 2,
+             "stencil2d": 6, "gather": 0}
+
+Shape = Tuple[int, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class ExprNode:
+    """One node of the expression DAG (leaf or op)."""
+    name: str
+    op: str                           # "input" | "operator" | op kind
+    inputs: Tuple[str, ...]           # names of the operand nodes
+    shape: Shape
+    dtype_bytes: int
+    flops: int = 0
+    irregular: bool = False
+    params: Tuple[Tuple[str, Any], ...] = ()   # sorted, hashable extras
+
+    @property
+    def is_leaf(self) -> bool:
+        return self.op in ("input", "operator")
+
+    def param(self, key: str, default: Any = None) -> Any:
+        return dict(self.params).get(key, default)
+
+
+class Expr:
+    """Handle to one node of a :class:`Program` (supports ``+ - * / @``)."""
+    __slots__ = ("program", "name")
+
+    def __init__(self, program: "Program", name: str):
+        self.program = program
+        self.name = name
+
+    @property
+    def node(self) -> ExprNode:
+        return self.program.nodes[self.name]
+
+    @property
+    def shape(self) -> Shape:
+        return self.node.shape
+
+    @property
+    def dtype_bytes(self) -> int:
+        return self.node.dtype_bytes
+
+    # -- operator sugar ---------------------------------------------------
+    def __add__(self, other): return self.program.add(self, other)
+    def __radd__(self, other): return self.program.add(other, self)
+    def __sub__(self, other): return self.program.sub(self, other)
+    def __rsub__(self, other): return self.program.sub(other, self)
+    def __mul__(self, other): return self.program.mul(self, other)
+    def __rmul__(self, other): return self.program.mul(other, self)
+    def __truediv__(self, other): return self.program.div(self, other)
+    def __rtruediv__(self, other): return self.program.div(other, self)
+    def __matmul__(self, other): return self.program.matmul(self, other)
+    def __neg__(self): return self.program.neg(self)
+
+    def __repr__(self) -> str:
+        n = self.node
+        return f"Expr({self.name!r}, {n.op}, shape={n.shape})"
+
+
+def _as_params(params: Dict[str, Any]) -> Tuple[Tuple[str, Any], ...]:
+    return tuple(sorted(params.items()))
+
+
+class Program:
+    """A buildable expression DAG, lowerable to :class:`OpGraph`."""
+
+    def __init__(self, name: str = "program"):
+        self.name = name
+        self.nodes: Dict[str, ExprNode] = {}
+        self._order: List[str] = []       # insertion order = a topo order
+        self.outputs: List[str] = []
+        self._counts: Dict[str, int] = {}
+
+    # -- node plumbing ----------------------------------------------------
+    def _register(self, node: ExprNode) -> Expr:
+        if node.name in self.nodes:
+            raise ValueError(f"duplicate node name {node.name!r}")
+        self.nodes[node.name] = node
+        self._order.append(node.name)
+        return Expr(self, node.name)
+
+    def _autoname(self, op: str) -> str:
+        while True:
+            i = self._counts.get(op, 0)
+            self._counts[op] = i + 1
+            name = f"{op}_{i}"
+            if name not in self.nodes:
+                return name
+
+    def _expr(self, x: Union["Expr", float, int]) -> "Expr":
+        """Coerce a Python scalar operand into a rank-0 ``const`` input."""
+        if isinstance(x, Expr):
+            if x.program is not self:
+                raise ValueError("operands belong to different Programs")
+            return x
+        if isinstance(x, (int, float)):
+            return self.input(self._autoname("const"), (),
+                              init="const", value=float(x))
+        raise TypeError(f"cannot use {type(x).__name__} as an operand")
+
+    # -- leaves -----------------------------------------------------------
+    def input(self, name: str, shape: Sequence[int], *,
+              dtype_bytes: int = F64, init: str = "randn",
+              **init_params: Any) -> Expr:
+        """A graph input (activations-in; re-supplied per invocation)."""
+        return self._register(ExprNode(
+            name, "input", (), tuple(int(s) for s in shape), dtype_bytes,
+            params=_as_params({"init": init, **init_params})))
+
+    def operator(self, name: str, shape: Sequence[int], *,
+                 dtype_bytes: int = F64, init: str = "randn",
+                 **init_params: Any) -> Expr:
+        """A resident, read-only operator (lowered as ``WEIGHT``): the
+        sparse-matrix / tensor operand reused across solver iterations."""
+        return self._register(ExprNode(
+            name, "operator", (), tuple(int(s) for s in shape), dtype_bytes,
+            params=_as_params({"init": init, **init_params})))
+
+    # alias matching the LLM-side vocabulary
+    weight = operator
+
+    # -- contractions -----------------------------------------------------
+    def einsum(self, spec: str, *operands: "Expr",
+               name: Optional[str] = None) -> Expr:
+        """General einsum; shapes/FLOPs re-derived by the strict parser."""
+        ops = [self._expr(o) for o in operands]
+        in_specs, out_spec = _parse_einsum(spec)
+        if len(in_specs) != len(ops):
+            raise ValueError(f"einsum {spec!r}: {len(in_specs)} operands "
+                             f"in spec, got {len(ops)}")
+        dim: Dict[str, int] = {}
+        for sub, e in zip(in_specs, ops):
+            if len(sub) != len(e.shape):
+                raise ValueError(f"einsum {spec!r}: operand {e.name} rank "
+                                 f"mismatch ({sub!r} vs {e.shape})")
+            for ax, size in zip(sub, e.shape):
+                if dim.setdefault(ax, size) != size:
+                    raise ValueError(f"einsum {spec!r}: axis {ax!r} size "
+                                     f"mismatch")
+        shape = tuple(dim[a] for a in out_spec)
+        flops = 2 * int(math.prod(dim.values()))
+        return self._register(ExprNode(
+            name or self._autoname("einsum"), "einsum",
+            tuple(e.name for e in ops), shape,
+            max(e.dtype_bytes for e in ops), flops=flops,
+            params=_as_params({"spec": spec})))
+
+    def matmul(self, a: "Expr", b: "Expr",
+               name: Optional[str] = None) -> Expr:
+        """Matrix/vector product — the skewed ``(n×n)·(n×1)`` workhorse."""
+        a, b = self._expr(a), self._expr(b)
+        ra, rb = len(a.shape), len(b.shape)
+        spec = {(2, 2): "ab,bc->ac", (2, 1): "ab,b->a",
+                (1, 2): "a,ab->b", (1, 1): "a,a->"}.get((ra, rb))
+        if spec is None:
+            raise ValueError(f"matmul supports rank 1/2 operands, got "
+                             f"{a.shape} @ {b.shape}")
+        node = self.einsum(spec, a, b, name=name or self._autoname("matmul"))
+        # rewrite the op tag so the DAG reads as matmuls, not raw einsums
+        nd = self.nodes[node.name]
+        self.nodes[node.name] = dataclasses.replace(nd, op="matmul")
+        return node
+
+    def dot(self, x: "Expr", y: "Expr", name: Optional[str] = None) -> Expr:
+        """Inner product of two vectors → rank-0 scalar tensor."""
+        x, y = self._expr(x), self._expr(y)
+        if len(x.shape) != 1 or x.shape != y.shape:
+            raise ValueError(f"dot needs equal-length vectors, got "
+                             f"{x.shape} · {y.shape}")
+        return self._register(ExprNode(
+            name or self._autoname("dot"), "dot", (x.name, y.name), (),
+            max(x.dtype_bytes, y.dtype_bytes), flops=2 * x.shape[0]))
+
+    def norm(self, x: "Expr", name: Optional[str] = None) -> Expr:
+        """Euclidean norm → rank-0 scalar tensor."""
+        x = self._expr(x)
+        return self._register(ExprNode(
+            name or self._autoname("norm"), "norm", (x.name,), (),
+            x.dtype_bytes, flops=2 * max(1, int(math.prod(x.shape))) + 1))
+
+    # -- elementwise family -----------------------------------------------
+    def _binary(self, op: str, a, b, name: Optional[str]) -> Expr:
+        a, b = self._expr(a), self._expr(b)
+        if a.shape == b.shape:
+            shape = a.shape
+        elif a.shape == ():
+            shape = b.shape
+        elif b.shape == ():
+            shape = a.shape
+        else:
+            raise ValueError(f"{op}: shapes {a.shape} and {b.shape} do not "
+                             "broadcast (equal or scalar only)")
+        flops = _EW_FLOPS[op] * max(1, int(math.prod(shape)))
+        return self._register(ExprNode(
+            name or self._autoname(op), op, (a.name, b.name), shape,
+            max(a.dtype_bytes, b.dtype_bytes), flops=flops))
+
+    def add(self, a, b, name: Optional[str] = None) -> Expr:
+        return self._binary("add", a, b, name)
+
+    def sub(self, a, b, name: Optional[str] = None) -> Expr:
+        return self._binary("sub", a, b, name)
+
+    def mul(self, a, b, name: Optional[str] = None) -> Expr:
+        return self._binary("mul", a, b, name)
+
+    def div(self, a, b, name: Optional[str] = None) -> Expr:
+        return self._binary("div", a, b, name)
+
+    def neg(self, x, name: Optional[str] = None) -> Expr:
+        x = self._expr(x)
+        return self._register(ExprNode(
+            name or self._autoname("neg"), "neg", (x.name,), x.shape,
+            x.dtype_bytes, flops=max(1, int(math.prod(x.shape)))))
+
+    def axpy(self, alpha, x: "Expr", y: "Expr",
+             name: Optional[str] = None) -> Expr:
+        """``alpha * x + y`` — alpha may be a scalar Expr or a Python float."""
+        alpha, x, y = self._expr(alpha), self._expr(x), self._expr(y)
+        if alpha.shape != ():
+            raise ValueError(f"axpy alpha must be scalar, got {alpha.shape}")
+        if x.shape != y.shape:
+            raise ValueError(f"axpy: x {x.shape} vs y {y.shape}")
+        flops = _EW_FLOPS["axpy"] * max(1, int(math.prod(x.shape)))
+        return self._register(ExprNode(
+            name or self._autoname("axpy"), "axpy",
+            (alpha.name, x.name, y.name), x.shape,
+            max(x.dtype_bytes, y.dtype_bytes), flops=flops))
+
+    def scale(self, alpha, x: "Expr", name: Optional[str] = None) -> Expr:
+        return self.mul(self._expr(alpha), x, name=name)
+
+    # -- structured / irregular ops ---------------------------------------
+    def stencil2d(self, u: "Expr", f: Optional["Expr"] = None, *,
+                  h2: float = 1.0, name: Optional[str] = None) -> Expr:
+        """One Jacobi 5-point sweep on a 2-D grid (periodic boundaries):
+        ``u' = 0.25 * (N + S + E + W + h2 * f)``."""
+        u = self._expr(u)
+        if len(u.shape) != 2:
+            raise ValueError(f"stencil2d needs a 2-D grid, got {u.shape}")
+        if f is not None:
+            f = self._expr(f)
+            if f.shape != u.shape:
+                raise ValueError(f"stencil2d: f {f.shape} vs u {u.shape}")
+        ins = (u.name,) if f is None else (u.name, f.name)
+        flops = _EW_FLOPS["stencil2d"] * int(math.prod(u.shape))
+        return self._register(ExprNode(
+            name or self._autoname("stencil2d"), "stencil2d", ins, u.shape,
+            u.dtype_bytes, flops=flops, params=_as_params({"h2": h2})))
+
+    def gather(self, x: "Expr", idx: "Expr",
+               name: Optional[str] = None) -> Expr:
+        """Data-dependent row gather ``x[idx]`` — *irregular*: its reuse
+        cannot be planned, so the co-designer must leave it implicit."""
+        x, idx = self._expr(x), self._expr(idx)
+        # an index leaf must draw from the gathered tensor's rows, or the
+        # reference oracle would generate out-of-range indices that
+        # jnp.take silently clamps
+        ind = idx.node
+        if ind.is_leaf and ind.param("init") == "indices":
+            high = ind.param("high")
+            if high is None:
+                self.nodes[idx.name] = dataclasses.replace(
+                    ind, params=_as_params({**dict(ind.params),
+                                            "high": int(x.shape[0])}))
+            elif int(high) > x.shape[0]:
+                raise ValueError(
+                    f"gather: index leaf {idx.name!r} ranges to {high} but "
+                    f"{x.name} has {x.shape[0]} rows; pass an explicit "
+                    "high= no larger than every gathered tensor")
+        shape = tuple(idx.shape) + tuple(x.shape[1:])
+        return self._register(ExprNode(
+            name or self._autoname("gather"), "gather",
+            (x.name, idx.name), shape, x.dtype_bytes,
+            flops=0, irregular=True))
+
+    # -- outputs & lowering -------------------------------------------------
+    def output(self, *exprs: "Expr") -> None:
+        """Mark expressions as graph outputs (written back to HBM)."""
+        for e in exprs:
+            e = self._expr(e)
+            if e.node.is_leaf:
+                raise ValueError(f"output {e.name!r} is a leaf; outputs "
+                                 "must be produced by an op")
+            if e.name not in self.outputs:
+                self.outputs.append(e.name)
+
+    def to_graph(self, name: Optional[str] = None) -> OpGraph:
+        """Lower the expression DAG to the analysis-level ``OpGraph``."""
+        if not self.outputs:
+            raise ValueError(f"program {self.name!r} has no outputs; call "
+                             "Program.output(...) before lowering")
+        out_set = set(self.outputs)
+        with OpGraph.build(name or self.name) as b:
+            for nname in self._order:
+                nd = self.nodes[nname]
+                if nd.op == "input":
+                    b.input(nname, nd.shape, dtype_bytes=nd.dtype_bytes)
+                elif nd.op == "operator":
+                    b.weight(nname, nd.shape, dtype_bytes=nd.dtype_bytes)
+                else:
+                    kind = (TensorKind.OUTPUT if nname in out_set
+                            else TensorKind.INTERMEDIATE)
+                    if nd.op in ("matmul", "einsum"):
+                        b.einsum(nname, nd.param("spec"), list(nd.inputs),
+                                 nname, dtype_bytes=nd.dtype_bytes,
+                                 out_kind=kind)
+                    else:
+                        b.elementwise(nname, list(nd.inputs), nname,
+                                      dtype_bytes=nd.dtype_bytes,
+                                      out_shape=nd.shape, out_kind=kind,
+                                      spec=_SPEC[nd.op],
+                                      irregular=nd.irregular,
+                                      flops=nd.flops)
+        return b.graph
+
+    def fingerprint(self) -> str:
+        """Content hash over nodes + outputs (cache-key component for
+        frontend-built graphs)."""
+        h = hashlib.sha256()
+        for nname in self._order:
+            h.update(repr(dataclasses.astuple(self.nodes[nname])).encode())
+        h.update(repr(self.outputs).encode())
+        return h.hexdigest()
+
+    def leaves(self) -> List[ExprNode]:
+        return [self.nodes[n] for n in self._order if self.nodes[n].is_leaf]
+
+    def __repr__(self) -> str:
+        n_ops = sum(1 for nd in self.nodes.values() if not nd.is_leaf)
+        return (f"Program({self.name!r}, {n_ops} ops, "
+                f"{len(self.nodes) - n_ops} leaves, "
+                f"{len(self.outputs)} outputs)")

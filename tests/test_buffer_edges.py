@@ -1,0 +1,137 @@
+"""Edge-case coverage for the implicit (LRU) region of the hybrid buffer:
+eviction exactly at capacity, the stream-bypass threshold boundary, and
+last-use invalidation dropping dirty chunks without writeback traffic.
+"""
+import pytest
+
+from repro.core.buffer import (BufferConfig, TrafficReport, _ImplicitLRU,
+                               simulate)
+from repro.core.graph import OpGraph, TensorKind
+
+KiB = 1024
+
+
+def _lru(cap, chunk=1 * KiB):
+    rep = TrafficReport()
+    return _ImplicitLRU(cap, chunk, rep), rep
+
+
+class TestImplicitLRUEdges:
+    def test_fill_to_exactly_full_capacity_holds_everything(self):
+        lru, rep = _lru(4 * KiB)
+        for i in range(4):
+            lru.access(f"t{i}", 1 * KiB, write=False)
+        assert lru.used == 4 * KiB and len(lru.lines) == 4
+        assert rep.implicit_misses == 4 and rep.implicit_hits == 0
+        # at exactly-full capacity every line is still resident: all hits
+        for i in range(4):
+            lru.access(f"t{i}", 1 * KiB, write=False)
+        assert rep.implicit_hits == 4
+        assert rep.hbm_read == 4 * KiB          # only the compulsory fills
+
+    def test_insert_at_exactly_full_capacity_evicts_exactly_one(self):
+        lru, rep = _lru(4 * KiB)
+        for i in range(4):
+            lru.access(f"t{i}", 1 * KiB, write=False)
+        lru.access("t4", 1 * KiB, write=False)
+        assert lru.used == 4 * KiB              # still exactly full
+        assert ("t0", 0) not in lru.lines       # LRU victim was the oldest
+        assert ("t4", 0) in lru.lines
+        # clean eviction: no writeback traffic
+        assert rep.hbm_write == 0
+
+    def test_dirty_eviction_writes_back(self):
+        lru, rep = _lru(2 * KiB)
+        lru.access("w", 1 * KiB, write=True)    # write-allocate, no fetch
+        assert rep.hbm_read == 0
+        lru.access("a", 1 * KiB, write=False)
+        lru.access("b", 1 * KiB, write=False)   # evicts dirty "w"
+        assert rep.hbm_write == 1 * KiB
+        assert rep.per_tensor["w"] == 1 * KiB
+
+    def test_bypass_threshold_boundary(self):
+        # exactly capacity-sized: cached (chunked), not bypassed
+        lru, rep = _lru(4 * KiB)
+        lru.access("big", 4 * KiB, write=False)
+        assert lru.used == 4 * KiB and len(lru.lines) == 4
+        lru.access("big", 4 * KiB, write=False)
+        assert rep.implicit_hits == 4           # resident on re-access
+        # one byte over: full stream bypass, nothing allocated
+        lru2, rep2 = _lru(4 * KiB)
+        lru2.access("huge", 4 * KiB + 1, write=False)
+        assert lru2.used == 0 and not lru2.lines
+        assert rep2.hbm_read == 4 * KiB + 1
+        assert rep2.implicit_misses == 1
+        lru2.access("huge", 4 * KiB + 1, write=False)
+        assert rep2.hbm_read == 2 * (4 * KiB + 1)   # re-streams every time
+        # bypassed writes stream to HBM directly
+        lru2.access("huge", 4 * KiB + 1, write=True)
+        assert rep2.hbm_write == 4 * KiB + 1
+
+    def test_invalidate_drops_dirty_chunks_without_writeback(self):
+        lru, rep = _lru(4 * KiB)
+        lru.access("dead", 2 * KiB, write=True)
+        assert lru.used == 2 * KiB
+        lru.invalidate("dead")
+        assert lru.used == 0 and not lru.lines
+        lru.flush()
+        assert rep.hbm_write == 0               # dead data never moved
+
+    def test_flush_without_invalidate_writes_dirty_back(self):
+        lru, rep = _lru(4 * KiB)
+        lru.access("d", 2 * KiB, write=True)
+        lru.flush()
+        assert rep.hbm_write == 2 * KiB
+
+
+def _chain_graph(elems=512, dtype_bytes=2):
+    """x(INPUT) -> t(intermediate) -> y(OUTPUT), all ``elems`` elements."""
+    g = OpGraph("chain")
+    g.tensor("x", (elems,), dtype_bytes=dtype_bytes, kind=TensorKind.INPUT)
+    g.elementwise("mk_t", ["x"], "t", dtype_bytes=dtype_bytes)
+    g.elementwise("mk_y", ["t"], "y", dtype_bytes=dtype_bytes,
+                  out_kind=TensorKind.OUTPUT)
+    g.validate()
+    return g
+
+
+class TestSimulateHints:
+    def test_last_use_invalidate_skips_dead_writeback(self):
+        g = _chain_graph()
+        groups = [["mk_t"], ["mk_y"]]
+        t_bytes = g.tensors["t"].bytes
+        y_bytes = g.tensors["y"].bytes
+        cfg = dict(capacity_bytes=64 * KiB, explicit_frac=0.0)
+        with_hint = simulate(g, groups, BufferConfig(
+            **cfg, last_use_invalidate=True))
+        without = simulate(g, groups, BufferConfig(
+            **cfg, last_use_invalidate=False))
+        # the dead intermediate's dirty chunks are dropped, not written back
+        assert with_hint.hbm_write == y_bytes
+        assert without.hbm_write == y_bytes + t_bytes
+        assert with_hint.hbm_read == without.hbm_read
+
+    def test_stream_larger_than_implicit_region_bypasses(self):
+        g = _chain_graph(elems=64 * KiB, dtype_bytes=2)   # 128 KiB tensors
+        groups = [["mk_t"], ["mk_y"]]
+        rep = simulate(g, groups, BufferConfig(
+            capacity_bytes=64 * KiB, explicit_frac=0.0))
+        # t (128 KiB) exceeds the 64 KiB implicit region: its write and its
+        # re-read both stream to/from HBM
+        t_bytes = g.tensors["t"].bytes
+        assert rep.per_tensor["t"] >= 2 * t_bytes
+
+    def test_pin_plan_overflow_rejected_at_exact_boundary(self):
+        g = _chain_graph()
+        groups = [["mk_t"], ["mk_y"]]
+        t_bytes = g.tensors["t"].bytes
+        cap = 2 * t_bytes
+        # explicit region exactly t: pin fits
+        simulate(g, groups, BufferConfig(capacity_bytes=cap,
+                                         explicit_frac=0.5),
+                 pins={"t": (0, 1)})
+        # explicit region one byte short of t: the pin plan is rejected
+        with pytest.raises(ValueError, match="pin plan peak"):
+            simulate(g, groups,
+                     BufferConfig(capacity_bytes=cap - 2, explicit_frac=0.5),
+                     pins={"t": (0, 1)})

@@ -1,0 +1,355 @@
+"""Tests for the HPC workload frontend: expression-DAG builder, workload
+library, numerical reference executor, and the Session integration.
+
+The numerical "goldens" here are mathematical identities (CG residual
+identity r_k = b - A x_k, Jacobi sweep formula, MTTKRP vs raw einsum, unit
+norms) rather than stored float values — they hold on any platform and any
+JAX version, and they check the *DAG semantics*, not one run's bits.  The
+plan-vs-reference checks ARE bitwise: the scheduled order replays the same
+pure ops, so outputs must be identical.
+"""
+import numpy as np
+import pytest
+
+from repro.api import Session
+from repro.core.graph import OpGraph, TensorKind
+from repro.frontends import (Program, build_workload, evaluate,
+                             list_workloads, make_feeds)
+from repro.frontends.reference import execute_plan
+
+
+@pytest.fixture(autouse=True)
+def _hermetic_cache_env(monkeypatch):
+    monkeypatch.delenv("CELLO_NO_CACHE", raising=False)
+    monkeypatch.delenv("CELLO_CACHE_DIR", raising=False)
+
+
+# ---------------------------------------------------------------------------
+# expression builder -> OpGraph lowering
+# ---------------------------------------------------------------------------
+
+class TestExprBuilder:
+    def test_lowering_kinds_shapes_flops(self):
+        p = Program("t")
+        A = p.operator("A", (8, 4))
+        x = p.input("x", (4,))
+        y = p.matmul(A, x, name="y")
+        z = p.norm(y, name="z")
+        p.output(y, z)
+        g = p.to_graph()
+        g.validate()
+        assert g.tensors["A"].kind == TensorKind.WEIGHT
+        assert g.tensors["x"].kind == TensorKind.INPUT
+        assert g.tensors["y"].kind == TensorKind.OUTPUT
+        assert g.tensors["y"].shape == (8,)
+        assert g.tensors["z"].shape == ()
+        assert g.tensors["A"].dtype_bytes == 8          # fp64 model default
+        assert g.ops["y"].flops == 2 * 8 * 4            # einsum-derived
+        assert g.ops["z"].flops == 2 * 8 + 1            # explicit override
+
+    def test_operator_sugar_and_scalar_broadcast(self):
+        p = Program("t")
+        x = p.input("x", (6,))
+        y = p.input("y", (6,))
+        s = p.dot(x, y)
+        v = (x + y) * s - y / 2.0
+        p.output(v)
+        g = p.to_graph()
+        assert g.tensors[v.name].shape == (6,)
+        # python scalar operand became a rank-0 const leaf
+        consts = [nd for nd in p.leaves() if nd.param("init") == "const"]
+        assert len(consts) == 1 and consts[0].param("value") == 2.0
+
+    def test_reflected_scalar_operators(self):
+        p = Program("t")
+        x = p.input("x", (3,))
+        v = 1.0 + (2.0 - x) * 3.0 / (1.0 / -x)
+        p.output(v)
+        feeds = make_feeds(p, seed=0)
+        out = np.asarray(evaluate(p, feeds)[v.name])
+        xv = feeds["x"]
+        np.testing.assert_allclose(out, 1.0 + (2.0 - xv) * 3.0 / (1.0 / -xv),
+                                   rtol=1e-5)
+        # const leaves materialize at their declared (broadcast) shape
+        consts = [nd for nd in p.leaves() if nd.param("init") == "const"]
+        assert all(feeds[nd.name].shape == nd.shape for nd in consts)
+
+    def test_shape_mismatch_raises(self):
+        p = Program("t")
+        x = p.input("x", (6,))
+        y = p.input("y", (5,))
+        with pytest.raises(ValueError, match="broadcast"):
+            p.add(x, y)
+        with pytest.raises(ValueError, match="rank"):
+            p.matmul(p.operator("T3", (2, 2, 2)), x)
+
+    def test_gather_is_irregular_and_excluded_from_pins(self):
+        p = Program("t")
+        tbl = p.operator("tbl", (64, 8))
+        idx = p.input("idx", (16,), init="indices", high=64)
+        got = p.gather(tbl, idx, name="got")
+        out = p.add(got, got, name="out")
+        p.output(out)
+        g = p.to_graph()
+        assert g.ops["got"].irregular
+        from repro.core.reuse import analyze
+        an = analyze(g)
+        assert an.tensors["tbl"].irregular
+        assert "tbl" not in {c.name for c in an.ranked_pin_candidates()}
+
+    def test_duplicate_names_and_leaf_output_raise(self):
+        p = Program("t")
+        x = p.input("x", (4,))
+        with pytest.raises(ValueError, match="duplicate"):
+            p.input("x", (4,))
+        with pytest.raises(ValueError, match="leaf"):
+            p.output(x)
+        with pytest.raises(ValueError, match="no outputs"):
+            Program("empty").to_graph()
+
+    def test_fingerprint_tracks_content(self):
+        a = build_workload("cg", n=32, iters=2)
+        b = build_workload("cg", n=32, iters=2)
+        c = build_workload("cg", n=32, iters=3)
+        assert a.fingerprint() == b.fingerprint()
+        assert a.fingerprint() != c.fingerprint()
+
+
+# ---------------------------------------------------------------------------
+# workload library
+# ---------------------------------------------------------------------------
+
+class TestWorkloadLibrary:
+    @pytest.mark.parametrize("name", list_workloads())
+    def test_builds_and_validates(self, name):
+        params = ({"i": 8, "j": 8, "k": 8, "rank": 2}
+                  if name == "mttkrp" else {"n": 16})
+        g = build_workload(name, **params).to_graph()
+        g.validate()
+        assert g.ops and any(t.kind == TensorKind.OUTPUT
+                             for t in g.tensors.values())
+
+    def test_cg_cross_iteration_reuse_is_in_the_dag(self):
+        g = build_workload("cg", n=32, iters=4).to_graph()
+        # A feeds the initial residual matvec plus one matvec per iteration
+        assert len(g.consumers("A")) == 5
+        # direction vectors have multiple consumers at different distances
+        assert len(g.consumers("p1")) >= 3
+
+    def test_unknown_workload_and_params_raise(self):
+        with pytest.raises(KeyError, match="unknown HPC workload"):
+            build_workload("lattice-qcd")
+        with pytest.raises(TypeError, match="unexpected params"):
+            build_workload("cg", n=16, banana=1)
+
+    @pytest.mark.parametrize("name", list_workloads())
+    def test_non_positive_params_rejected_up_front(self, name):
+        params = ({"i": 8, "j": 8, "k": 0, "rank": 2}
+                  if name == "mttkrp" else
+                  {"n": 16, {"gmres": "restart", "jacobi2d": "sweeps"}
+                   .get(name, "iters"): 0})
+        with pytest.raises(ValueError, match="positive int"):
+            build_workload(name, **params)
+
+
+# ---------------------------------------------------------------------------
+# numerical reference executor (mathematical identities as goldens)
+# ---------------------------------------------------------------------------
+
+class TestReferenceNumerics:
+    def test_cg_residual_identity_and_convergence(self):
+        prog = build_workload("cg", n=48, iters=5)
+        feeds = make_feeds(prog, seed=1)
+        vals = evaluate(prog, feeds, return_all=True)
+        A, b = feeds["A"], feeds["b"]
+        x5, r5 = np.asarray(vals["x5"]), np.asarray(vals["r5"])
+        np.testing.assert_allclose(r5, b - A @ x5, atol=1e-4)
+        norms = [float(np.linalg.norm(np.asarray(vals[f"r{k}"])))
+                 for k in range(6)]
+        assert norms[-1] < 0.1 * norms[0]        # SPD CG converges
+
+    def test_bicgstab_residual_identity(self):
+        prog = build_workload("bicgstab", n=40, iters=3)
+        feeds = make_feeds(prog, seed=2)
+        out = evaluate(prog, feeds)
+        A, b = feeds["A"], feeds["b"]
+        x, r = np.asarray(out["x3"]), np.asarray(out["r3"])
+        np.testing.assert_allclose(r, b - A @ x, atol=1e-4)
+
+    def test_gmres_builds_orthonormal_krylov_basis(self):
+        prog = build_workload("gmres", n=32, restart=5)
+        vals = evaluate(prog, make_feeds(prog, seed=0), return_all=True)
+        V = np.stack([np.asarray(vals[f"v{j}"]) for j in range(6)])
+        gram = V @ V.T
+        np.testing.assert_allclose(gram, np.eye(6), atol=1e-3)
+
+    def test_jacobi2d_matches_manual_sweep(self):
+        prog = build_workload("jacobi2d", n=12, sweeps=3)
+        feeds = make_feeds(prog, seed=4)
+        out = np.asarray(evaluate(prog, feeds)["u3"])
+        u, f = feeds["u0"], feeds["f"]
+        for _ in range(3):
+            u = 0.25 * (np.roll(u, 1, 0) + np.roll(u, -1, 0)
+                        + np.roll(u, 1, 1) + np.roll(u, -1, 1) + f)
+        np.testing.assert_allclose(out, u, atol=1e-5)
+
+    def test_power_iteration_normalizes(self):
+        prog = build_workload("power_iteration", n=24, iters=6)
+        out = evaluate(prog, make_feeds(prog, seed=5))
+        x = np.asarray(out["x6"])
+        np.testing.assert_allclose(np.linalg.norm(x), 1.0, atol=1e-5)
+
+    def test_mttkrp_matches_numpy_einsum(self):
+        prog = build_workload("mttkrp", i=6, j=5, k=4, rank=3)
+        feeds = make_feeds(prog, seed=6)
+        out = evaluate(prog, feeds)
+        X, B, C = feeds["X"], feeds["B"], feeds["C"]
+        m1 = np.einsum("ijk,jr,kr->ir", X, B, C)
+        np.testing.assert_allclose(np.asarray(out["M1"]), m1, rtol=1e-4)
+        np.testing.assert_allclose(np.asarray(out["M2"]),
+                                   np.einsum("ijk,ir,kr->jr", X, m1, C),
+                                   rtol=1e-4)
+
+    def test_gather_reference(self):
+        p = Program("t")
+        tbl = p.operator("tbl", (10, 3))
+        idx = p.input("idx", (4,), init="indices", high=10)
+        p.output(p.gather(tbl, idx, name="g"))
+        feeds = make_feeds(p, seed=7)
+        out = np.asarray(evaluate(p, feeds)["g"])
+        np.testing.assert_array_equal(out, feeds["tbl"][feeds["idx"]])
+
+    def test_gather_index_leaf_inherits_row_range(self):
+        # an index leaf without high= must draw from the gathered tensor's
+        # rows, not its own length — else jnp.take silently clamps
+        p = Program("t")
+        tbl = p.operator("tbl", (8, 3))
+        idx = p.input("idx", (32,), init="indices")
+        p.output(p.gather(tbl, idx, name="g"))
+        feeds = make_feeds(p, seed=11)
+        assert feeds["idx"].max() < 8
+        out = np.asarray(evaluate(p, feeds)["g"])
+        np.testing.assert_array_equal(out, feeds["tbl"][feeds["idx"]])
+        # a later gather over a smaller tensor can't silently clamp
+        small = p.operator("small", (4, 3))
+        with pytest.raises(ValueError, match="rows"):
+            p.gather(small, idx)
+
+    def test_non_topological_order_rejected(self):
+        prog = build_workload("cg", n=8, iters=1)
+        ops = [n for n in prog._order if not prog.nodes[n].is_leaf]
+        with pytest.raises(ValueError, match="not topological"):
+            execute_plan(prog, order=list(reversed(ops)))
+        with pytest.raises(ValueError, match="permutation"):
+            execute_plan(prog, order=ops[:-1])
+
+
+# ---------------------------------------------------------------------------
+# Session integration: trace(workload=...) / from_graph / lower / run
+# ---------------------------------------------------------------------------
+
+class TestSessionHpc:
+    def test_stage_pipeline_end_to_end_matches_reference(self, tmp_path):
+        sess = Session(cache_dir=tmp_path)
+        traced = sess.trace(workload="cg", n=96, iters=4)
+        plan = traced.analyze().codesign().lower()
+        feeds = make_feeds(traced.program, seed=3)
+        got = plan.run(feeds)
+        want = evaluate(traced.program, feeds)
+        assert sorted(got) == sorted(want)
+        for k in want:           # same pure ops, scheduled order: bitwise
+            np.testing.assert_array_equal(np.asarray(got[k]),
+                                          np.asarray(want[k]))
+
+    def test_paper_scale_cg_pins_operator_and_beats_implicit(self, tmp_path):
+        # the acceptance shape: A is exactly the 128 MiB on-chip capacity
+        res = (Session(cache_dir=tmp_path)
+               .trace(workload="cg", n=4096, iters=4).analyze().codesign())
+        pins = res.best.schedule.pins
+        assert "A" in pins
+        assert any(t.startswith("r") for t in pins)
+        assert res.speedup("seq-implicit") > 2.0
+        plan = res.lower()
+        text = plan.explain()
+        assert "A[g" in text and "frontends.reference" in text
+
+    def test_gmres_pins_basis_vectors(self, tmp_path):
+        res = (Session(cache_dir=tmp_path)
+               .trace(workload="gmres", n=4096, restart=4).codesign())
+        pins = set(res.best.schedule.pins)
+        assert "A" in pins and any(t.startswith("w") for t in pins)
+        assert res.speedup("seq-implicit") > 2.0
+
+    def test_trace_memoized_and_cache_hits(self, tmp_path):
+        sess = Session(cache_dir=tmp_path)
+        t1 = sess.trace(workload="jacobi2d", n=64, sweeps=2)
+        assert sess.trace(workload="jacobi2d", n=64, sweeps=2) is t1
+        fresh = t1.codesign()
+        assert not fresh.from_cache
+        again = Session(cache_dir=tmp_path).trace(
+            workload="jacobi2d", n=64, sweeps=2).codesign()
+        assert again.from_cache
+        assert again.best.metrics == fresh.best.metrics
+        assert again.best.schedule.pins == fresh.best.schedule.pins
+
+    def test_workload_params_change_cache_key(self, tmp_path):
+        sess = Session(cache_dir=tmp_path)
+        sess.trace(workload="power_iteration", n=64, iters=2).codesign()
+        other = sess.trace(workload="power_iteration", n=64,
+                           iters=3).codesign()
+        assert not other.from_cache
+
+    def test_bad_trace_kwargs(self, tmp_path):
+        sess = Session(cache_dir=tmp_path)
+        with pytest.raises(ValueError, match="workload builder params"):
+            sess.trace(workload="cg", batch=4, n=16)
+        with pytest.raises(ValueError, match="not combine workload"):
+            sess.trace(phase="decode", workload="cg", n=16)
+        with pytest.raises(ValueError, match="not combine workload"):
+            sess.trace(phase="train", workload="cg", n=16)
+        with pytest.raises(TypeError, match="unexpected trace"):
+            sess.trace(phase="train", n=16)
+        with pytest.raises(ValueError, match="no arch config"):
+            sess.trace(phase="train")
+        with pytest.raises(KeyError, match="unknown HPC workload"):
+            sess.trace(workload="sudoku", n=9)
+
+    def test_from_graph_expr_program_and_opgraph(self, tmp_path):
+        p = Program("chain")
+        A = p.operator("A", (64, 64))
+        x = p.input("x", (64,))
+        y = p.matmul(A, A @ x, name="y")
+        traced = Session.from_graph(y, cache_dir=tmp_path)
+        assert traced.arch == "hpc:chain" and p.outputs == ["y"]
+        plan = traced.codesign().lower()
+        out = plan.run(seed=1)
+        feeds = make_feeds(p, seed=1)
+        np.testing.assert_allclose(
+            np.asarray(out["y"]),
+            feeds["A"] @ (feeds["A"] @ feeds["x"]), rtol=1e-4)
+        # raw OpGraph: analyzable/lowerable but not runnable
+        g = OpGraph("raw")
+        g.tensor("a", (16, 16), kind=TensorKind.INPUT)
+        g.tensor("w", (16, 16), kind=TensorKind.WEIGHT)
+        g.einsum("mm", "mk,kn->mn", ["a", "w"], "out",
+                 out_kind=TensorKind.OUTPUT)
+        traced2 = Session.from_graph(g, cache_dir=tmp_path)
+        plan2 = traced2.codesign().lower()
+        with pytest.raises(ValueError, match="frontend-traced"):
+            plan2.run()
+        with pytest.raises(TypeError, match="from_graph"):
+            Session.from_graph(42)
+
+    def test_frontend_plan_has_no_llm_stack(self, tmp_path):
+        designed = (Session(cache_dir=tmp_path)
+                    .trace(workload="cg", n=32, iters=1).codesign())
+        with pytest.raises(ValueError, match="no seq"):
+            designed.lower(seq=8192)
+        plan = designed.lower()
+        with pytest.raises(ValueError, match="serving"):
+            plan.serve()
+        with pytest.raises(ValueError, match="training"):
+            plan.train(data_iter=None, n_steps=1)
+        rep = plan.report()
+        assert rep["arch"] == "hpc:cg"
+        assert rep["speedup_vs_implicit"] > 0
