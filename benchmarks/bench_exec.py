@@ -1,0 +1,73 @@
+"""Table 8 — measured wall-clock per execution backend, next to the cost
+model's predicted speedups.
+
+Every frontend workload is lowered once per backend and *executed for real*:
+``reference`` replays the co-designed order through the jax.numpy
+interpreter; ``pallas`` compiles each fusion group into tile-streaming
+``pl.pallas_call`` kernels (interpret mode off-TPU, so CI exercises the
+actual lowering — interpret wall-clock measures the lowering/dispatch path,
+not TPU kernel time).  ``predicted_speedup_vs_implicit`` is the co-design
+model's claim for the same schedule, reported alongside so the measured
+trajectory can be tracked against it per PR (``BENCH_exec.json``).
+
+``pallas_groups`` / ``jnp_groups`` count how many fusion groups lowered to
+real Pallas kernels vs the jitted jax.numpy fallback;
+``max_rel_err_vs_reference`` is the observed parity gap (the documented
+tolerance is rtol=2e-4 for float32 reduction reassociation).
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Optional
+
+import numpy as np
+
+REPS = 3
+
+
+def _rel_err(got, want) -> float:
+    g, w = np.asarray(got, np.float64), np.asarray(want, np.float64)
+    denom = np.maximum(np.abs(w), 1e-6)
+    return float(np.max(np.abs(g - w) / denom))
+
+
+def run(backend: Optional[str] = None) -> List[str]:
+    import jax
+
+    from repro.frontends import make_feeds
+
+    from .workloads import hpc_exec_workloads
+
+    backends = [backend] if backend else ["reference", "pallas"]
+    rows = ["workload,us_per_call,backend,predicted_speedup_vs_implicit,"
+            "groups,pallas_groups,jnp_groups,max_rel_err_vs_reference"]
+    for name, build in hpc_exec_workloads():
+        traced = build()
+        designed = traced.codesign()
+        feeds = make_feeds(traced.program, seed=0)
+        baseline = None
+        if any(be != "reference" for be in backends):
+            # parity column needs the oracle, whatever backend is measured
+            baseline = designed.lower(backend="reference").run(feeds)
+        for be in backends:
+            plan = designed.lower(backend=be)
+            out = jax.block_until_ready(plan.run(feeds))     # warm compile
+            best = float("inf")
+            for _ in range(REPS):
+                t0 = time.perf_counter()
+                out = jax.block_until_ready(plan.run(feeds))
+                best = min(best, time.perf_counter() - t0)
+            kinds = [gk.kind for gk in plan.group_kernels]
+            err = 0.0
+            if be != "reference" and baseline is not None:
+                err = max(_rel_err(out[k], baseline[k]) for k in baseline)
+            rows.append(
+                f"{name}[{be}],{best * 1e6:.0f},{be},"
+                f"{designed.speedup():.3f},{len(kinds)},"
+                f"{sum(k != 'jnp' for k in kinds)},"
+                f"{sum(k == 'jnp' for k in kinds)},{err:.2e}")
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -11,21 +11,26 @@ the search space, so CELLO vs it is ~1.0 by construction.)  ``pinned``
 lists the winning schedule's explicit-region pins ('+'-joined to stay
 CSV-safe) — for the solvers this is the operator ``A`` plus
 residual/direction vectors.
+
+``--backend NAME`` (via ``benchmarks.run``) appends measured execution
+columns: the plan is lowered for that backend and run once at the paper
+shapes, adding ``backend`` and ``run_us`` wall-clock next to the model
+columns — the model's claims and the executed schedule in one table.
 """
 from __future__ import annotations
 
 import time
-from typing import List
+from typing import List, Optional
 
 from repro.core.search import SearchContext, evaluate_point
 
 from .workloads import hpc_workloads
 
 
-def run() -> List[str]:
+def run(backend: Optional[str] = None) -> List[str]:
     rows = ["workload,us_per_call,cached,best_split,speedup_vs_implicit,"
             "speedup_vs_explicit,speedup_vs_fused_nopin,hbm_reduction,"
-            "pinned"]
+            "pinned" + (",backend,run_us" if backend else "")]
     for name, build in hpc_workloads():
         traced = build()
         t0 = time.perf_counter()
@@ -44,9 +49,20 @@ def run() -> List[str]:
                / max(1, m.hbm_bytes))
         pins = res.best.schedule.pins
         pinned = "+".join(sorted(pins)) if pins else "(none)"
-        rows.append(f"{name},{us:.0f},{int(res.from_cache)},"
-                    f"{res.best.schedule.config.explicit_frac},"
-                    f"{si:.3f},{se:.3f},{sf:.3f},{hbm:.2f},{pinned}")
+        row = (f"{name},{us:.0f},{int(res.from_cache)},"
+               f"{res.best.schedule.config.explicit_frac},"
+               f"{si:.3f},{se:.3f},{sf:.3f},{hbm:.2f},{pinned}")
+        if backend:
+            import jax
+
+            from repro.frontends import make_feeds
+            plan = res.lower(backend=backend)
+            feeds = make_feeds(traced.program, seed=0)
+            jax.block_until_ready(plan.run(feeds))      # warm compile
+            t0 = time.perf_counter()
+            jax.block_until_ready(plan.run(feeds))
+            row += f",{backend},{(time.perf_counter() - t0) * 1e6:.0f}"
+        rows.append(row)
     return rows
 
 

@@ -5,14 +5,18 @@ full traceback is printed (CI logs must be debuggable) before the
 ``ERROR,...`` row.
 
 ``--json PATH`` additionally writes a machine-readable dump
-``{table_title: [{name, us_per_call, derived}, ...]}`` so the per-PR perf
-trajectory (``BENCH_*.json``) can be recorded and diffed.  ``--tables``
-filters tables by case-insensitive substring (comma-separated), which is
-what the CI smoke job uses to run one cheap table.
+``{table_title: [{name, us_per_call, backend, derived}, ...]}`` so the
+per-PR perf trajectory (``BENCH_*.json``) can be recorded and diffed.
+``--tables`` filters tables by case-insensitive substring (comma-separated),
+which is what the CI smoke job uses to run one cheap table.  ``--backend``
+threads an execution backend into the tables that run plans for real (the
+HPC tables 7/8): TABLE 8 restricts to that backend, TABLE 7 gains measured
+``run_us`` wall-clock next to its model columns.
 """
 from __future__ import annotations
 
 import argparse
+import inspect
 import json
 import sys
 import traceback
@@ -21,7 +25,7 @@ from typing import Any, Dict, List
 
 def _tables():
     from . import (bench_speedup, bench_energy, bench_capacity, bench_split,
-                   bench_kernels, bench_roofline, bench_hpc)
+                   bench_kernels, bench_roofline, bench_hpc, bench_exec)
     return [
         ("TABLE 1 — CELLO speedup vs baselines", bench_speedup),
         ("TABLE 2 — energy vs baselines", bench_energy),
@@ -33,6 +37,8 @@ def _tables():
          bench_roofline),
         ("TABLE 7 — HPC DAG speedup vs implicit/explicit/fused baselines",
          bench_hpc),
+        ("TABLE 8 — measured wall-clock per execution backend",
+         bench_exec),
     ]
 
 
@@ -45,8 +51,12 @@ def _maybe_number(cell: str) -> Any:
     return cell
 
 
-def _records(rows: List[str]) -> List[Dict[str, Any]]:
-    """CSV block -> [{name, us_per_call, derived}] (header row first)."""
+def _records(rows: List[str],
+             backend: str = None) -> List[Dict[str, Any]]:
+    """CSV block -> [{name, us_per_call, backend, derived}] (header row
+    first).  ``backend`` records which execution backend produced the
+    wall-clock; a per-row ``backend`` column wins over the global flag,
+    and model-only tables record ``None``."""
     if not rows:
         return []
     header = rows[0].split(",")
@@ -54,13 +64,15 @@ def _records(rows: List[str]) -> List[Dict[str, Any]]:
     for line in rows[1:]:
         cells = line.split(",")
         rec: Dict[str, Any] = {"name": cells[0], "us_per_call": None,
-                               "derived": {}}
+                               "backend": backend, "derived": {}}
         for col, cell in zip(header[1:], cells[1:]):
             if col == "us_per_call":
                 try:
                     rec["us_per_call"] = float(cell)
                 except ValueError:
                     pass
+            elif col == "backend":
+                rec["backend"] = cell
             else:
                 rec["derived"][col] = _maybe_number(cell)
         out.append(rec)
@@ -76,6 +88,10 @@ def main(argv=None) -> None:
     ap.add_argument("--tables", metavar="FILTERS",
                     help="comma-separated case-insensitive substrings; only "
                          "matching table titles run (e.g. --tables hpc)")
+    ap.add_argument("--backend", metavar="NAME",
+                    help="execution backend for the tables that run plans "
+                         "for real (reference | pallas | any registered "
+                         "name); threaded into the HPC tables")
     args = ap.parse_args(argv)
     wanted = ([f.strip().lower() for f in args.tables.split(",") if f.strip()]
               if args.tables else None)
@@ -88,8 +104,12 @@ def main(argv=None) -> None:
             continue
         ran += 1
         print(f"\n# {title}")
+        kwargs = {}
+        if args.backend and \
+                "backend" in inspect.signature(mod.run).parameters:
+            kwargs["backend"] = args.backend
         try:
-            rows = list(mod.run())
+            rows = list(mod.run(**kwargs))
         except Exception as e:                       # pragma: no cover
             failures += 1
             traceback.print_exc(file=sys.stdout)
@@ -98,7 +118,9 @@ def main(argv=None) -> None:
         else:
             for row in rows:
                 print(row)
-            dump[title] = _records(rows)
+            # only tables that actually received the backend kwarg ran a
+            # backend; model-only tables keep backend=None in the dump
+            dump[title] = _records(rows, backend=kwargs.get("backend"))
     if wanted and not ran:
         print(f"no table title matches {args.tables!r}", file=sys.stderr)
         sys.exit(2)

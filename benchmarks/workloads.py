@@ -57,8 +57,30 @@ HPC_SET = [
 
 def hpc_workloads():
     """``(name, build)`` pairs like :func:`workloads`, over ``HPC_SET``."""
+    return _hpc_builds(HPC_SET)
+
+
+#: reduced shapes for the TABLE 8 wall-clock rows: execution backends run
+#: the numerics for real (interpret-mode Pallas on CPU in CI), so the
+#: measured table must stay cheap while still streaming multiple row tiles
+HPC_EXEC_SET = [
+    ("cg", dict(n=1024, iters=3)),
+    ("bicgstab", dict(n=1024, iters=2)),
+    ("gmres", dict(n=1024, restart=4)),
+    ("jacobi2d", dict(n=256, sweeps=4)),
+    ("power_iteration", dict(n=1024, iters=4)),
+    ("mttkrp", dict(i=64, j=64, k=64, rank=16)),
+]
+
+
+def hpc_exec_workloads():
+    """``(name, build)`` pairs over ``HPC_EXEC_SET`` (TABLE 8)."""
+    return _hpc_builds(HPC_EXEC_SET)
+
+
+def _hpc_builds(pairs):
     out = []
-    for wl, params in HPC_SET:
+    for wl, params in pairs:
         sess = Session()
         out.append((f"hpc/{wl}",
                     lambda s=sess, w=wl, p=params: s.trace(workload=w, **p)))

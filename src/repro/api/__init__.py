@@ -16,10 +16,12 @@ hardware together.  This package exposes that pipeline as explicit stages::
 
 Search internals are a registry of composable passes with pluggable ordering
 strategies (``repro.core.search``), re-exported here so new strategies and
-buffer policies plug in without touching call sites.
+buffer policies plug in without touching call sites.  Execution backends
+(``repro.exec``) follow the same registry pattern: frontend plans run via
+``CompiledPlan.run(backend="reference" | "pallas" | ...)``.
 
-Old flat entry points (``co_design``, ``plan_from_codesign``) remain as
-deprecation shims for one release — see ``docs/api_migration.md``.
+The 0.2-era flat entry points (``co_design``, ``plan_from_codesign``) were
+removed in 0.4 — see ``docs/api_migration.md`` for the mapping.
 """
 from ..core.costmodel import HardwareModel, V5E
 from ..core.search import (DEFAULT_SPLITS, EvaluatePass, FusionPass,
@@ -28,6 +30,8 @@ from ..core.search import (DEFAULT_SPLITS, EvaluatePass, FusionPass,
                            SplitSweepPass, STRATEGY_REGISTRY,
                            default_pipeline, get_strategy, register_pass,
                            register_strategy, run_codesign, run_pipeline)
+from ..exec import (EXECUTOR_REGISTRY, Executor, get_backend, list_backends,
+                    register_backend)
 from .artifacts import AnalyzedGraph, CoDesigned, CompiledPlan, TracedGraph
 from .cache import CodesignCache, frontend_fingerprint, graph_fingerprint
 from .session import PHASES, Session
@@ -42,4 +46,6 @@ __all__ = [
     "PASS_REGISTRY", "STRATEGY_REGISTRY", "DEFAULT_SPLITS",
     "default_pipeline", "get_strategy", "register_pass", "register_strategy",
     "run_codesign", "run_pipeline",
+    "Executor", "EXECUTOR_REGISTRY", "get_backend", "list_backends",
+    "register_backend",
 ]

@@ -18,6 +18,7 @@ from typing import TYPE_CHECKING, Any, Dict, Optional, Tuple
 
 from ..configs.base import ArchConfig
 from ..core.graph import OpGraph
+from ..core.lowering import GroupKernel
 from ..core.policy import CelloPlan
 from ..core.reuse import ReuseAnalysis
 from ..core.schedule import CoDesignResult, EvaluatedSchedule
@@ -136,8 +137,9 @@ class CoDesigned:
     def energy_ratio(self, baseline: str = "seq-implicit") -> float:
         return self.result.energy_ratio(baseline)
 
-    def lower(self, *, seq: Optional[int] = None) -> "CompiledPlan":
-        return self.session.lower(self, seq=seq)
+    def lower(self, *, seq: Optional[int] = None,
+              backend: str = "reference") -> "CompiledPlan":
+        return self.session.lower(self, seq=seq, backend=backend)
 
     def __repr__(self) -> str:
         s = self.best.schedule
@@ -157,8 +159,10 @@ class CompiledPlan:
     ``.explain()`` a human-readable schedule/pin/split summary.
 
     Frontend (HPC) plans carry ``cfg=None``: they execute through
-    :meth:`run`, which replays the *scheduled* op order through the
-    ``frontends.reference`` interpreter — no LLM serving stack applies.
+    :meth:`run`, which hands the plan to a registered execution backend
+    (``repro.exec``) — ``reference`` replays the scheduled op order through
+    the jax.numpy interpreter, ``pallas`` compiles each fusion group into
+    tile-streaming kernels.  No LLM serving stack applies.
     """
     cfg: Optional[ArchConfig] = dataclasses.field(repr=False)
     plan: CelloPlan = dataclasses.field(repr=False)
@@ -166,6 +170,12 @@ class CompiledPlan:
         default=None, repr=False, compare=False)
     codesigned: Optional[CoDesigned] = dataclasses.field(
         default=None, repr=False, compare=False)
+    # execution-backend selection (frontend plans): the default backend
+    # `.run()` uses, and the kernel shape chosen for every fusion group
+    # (`core.lowering.select_group_kernels`)
+    backend: str = "reference"
+    group_kernels: Tuple[GroupKernel, ...] = dataclasses.field(
+        default=(), repr=False, compare=False)
 
     @property
     def arch(self) -> str:
@@ -193,25 +203,24 @@ class CompiledPlan:
         return train_loop(self.cfg, self.plan, opt_cfg,
                           data_iter=data_iter, n_steps=n_steps, **kwargs)
 
-    def run(self, feeds=None, *, seed: int = 0) -> Dict[str, Any]:
-        """Execute a frontend plan: replay the co-designed schedule order
-        through the ``jax.numpy`` reference interpreter.
+    def run(self, feeds=None, *, seed: int = 0,
+            backend: Optional[str] = None) -> Dict[str, Any]:
+        """Execute a frontend plan through an execution backend.
 
-        Ops are pure, so this must match ``frontends.reference.evaluate``
-        on the same feeds exactly — the numerical validation every HPC
-        plan ships with.
+        ``backend`` overrides the plan's default (picked at ``lower()``):
+        ``"reference"`` replays the co-designed schedule order through the
+        jax.numpy interpreter — ops are pure, so this matches
+        natural-order evaluation bit-for-bit; ``"pallas"`` runs each
+        fusion group as tile-streaming kernels, matching reference within
+        the tolerances documented in ``docs/execution_backends.md``.
         """
         if self.trace is None or self.trace.program is None:
             raise ValueError("run() needs a frontend-traced plan "
                              "(Session.trace(workload=...) or "
                              "Session.from_graph(program))")
-        from ..frontends.reference import execute_plan   # lazy: pulls in jax
-        order = None
-        if self.codesigned is not None:
-            order = [o for g in self.codesigned.best.schedule.groups
-                     for o in g]
-        return execute_plan(self.trace.program, order=order, feeds=feeds,
-                            seed=seed)
+        from ..exec import get_backend                   # lazy: pulls in jax
+        return get_backend(backend or self.backend).run(
+            self, feeds=feeds, seed=seed)
 
     # -- introspection --------------------------------------------------
     def report(self) -> Dict[str, Any]:
@@ -223,6 +232,10 @@ class CompiledPlan:
         if self.trace is not None:
             out["phase"] = self.trace.phase
             out["shape"] = self.trace.shape_key
+        if self.cfg is None:
+            out["backend"] = self.backend
+            out["group_kernel_kinds"] = [gk.kind
+                                         for gk in self.group_kernels]
         cd = self.codesigned
         if cd is not None:
             m = cd.best.metrics
@@ -280,8 +293,14 @@ class CompiledPlan:
         if self.cfg is None:
             g = self.trace.graph if self.trace is not None else None
             lines.append(
-                "  execution         : frontends.reference interpreter"
-                + (f" over {len(g.ops)} ops" if g is not None else ""))
+                f"  execution backend : {self.backend}"
+                + (f" over {len(g.ops)} ops" if g is not None else "")
+                + " (run(backend=...) to override)")
+            if self.group_kernels:
+                lines.append("  group kernels     :")
+                for i, gk in enumerate(self.group_kernels):
+                    lines.append(f"    g{i} {{{'+'.join(gk.ops)}}}: "
+                                 f"{gk.describe()}")
         else:
             lines += [
                 f"  flash attention   : {p.use_flash_attention} "

@@ -28,7 +28,7 @@ from ..configs import get_config, list_archs
 from ..configs.base import ArchConfig
 from ..core.costmodel import HardwareModel, V5E
 from ..core.graph import OpGraph
-from ..core.lowering import decode_graph, layer_graph
+from ..core.lowering import decode_graph, layer_graph, select_group_kernels
 from ..core.policy import CelloPlan
 from ..core.policy import default_plan as _default_plan
 from ..core.policy import lower_codesign
@@ -271,27 +271,39 @@ class Session:
 
     # -- stage 4: lower --------------------------------------------------
     def lower(self, designed: CoDesigned, *,
-              seq: Optional[int] = None) -> CompiledPlan:
-        """Turn the co-design decision into an executable CelloPlan."""
+              seq: Optional[int] = None,
+              backend: str = "reference") -> CompiledPlan:
+        """Turn the co-design decision into an executable CelloPlan.
+
+        ``backend`` picks the default execution backend ``plan.run()``
+        uses for frontend (HPC) plans — any name registered in
+        ``repro.exec`` (``"reference"``, ``"pallas"``, ...); each run can
+        still override it via ``run(backend=...)``.
+        """
         traced = designed.trace
         if traced.phase == "hpc":
             if seq is not None:
                 raise ValueError("frontend (HPC) plans take no seq=: block "
                                  "sizing comes from the expression shapes")
-            return self._lower_frontend(designed)
+            return self._lower_frontend(designed, backend=backend)
         if seq is None:
             seq = traced.seq if traced.seq is not None else \
                 (traced.kv_len or 4096)
         plan = lower_codesign(self.cfg, designed.result, seq=seq, hw=self.hw)
         return CompiledPlan(cfg=self.cfg, plan=plan, trace=traced,
-                            codesigned=designed)
+                            codesigned=designed, backend=backend)
 
-    def _lower_frontend(self, designed: CoDesigned) -> CompiledPlan:
+    def _lower_frontend(self, designed: CoDesigned, *,
+                        backend: str = "reference") -> CompiledPlan:
         """HPC/frontend lowering: no LLM kernels or remat save-sets apply;
-        the plan carries the co-designed split and executes through the
-        reference interpreter in the scheduled order (`plan.run()`)."""
+        the plan carries the co-designed split, a kernel shape per fusion
+        group (`core.lowering.select_group_kernels`), and executes in the
+        scheduled group order through an execution backend
+        (`plan.run(backend=...)`)."""
         traced = designed.trace
         sched = designed.result.best.schedule
+        kernels = select_group_kernels(traced.graph, sched.groups,
+                                       sched.config.explicit_bytes)
         plan = CelloPlan(
             arch=traced.arch,
             use_flash_attention=False, q_block=0, kv_block=0,
@@ -302,7 +314,8 @@ class Session:
                    f"pins={len(sched.pins)} "
                    f"speedup={designed.result.speedup():.2f}x"))
         return CompiledPlan(cfg=None, plan=plan, trace=traced,
-                            codesigned=designed)
+                            codesigned=designed, backend=backend,
+                            group_kernels=kernels)
 
     # -- fast path (no search) -------------------------------------------
     def default_plan(self, *, seq: int = 4096) -> CompiledPlan:

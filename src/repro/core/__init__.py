@@ -9,25 +9,26 @@ Public API (prefer the staged ``repro.api.Session`` front-end):
   costmodel.HardwareModel / evaluate — speedup + energy model
   policy.CelloPlan / lower_codesign — lowering onto kernels + remat policies
   lowering.layer_graph            — per-arch analysis graphs
+  lowering.select_group_kernels   — fusion group → execution-kernel shapes
 
-Deprecated shims (one release): ``co_design`` → ``search.run_codesign``,
-``plan_from_codesign`` → ``policy.lower_codesign``.  Both warn and delegate;
-results are identical.
+The 0.2-era deprecation shims (``co_design``, ``plan_from_codesign``,
+``candidate_orders``) were removed in 0.4 — see docs/api_migration.md for
+the name-by-name mapping onto the staged API.
 """
 from .graph import GraphBuilder, OpGraph, OpNode, TensorKind, TensorSpec
 from .reuse import ReuseAnalysis, TensorReuse, analyze
 from .buffer import BufferConfig, TrafficReport, simulate, sequential_groups
 from .costmodel import HardwareModel, Metrics, V5E, evaluate
 from .schedule import (CoDesignResult, EvaluatedSchedule, Schedule,
-                       build_groups, choose_pins, co_design)
+                       build_groups, choose_pins)
 from .search import (DEFAULT_SPLITS, EvaluatePass, FusionPass, OrderPass,
                      PinPass, SearchContext, SearchPoint, SearchStrategy,
                      SplitSweepPass, PASS_REGISTRY, STRATEGY_REGISTRY,
                      default_pipeline, get_strategy, register_pass,
                      register_strategy, run_codesign, run_pipeline)
-from .policy import (CelloPlan, default_plan, lower_codesign,
-                     plan_from_codesign)
-from .lowering import decode_graph, layer_graph
+from .policy import CelloPlan, default_plan, lower_codesign
+from .lowering import (GroupKernel, StreamPass, decode_graph, layer_graph,
+                       select_group_kernels)
 
 __all__ = [
     "GraphBuilder", "OpGraph", "OpNode", "TensorKind", "TensorSpec",
@@ -35,11 +36,12 @@ __all__ = [
     "BufferConfig", "TrafficReport", "simulate", "sequential_groups",
     "HardwareModel", "Metrics", "V5E", "evaluate",
     "CoDesignResult", "EvaluatedSchedule", "Schedule",
-    "build_groups", "choose_pins", "co_design",
+    "build_groups", "choose_pins",
     "DEFAULT_SPLITS", "EvaluatePass", "FusionPass", "OrderPass", "PinPass",
     "SearchContext", "SearchPoint", "SearchStrategy", "SplitSweepPass",
     "PASS_REGISTRY", "STRATEGY_REGISTRY", "default_pipeline", "get_strategy",
     "register_pass", "register_strategy", "run_codesign", "run_pipeline",
-    "CelloPlan", "default_plan", "lower_codesign", "plan_from_codesign",
-    "decode_graph", "layer_graph",
+    "CelloPlan", "default_plan", "lower_codesign",
+    "GroupKernel", "StreamPass", "decode_graph", "layer_graph",
+    "select_group_kernels",
 ]

@@ -23,7 +23,8 @@ Conventions:
 """
 from __future__ import annotations
 
-from typing import Optional
+import dataclasses
+from typing import Optional, Tuple
 
 from ..configs.base import ArchConfig
 from .graph import GraphBuilder, OpGraph, TensorKind
@@ -256,3 +257,225 @@ def decode_graph(cfg: ArchConfig, batch: int, kv_len: int) -> OpGraph:
         b.elementwise("res2", [x_mid, m], "x_out", flops_per_elem=1,
                       out_kind=TensorKind.OUTPUT, out_shape=(bb, 1, d))
     return b.graph
+
+
+# ---------------------------------------------------------------------------
+# group -> kernel-shape selection (execution backends)
+# ---------------------------------------------------------------------------
+#
+# A co-designed plan's fusion groups are *claims*: "these ops run as one
+# tile-streaming pass through the explicit region".  The execution backends
+# (`repro.exec`) make the claim real; this selection decides, per group,
+# which kernel shape the claim lowers to:
+#
+#   ``stream`` — `pl.pallas_call` passes with a 1-D grid over row tiles of
+#                the pass's shared streamed length; contraction right-hand
+#                sides stay resident in VMEM across every tile (constant
+#                index map), rank-0 dot/norm reductions accumulate across
+#                grid steps, and scalar epilogues run once on the final
+#                tile.  A group usually lowers to ONE pass; it splits into
+#                sequential passes exactly where a contraction reads a
+#                vector produced earlier in the same group (the value must
+#                fully materialize before it can be a resident operand).
+#   ``block``  — one `pl.pallas_call` with whole arrays as single blocks:
+#                stencil sweeps need halo rows, so they cannot row-stream
+#                without overlap; the explicit region holds the full grid.
+#   ``jnp``    — jitted jax.numpy fallback for shapes the streamer cannot
+#                express (irregular gathers, scans, >2-operand einsums,
+#                mixed streamed lengths); ``reason`` records why.
+
+#: einsum specs the tile-streamer lowers: LHS streams row tiles, RHS stays
+#: resident (spec -> index of the resident operand)
+STREAM_EINSUMS = {"ab,b->a": 1, "ab,bc->ac": 1}
+#: rank-0 contraction of two streamed vectors (rank-1 @ rank-1)
+REDUCE_EINSUMS = ("a,a->",)
+
+_TILE_ROW_CANDIDATES = (1024, 512, 256, 128, 64, 32, 16, 8, 4, 2, 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamPass:
+    """One tile-streaming pallas pass over a slice of a fusion group."""
+    ops: Tuple[str, ...]
+    rows: int                       # streamed leading-dim length
+    tile_rows: int                  # rows per grid step (divides ``rows``)
+    resident: Tuple[str, ...]       # operands held in VMEM across all tiles
+    reductions: Tuple[str, ...]     # rank-0 accumulators in this pass
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupKernel:
+    """The kernel shape selected for one fusion group."""
+    ops: Tuple[str, ...]
+    kind: str                       # "stream" | "block" | "jnp"
+    passes: Tuple[StreamPass, ...] = ()   # populated for kind == "stream"
+    reason: str = ""                # why a jnp fallback was selected
+
+    def describe(self) -> str:
+        if self.kind == "stream":
+            bits = []
+            for p in self.passes:
+                res = f" res={'+'.join(p.resident)}" if p.resident else ""
+                red = f" acc={'+'.join(p.reductions)}" if p.reductions \
+                    else ""
+                bits.append(f"{p.rows}r/{p.tile_rows}t{res}{red}")
+            tag = " | ".join(bits)
+            n = len(self.passes)
+            return (f"pallas-stream[{tag}]" if n == 1
+                    else f"pallas-stream[{n} passes: {tag}]")
+        if self.kind == "block":
+            return "pallas-block[halo ops, full-array block]"
+        return f"jnp-fallback({self.reason})"
+
+
+def _pick_tile_rows(rows: int, per_row_bytes: int, resident_bytes: int,
+                    explicit_bytes: int) -> int:
+    """Largest row tile (a divisor of ``rows``) whose streaming working set
+    fits the explicit region.  The co-design's own fusion-legality check
+    (`schedule.fusable`) guaranteed *some* tile fits; if the chosen split
+    went all-implicit we still stream, at the finest granularity."""
+    budget = max(explicit_bytes - resident_bytes, 0)
+    for t in _TILE_ROW_CANDIDATES:
+        if t <= rows and rows % t == 0 and t * per_row_bytes <= budget:
+            return t
+    return next(t for t in _TILE_ROW_CANDIDATES
+                if t <= rows and rows % t == 0)
+
+
+def select_group_kernels(graph: OpGraph, groups, explicit_bytes: int
+                         ) -> Tuple[GroupKernel, ...]:
+    """Pick a kernel shape for every fusion group of a frontend plan.
+
+    Pure graph-level classification (shapes + op specs); the expression
+    semantics needed to *execute* each shape live in ``repro.exec``.
+    """
+    return tuple(_select_one(graph, list(g), explicit_bytes)
+                 for g in groups)
+
+
+def _segment_group(graph: OpGraph, group) -> list:
+    """Split a group into streaming passes.  A new pass starts where an op
+    needs a value that only exists once the current pass *completes*:
+
+    * a contraction whose resident operand was produced earlier in the
+      group (the vector must fully materialize before it can sit in VMEM),
+    * a tiled op reading a rank-0 scalar produced earlier in the group
+      (reductions/epilogues finalize on the last tile).  ``fusable()``
+      never emits such groups, but ``select_group_kernels`` is public API
+      and must be safe for any group handed to it.
+    """
+    segments, cur, produced = [], [], set()
+    for oname in group:
+        op = graph.ops[oname]
+        needs_break = False
+        if op.is_einsum and op.spec in STREAM_EINSUMS:
+            needs_break = op.inputs[STREAM_EINSUMS[op.spec]] in produced
+        if not needs_break and graph.tensors[op.output].shape != ():
+            needs_break = any(t in produced
+                              and graph.tensors[t].shape == ()
+                              for t in op.inputs)
+        if needs_break and cur:
+            segments.append(cur)
+            cur, produced = [], set()
+        cur.append(oname)
+        produced.add(op.output)
+    if cur:
+        segments.append(cur)
+    return segments
+
+
+def _select_one(graph: OpGraph, group, explicit_bytes: int) -> GroupKernel:
+    ops = [graph.ops[o] for o in group]
+    gops = tuple(group)
+
+    for op in ops:
+        if op.irregular or op.spec in ("gather", "scan"):
+            return GroupKernel(gops, "jnp",
+                               reason=f"{op.name}: irregular/scan reuse")
+
+    # stencil sweeps need halo rows -> whole-array block kernel; they may
+    # chain with same-shape elementwise ops inside the group
+    if any(op.spec == "stencil2d" for op in ops):
+        shapes = {graph.tensors[op.output].shape for op in ops}
+        if len(shapes) != 1 or not all(op.spec in ("stencil2d", "ew")
+                                       for op in ops):
+            return GroupKernel(gops, "jnp",
+                               reason="stencil mixed with non-halo ops")
+        return GroupKernel(gops, "block")
+
+    passes = []
+    for seg in _segment_group(graph, group):
+        sp = _classify_pass(graph, seg, explicit_bytes)
+        if isinstance(sp, str):                    # rejection reason
+            return GroupKernel(gops, "jnp", reason=sp)
+        passes.append(sp)
+    return GroupKernel(gops, "stream", passes=tuple(passes))
+
+
+def _classify_pass(graph: OpGraph, seg, explicit_bytes: int):
+    """One segment -> :class:`StreamPass`, or a rejection-reason string."""
+    ops = [graph.ops[o] for o in seg]
+    produced = {op.output for op in ops}
+    rows = None
+    per_row = 0
+    resident = []
+    reductions = []
+    streamed_seen = set()
+
+    def _stream(tname) -> bool:
+        """Account ``tname`` as streamed; False on row-count clash."""
+        nonlocal rows, per_row
+        spec = graph.tensors[tname]
+        n = spec.shape[0]
+        if rows is None:
+            rows = n
+        elif rows != n:
+            return False
+        if tname not in streamed_seen:
+            streamed_seen.add(tname)
+            per_row += spec.bytes // max(1, n)
+        return True
+
+    for op in ops:
+        oshape = graph.tensors[op.output].shape
+        if op.is_einsum and op.spec in REDUCE_EINSUMS:
+            if not all(_stream(t) for t in op.inputs):
+                return f"{op.name}: mixed row counts"
+            reductions.append(op.output)
+        elif op.is_einsum:
+            rhs = STREAM_EINSUMS.get(op.spec)
+            if rhs is None:
+                return f"{op.name}: einsum {op.spec!r} beyond the streamer"
+            if op.inputs[rhs] in produced:
+                return f"{op.name}: contraction RHS produced in-pass"
+            if not _stream(op.inputs[1 - rhs]) or not _stream(op.output):
+                return f"{op.name}: mixed row counts"
+            if op.inputs[rhs] not in resident:
+                resident.append(op.inputs[rhs])
+        elif op.spec == "reduce":
+            if any(len(graph.tensors[t].shape) != 1 for t in op.inputs):
+                return f"{op.name}: non-vector reduction"
+            if not all(_stream(t) for t in op.inputs):
+                return f"{op.name}: mixed row counts"
+            reductions.append(op.output)
+        elif op.spec == "ew":
+            if oshape == ():        # scalar epilogue (beta = rs'/rs, ...)
+                continue
+            for t in list(op.inputs) + [op.output]:
+                if graph.tensors[t].shape == ():
+                    continue        # broadcast scalar operand
+                if graph.tensors[t].shape != oshape:
+                    return f"{op.name}: operand shape mismatch"
+                if not _stream(t):
+                    return f"{op.name}: mixed row counts"
+        else:
+            return f"{op.name}: op spec {op.spec!r}"
+
+    if rows is None:                # nothing streams: scalar-only group
+        return "scalar-only group"
+
+    res_bytes = sum(graph.tensors[t].bytes for t in resident)
+    tile = _pick_tile_rows(rows, per_row, res_bytes,
+                           max(explicit_bytes, 1 << 20))
+    return StreamPass(ops=tuple(seg), rows=rows, tile_rows=tile,
+                      resident=tuple(resident), reductions=tuple(reductions))

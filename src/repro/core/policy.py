@@ -16,7 +16,6 @@ The co-design result (fusion groups + pins + buffer split) becomes:
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from typing import Tuple
 
 import jax
@@ -136,19 +135,9 @@ def lower_codesign(cfg: ArchConfig, result: CoDesignResult,
     )
 
 
-def plan_from_codesign(cfg: ArchConfig, result: CoDesignResult,
-                       seq: int = 4096, hw: HardwareModel = V5E) -> CelloPlan:
-    """Deprecated alias of :func:`lower_codesign`.
-
-    .. deprecated:: 0.2
-       Use ``repro.api.Session(...).trace().analyze().codesign().lower()``
-       or :func:`lower_codesign` directly.  Produces identical plans.
-    """
-    warnings.warn(
-        "repro.core.plan_from_codesign() is deprecated; use "
-        "repro.api.Session(...).lower() or repro.core.policy.lower_codesign()",
-        DeprecationWarning, stacklevel=2)
-    return lower_codesign(cfg, result, seq=seq, hw=hw)
+# ``plan_from_codesign`` (the 0.2-era deprecation shim for
+# :func:`lower_codesign`) was removed in 0.4 after its promised one-release
+# window — see docs/api_migration.md.
 
 
 def default_plan(cfg: ArchConfig, seq: int = 4096,

@@ -21,11 +21,10 @@ capacity explicit).
 from __future__ import annotations
 
 import dataclasses
-import warnings
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Sequence, Tuple
 
 from .buffer import BufferConfig, TrafficReport
-from .costmodel import HardwareModel, Metrics, V5E
+from .costmodel import Metrics
 from .graph import OpGraph, TensorKind
 from .reuse import ReuseAnalysis
 
@@ -229,39 +228,7 @@ def choose_pins(graph: OpGraph, groups: Sequence[Sequence[str]],
     return abs_pins if abs_saved > dense_saved else dense_pins
 
 
-# --------------------------------------------------------------------------
-# candidate orders (kept as a compatibility alias for the strategy registry)
-# --------------------------------------------------------------------------
-
-def candidate_orders(graph: OpGraph, max_orders: int = 64) -> List[List[str]]:
-    """Deprecated alias: the 'default' strategy in ``core.search``."""
-    warnings.warn(
-        "repro.core.candidate_orders() is deprecated; use "
-        "repro.core.search.get_strategy('default').orders()",
-        DeprecationWarning, stacklevel=2)
-    from .search import get_strategy
-    return get_strategy("default").orders(graph, max_orders)
-
-
-# --------------------------------------------------------------------------
-# the co-design search (deprecated shim over the pass pipeline)
-# --------------------------------------------------------------------------
-
-def co_design(graph: OpGraph, *, capacity_bytes: Optional[int] = None,
-              hw: HardwareModel = V5E, max_orders: int = 16
-              ) -> CoDesignResult:
-    """Joint schedule × buffer-split search. Returns best + baselines.
-
-    .. deprecated:: 0.2
-       Use :class:`repro.api.Session` (``Session(arch).trace().analyze()
-       .codesign()``) or :func:`repro.core.search.run_codesign`.  This shim
-       delegates to the pass pipeline and produces identical results.
-    """
-    warnings.warn(
-        "repro.core.co_design() is deprecated; use repro.api.Session "
-        "(staged trace/analyze/codesign/lower) or "
-        "repro.core.search.run_codesign()",
-        DeprecationWarning, stacklevel=2)
-    from .search import run_codesign
-    return run_codesign(graph, capacity_bytes=capacity_bytes, hw=hw,
-                        max_orders=max_orders)
+# The 0.2-era shims (``co_design``, ``candidate_orders``) were removed in
+# 0.4 after their promised one-release deprecation window: use
+# ``repro.api.Session`` / ``repro.core.search.run_codesign`` and
+# ``core.search.get_strategy(...).orders()`` — see docs/api_migration.md.

@@ -330,8 +330,8 @@ def run_codesign(graph: OpGraph, *, capacity_bytes: Optional[int] = None,
                  natural_analysis: Optional[ReuseAnalysis] = None):
     """Joint schedule × buffer-split search. Returns best + baselines.
 
-    The engine behind the deprecated ``schedule.co_design`` and the staged
-    ``repro.api.Session.codesign`` stage.  ``natural_analysis`` (from a
+    The engine behind the staged ``repro.api.Session.codesign`` stage (and
+    the removed 0.2-era ``co_design``).  ``natural_analysis`` (from a
     prior analyze() stage) pre-seeds the per-order analysis cache — analyze
     is pure in (graph, order), so seeding cannot change results.
     """

@@ -1,0 +1,30 @@
+"""`repro.exec` — pluggable execution backends for compiled plans.
+
+The co-design toolchain decides *how* a workload should run (order, fusion
+groups, pins, buffer split); this package is where those decisions become
+computation.  ``CompiledPlan.run(backend=...)`` resolves a backend by name
+from the same kind of registry as ``core.search.SearchStrategy``:
+
+  ``reference`` — the ``jax.numpy`` interpreter (op-by-op, full tensors),
+                  the bit-exact oracle every other backend validates against,
+  ``pallas``    — each fusion group as tile-streaming ``pl.pallas_call``
+                  kernels (``interpret=True`` off-TPU), honoring the
+                  co-designed group order end-to-end.
+
+Add a backend by subclassing :class:`Executor` and calling
+:func:`register_backend` — see ``docs/execution_backends.md``.
+"""
+from .base import (EXECUTOR_REGISTRY, Executor, get_backend, list_backends,
+                   plan_groups, plan_order, plan_program, register_backend)
+from .pallas import PallasExecutor
+from .reference import ReferenceExecutor, evaluate, eval_node, execute_plan
+
+register_backend(ReferenceExecutor)
+register_backend(PallasExecutor)
+
+__all__ = [
+    "EXECUTOR_REGISTRY", "Executor", "get_backend", "list_backends",
+    "register_backend", "plan_groups", "plan_order", "plan_program",
+    "ReferenceExecutor", "PallasExecutor",
+    "evaluate", "eval_node", "execute_plan",
+]

@@ -1,0 +1,424 @@
+"""The ``pallas`` execution backend: co-designed groups as real kernels.
+
+Every fusion group of a lowered plan executes as `pl.pallas_call` kernels
+shaped by :func:`repro.core.lowering.select_group_kernels`:
+
+* ``stream`` passes run a 1-D grid over row tiles of the pass's shared
+  streamed length.  Contraction right-hand sides (and any other full-block
+  operands) use a *constant index map*, so Pallas keeps them resident in
+  VMEM across every grid step — the execution-level image of the plan's
+  explicit-region pins.  Rank-0 dot/norm reductions accumulate into a
+  revisited ``(1,)`` output block across the pass; scalar epilogues
+  (``beta = rs'/rs``) run once on the final tile.
+* ``block`` kernels hold whole arrays as single blocks (stencil sweeps need
+  halo rows, which row tiles cannot provide without overlap).
+* ``jnp`` groups — irregular gathers, >2-operand einsums, scalar-only
+  groups — fall back to one jitted ``jax.numpy`` closure per group.
+
+On CPU (and any non-TPU backend) kernels run with ``interpret=True``, so CI
+exercises the real lowering; on TPU they compile through Mosaic with the
+grid marked ``arbitrary`` (accumulation makes steps order-dependent).
+Override with ``CELLO_PALLAS_INTERPRET=0/1``.
+
+Numerics: tiled reductions re-associate the sum (per-tile partials), so
+outputs match the ``reference`` backend within the tolerances documented in
+``docs/execution_backends.md`` rather than bitwise.  Everything elementwise,
+matvec rows, block kernels, and jnp fallbacks use the reference rules
+verbatim.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Callable, Dict, List, Sequence, Set, Tuple
+
+from ..core.lowering import (GroupKernel, STREAM_EINSUMS, StreamPass,
+                             select_group_kernels)
+from .base import Executor, plan_groups, plan_program
+from .reference import eval_node
+
+
+def use_interpret() -> bool:
+    """Interpret Pallas kernels unless we are actually on a TPU (CI and
+    laptops exercise the same lowering through the interpreter)."""
+    env = os.environ.get("CELLO_PALLAS_INTERPRET")
+    if env is not None:
+        return env.strip().lower() not in ("0", "false", "no", "")
+    import jax
+    return jax.default_backend() != "tpu"
+
+
+def _pallas_call_kwargs(interpret: bool) -> Dict[str, Any]:
+    if interpret:
+        return {"interpret": True}
+    from ..kernels._compat import CompilerParams
+    # accumulating reductions make grid steps order-dependent: the grid
+    # dimension must not be parallelized across cores
+    return {"compiler_params": CompilerParams(
+        dimension_semantics=("arbitrary",))}
+
+
+# --------------------------------------------------------------------------
+# node classification inside a streaming pass
+# --------------------------------------------------------------------------
+
+def _node_class(node) -> str:
+    """"tiled" | "reduce" | "epilogue" for one expr node in a stream pass."""
+    if node.op in ("dot", "norm"):
+        return "reduce"
+    if node.shape == ():
+        # a rank-0 matmul (``a,a->``) is a reduction; rank-0 elementwise
+        # (alpha = rs/pAp) is a scalar epilogue
+        return "reduce" if node.op in ("matmul", "einsum") else "epilogue"
+    return "tiled"
+
+
+# --------------------------------------------------------------------------
+# kernel builders (one per GroupKernel kind)
+# --------------------------------------------------------------------------
+
+class _StreamCall:
+    """One tile-streaming ``pl.pallas_call`` for a :class:`StreamPass`."""
+
+    def __init__(self, program, sp: StreamPass, needed: Set[str]):
+        self.nodes = [program.nodes[o] for o in sp.ops]
+        self.sp = sp
+        produced = {nd.name for nd in self.nodes}
+        shapes = {n: program.nodes[n].shape
+                  for nd in self.nodes for n in (*nd.inputs, nd.name)}
+        self.shapes = shapes
+
+        stream_in: List[str] = []
+        scalar_in: List[str] = []
+        res_in = list(sp.resident)
+
+        def _want(name: str, bucket: List[str]):
+            if name not in produced and name not in bucket:
+                bucket.append(name)
+
+        for nd in self.nodes:
+            cls = _node_class(nd)
+            if cls == "tiled" and nd.op in ("matmul", "einsum"):
+                rhs = STREAM_EINSUMS[nd.param("spec")]
+                _want(nd.inputs[1 - rhs], stream_in)
+            elif cls == "tiled":
+                for t in nd.inputs:
+                    _want(t, scalar_in if shapes[t] == () else stream_in)
+            elif cls == "reduce":
+                for t in nd.inputs:
+                    _want(t, stream_in)
+            else:                                   # epilogue: all scalars
+                for t in nd.inputs:
+                    _want(t, scalar_in)
+
+        self.stream_in, self.res_in, self.scalar_in = \
+            stream_in, res_in, scalar_in
+        # reductions always need an output block to accumulate into;
+        # streamed / epilogue values only when read outside this pass
+        self.red_out = [nd.name for nd in self.nodes
+                        if _node_class(nd) == "reduce"]
+        self.stream_out = [nd.name for nd in self.nodes
+                           if _node_class(nd) == "tiled"
+                           and nd.name in needed]
+        self.epi_out = [nd.name for nd in self.nodes
+                        if _node_class(nd) == "epilogue"
+                        and nd.name in needed]
+        self.needed = needed
+        self._built: Dict[Any, Callable] = {}
+
+    # -- pallas plumbing ------------------------------------------------
+    def _specs(self, dtype):
+        import jax
+        from jax.experimental import pallas as pl
+        tr = self.sp.tile_rows
+
+        def stream_spec(shape):
+            if len(shape) == 1:
+                return pl.BlockSpec((tr,), lambda i: (i,))
+            return pl.BlockSpec((tr,) + shape[1:],
+                                lambda i: (i,) + (0,) * (len(shape) - 1))
+
+        def full_spec(shape):
+            shape = shape or (1,)            # rank-0 passed as (1,)
+            return pl.BlockSpec(shape, lambda i: (0,) * len(shape))
+
+        in_specs = ([stream_spec(self.shapes[n]) for n in self.stream_in]
+                    + [full_spec(self.shapes[n]) for n in self.res_in]
+                    + [full_spec(()) for n in self.scalar_in])
+        out_specs, out_shape = [], []
+        for n in self.red_out + self.epi_out:
+            out_specs.append(full_spec(()))
+            out_shape.append(jax.ShapeDtypeStruct((1,), dtype))
+        for n in self.stream_out:
+            out_specs.append(stream_spec(self.shapes[n]))
+            out_shape.append(jax.ShapeDtypeStruct(self.shapes[n], dtype))
+        return in_specs, out_specs, out_shape
+
+    def _build(self, dtype):
+        import jax.numpy as jnp
+        from jax.experimental import pallas as pl
+
+        n_tiles = self.sp.rows // self.sp.tile_rows
+        nodes, shapes = self.nodes, self.shapes
+        n_stream, n_res = len(self.stream_in), len(self.res_in)
+        n_scal = len(self.scalar_in)
+        scalar_outs = self.red_out + self.epi_out
+        stream_out_set = set(self.stream_out)
+        red_set = set(self.red_out)
+        epi_nodes = [nd for nd in nodes if _node_class(nd) == "epilogue"]
+
+        def kernel(*refs):
+            i = pl.program_id(0)
+            last = n_tiles - 1
+            sref = dict(zip(self.stream_in, refs[:n_stream]))
+            rref = dict(zip(self.res_in, refs[n_stream:n_stream + n_res]))
+            cref = dict(zip(self.scalar_in,
+                            refs[n_stream + n_res:
+                                 n_stream + n_res + n_scal]))
+            oref = dict(zip(scalar_outs + self.stream_out,
+                            refs[n_stream + n_res + n_scal:]))
+            tiles: Dict[str, Any] = {}
+
+            def stv(name):                      # streamed tile value
+                if name not in tiles:
+                    tiles[name] = sref[name][...]
+                return tiles[name]
+
+            def opv(nd, t):                     # tiled-op operand value
+                return cref[t][0] if shapes[t] == () else stv(t)
+
+            for nd in nodes:
+                cls = _node_class(nd)
+                if cls == "tiled":
+                    if nd.op in ("matmul", "einsum"):
+                        rhs = STREAM_EINSUMS[nd.param("spec")]
+                        val = jnp.dot(stv(nd.inputs[1 - rhs]),
+                                      rref[nd.inputs[rhs]][...],
+                                      preferred_element_type=dtype)
+                    else:
+                        val = eval_node(nd, [opv(nd, t) for t in nd.inputs])
+                    tiles[nd.name] = val
+                    if nd.name in stream_out_set:
+                        oref[nd.name][...] = val
+                elif cls == "reduce":
+                    if nd.op == "norm":
+                        x = stv(nd.inputs[0])
+                        part = jnp.dot(x, x, preferred_element_type=dtype)
+                    else:
+                        part = jnp.dot(stv(nd.inputs[0]),
+                                       stv(nd.inputs[1]),
+                                       preferred_element_type=dtype)
+                    _accumulate(oref[nd.name], part, i)
+                    if nd.op == "norm":
+                        _sqrt_at(oref[nd.name], i == last)
+            if epi_nodes:
+                @pl.when(i == last)
+                def _():
+                    vals: Dict[str, Any] = {}
+
+                    def sval(t):
+                        if t in vals:
+                            return vals[t]
+                        if t in red_set:
+                            return oref[t][0]
+                        return cref[t][0]
+                    for nd in epi_nodes:
+                        vals[nd.name] = eval_node(
+                            nd, [sval(t) for t in nd.inputs])
+                        if nd.name in oref:
+                            oref[nd.name][0] = vals[nd.name]
+
+        in_specs, out_specs, out_shape = self._specs(dtype)
+        return pl.pallas_call(
+            kernel, grid=(n_tiles,), in_specs=in_specs,
+            out_specs=out_specs, out_shape=out_shape,
+            **_pallas_call_kwargs(use_interpret()))
+
+    # -- driver ---------------------------------------------------------
+    def __call__(self, env: Dict[str, Any]) -> Dict[str, Any]:
+        import jax.numpy as jnp
+        dtype = jnp.result_type(
+            *(env[n].dtype for n in
+              self.stream_in + self.res_in + self.scalar_in))
+        call = self._built.get(dtype)
+        if call is None:
+            call = self._built[dtype] = self._build(dtype)
+        args = ([jnp.asarray(env[n], dtype) for n in self.stream_in]
+                + [jnp.asarray(env[n], dtype) for n in self.res_in]
+                + [jnp.reshape(jnp.asarray(env[n], dtype), (1,))
+                   for n in self.scalar_in])
+        outs = call(*args)
+        names = self.red_out + self.epi_out + self.stream_out
+        result = {}
+        for n, v in zip(names, outs):
+            if n in self.needed:
+                result[n] = v[0] if self.shapes[n] == () else v
+        return result
+
+
+def _accumulate(ref, part, i):
+    from jax.experimental import pallas as pl
+
+    @pl.when(i == 0)
+    def _():
+        ref[0] = part
+
+    @pl.when(i > 0)
+    def _():
+        ref[0] = ref[0] + part
+
+
+def _sqrt_at(ref, cond):
+    import jax.numpy as jnp
+    from jax.experimental import pallas as pl
+
+    @pl.when(cond)
+    def _():
+        ref[0] = jnp.sqrt(ref[0])
+
+
+def _group_io(program, nodes, needed: Set[str]):
+    """(external inputs, needed outputs) for one op group, in op order."""
+    produced = {nd.name for nd in nodes}
+    in_names: List[str] = []
+    for nd in nodes:
+        for t in nd.inputs:
+            if t not in produced and t not in in_names:
+                in_names.append(t)
+    return in_names, [nd.name for nd in nodes if nd.name in needed]
+
+
+class _BlockCall:
+    """Whole-array single-block kernel for halo (stencil) groups."""
+
+    def __init__(self, program, ops: Sequence[str], needed: Set[str]):
+        self.nodes = [program.nodes[o] for o in ops]
+        self.in_names, self.out_names = _group_io(program, self.nodes,
+                                                  needed)
+        self.shapes = {n: program.nodes[n].shape
+                       for nd in self.nodes for n in (*nd.inputs, nd.name)}
+        self._built: Dict[Any, Callable] = {}
+
+    def _build(self, dtype):
+        import jax
+        from jax.experimental import pallas as pl
+        n_in = len(self.in_names)
+
+        def kernel(*refs):
+            vals = {n: r[...] for n, r in zip(self.in_names, refs[:n_in])}
+            for nd in self.nodes:
+                vals[nd.name] = eval_node(nd,
+                                          [vals[t] for t in nd.inputs])
+            for n, r in zip(self.out_names, refs[n_in:]):
+                r[...] = vals[n]
+
+        return pl.pallas_call(
+            kernel,
+            out_shape=[jax.ShapeDtypeStruct(self.shapes[n], dtype)
+                       for n in self.out_names],
+            **_pallas_call_kwargs(use_interpret()))
+
+    def __call__(self, env: Dict[str, Any]) -> Dict[str, Any]:
+        import jax.numpy as jnp
+        dtype = jnp.result_type(*(env[n].dtype for n in self.in_names))
+        call = self._built.get(dtype)
+        if call is None:
+            call = self._built[dtype] = self._build(dtype)
+        outs = call(*[jnp.asarray(env[n], dtype) for n in self.in_names])
+        return dict(zip(self.out_names, outs))
+
+
+class _JnpCall:
+    """Jitted jax.numpy fallback for one non-streamable group."""
+
+    def __init__(self, program, ops: Sequence[str], needed: Set[str]):
+        self.nodes = [program.nodes[o] for o in ops]
+        self.in_names, self.out_names = _group_io(program, self.nodes,
+                                                  needed)
+        import jax
+
+        def f(*args):
+            vals = dict(zip(self.in_names, args))
+            for nd in self.nodes:
+                vals[nd.name] = eval_node(nd,
+                                          [vals[t] for t in nd.inputs])
+            return tuple(vals[n] for n in self.out_names)
+        self._fn = jax.jit(f)
+
+    def __call__(self, env: Dict[str, Any]) -> Dict[str, Any]:
+        outs = self._fn(*[env[n] for n in self.in_names])
+        return dict(zip(self.out_names, outs))
+
+
+# --------------------------------------------------------------------------
+# the executor
+# --------------------------------------------------------------------------
+
+def _plan_kernels(plan, groups) -> Tuple[GroupKernel, ...]:
+    kernels = getattr(plan, "group_kernels", ()) or ()
+    if len(kernels) == len(groups):
+        return tuple(kernels)
+    sched = (plan.codesigned.best.schedule
+             if plan.codesigned is not None else None)
+    explicit = sched.config.explicit_bytes if sched is not None else 0
+    return select_group_kernels(plan.trace.graph, groups, explicit)
+
+
+class PallasExecutor(Executor):
+    """Execute the co-designed group order through Pallas kernels."""
+
+    name = "pallas"
+
+    def compile(self, plan):
+        program = plan_program(plan)
+        groups = plan_groups(plan)
+        kernels = _plan_kernels(plan, groups)
+
+        # flatten groups into execution units (stream groups contribute one
+        # unit per pass), then compute per-unit "needed outside" sets and
+        # per-tensor last-use for freeing dead intermediates
+        units: List[Tuple[List[str], Any]] = []     # (ops, kind/StreamPass)
+        for gk in kernels:
+            if gk.kind == "stream":
+                for sp in gk.passes:
+                    units.append((list(sp.ops), sp))
+            else:
+                units.append((list(gk.ops), gk.kind))
+
+        unit_of_op = {o: ui for ui, (ops, _) in enumerate(units)
+                      for o in ops}
+        outputs = set(program.outputs)
+        consumers: Dict[str, List[int]] = {}
+        for ops, _ in units:
+            for o in ops:
+                for t in program.nodes[o].inputs:
+                    consumers.setdefault(t, []).append(unit_of_op[o])
+
+        calls = []
+        for ui, (ops, how) in enumerate(units):
+            needed = {o for o in ops
+                      if o in outputs
+                      or any(c > ui for c in consumers.get(o, ()))}
+            if isinstance(how, StreamPass):
+                calls.append(_StreamCall(program, how, needed))
+            elif how == "block":
+                calls.append(_BlockCall(program, ops, needed))
+            else:
+                calls.append(_JnpCall(program, ops, needed))
+
+        last_use = {t: max(uis) for t, uis in consumers.items()}
+        leaves = [nd.name for nd in program.leaves()]
+
+        def fn(feeds):
+            import jax.numpy as jnp
+            env: Dict[str, Any] = {}
+            for leaf in leaves:
+                if leaf not in feeds:
+                    raise KeyError(f"feeds missing leaf {leaf!r}")
+                env[leaf] = jnp.asarray(feeds[leaf])
+            for ui, call in enumerate(calls):
+                env.update(call(env))
+                for t in [t for t, lu in last_use.items() if lu == ui]:
+                    if t not in outputs and t in env:
+                        del env[t]
+            return {o: env[o] for o in program.outputs}
+        return fn

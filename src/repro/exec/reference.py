@@ -1,0 +1,123 @@
+"""The ``reference`` execution backend: a ``jax.numpy`` interpreter.
+
+This is the bit-exact oracle every other backend is validated against.  It
+executes one op at a time at full-tensor granularity — the per-op rules in
+:func:`eval_node` define the semantics of every expression op, and because
+ops are pure, replaying a co-designed schedule order through the same rules
+must match natural-order evaluation bit-for-bit.
+
+Relocated from ``frontends/reference.py`` (which keeps the deterministic
+feed generator); ``repro.frontends`` re-exports :func:`evaluate` /
+:func:`execute_plan` so existing imports keep working.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Sequence
+
+from .base import Executor, plan_order, plan_program
+
+
+def eval_node(node, ins: List[Any]):
+    """Reference rule for one expression op (``ins`` in operand order)."""
+    import jax.numpy as jnp
+    op = node.op
+    if op == "matmul":
+        return ins[0] @ ins[1]
+    if op == "einsum":
+        return jnp.einsum(node.param("spec"), *ins)
+    if op == "dot":
+        return jnp.dot(ins[0], ins[1])
+    if op == "norm":
+        return jnp.sqrt(jnp.dot(jnp.ravel(ins[0]), jnp.ravel(ins[0])))
+    if op == "add":
+        return ins[0] + ins[1]
+    if op == "sub":
+        return ins[0] - ins[1]
+    if op == "mul":
+        return ins[0] * ins[1]
+    if op == "div":
+        return ins[0] / ins[1]
+    if op == "neg":
+        return -ins[0]
+    if op == "axpy":
+        return ins[0] * ins[1] + ins[2]
+    if op == "stencil2d":
+        u = ins[0]
+        out = 0.25 * (jnp.roll(u, 1, 0) + jnp.roll(u, -1, 0)
+                      + jnp.roll(u, 1, 1) + jnp.roll(u, -1, 1))
+        if len(ins) > 1:
+            out = out + 0.25 * float(node.param("h2", 1.0)) * ins[1]
+        return out
+    if op == "gather":
+        return jnp.take(ins[0], ins[1], axis=0)
+    raise NotImplementedError(f"reference rule missing for op {op!r}")
+
+
+def execute_plan(program, *, order: Optional[Sequence[str]] = None,
+                 feeds: Optional[Dict[str, Any]] = None,
+                 seed: int = 0, return_all: bool = False) -> Dict[str, Any]:
+    """Execute the program's ops in ``order`` (default: build order).
+
+    ``order`` is the flattened schedule from a co-designed plan; it must be
+    a topological permutation of the program's ops — validated here, since
+    a schedule that reads an unproduced tensor is a lowering bug, not a
+    numerics question.
+    """
+    vals: Dict[str, Any] = {}
+    op_names = [n for n in program._order if not program.nodes[n].is_leaf]
+    order = list(order) if order is not None else op_names
+    if sorted(order) != sorted(op_names):
+        raise ValueError(f"order is not a permutation of {program.name!r} "
+                         "ops")
+    if feeds is None:
+        from ..frontends.reference import make_feeds
+        feeds = make_feeds(program, seed)
+    else:
+        feeds = dict(feeds)
+    for nd in program.leaves():
+        if nd.name not in feeds:
+            raise KeyError(f"feeds missing leaf {nd.name!r}")
+        vals[nd.name] = feeds[nd.name]
+    # free dead intermediates as execution passes their last consumer —
+    # paper-scale grids (jacobi2d n=4096 keeps 64 MiB per sweep) would
+    # otherwise all stay resident until the end of the run
+    last_use: Dict[str, int] = {}
+    for step, nname in enumerate(order):
+        for t in program.nodes[nname].inputs:
+            last_use[t] = step
+    keep = set(program.outputs) if not return_all else set(vals) | set(order)
+    for step, nname in enumerate(order):
+        node = program.nodes[nname]
+        missing = [i for i in node.inputs if i not in vals]
+        if missing:
+            raise ValueError(f"schedule order not topological: {nname} "
+                             f"reads unproduced {missing}")
+        vals[nname] = eval_node(node, [vals[i] for i in node.inputs])
+        if not return_all:
+            for t in set(node.inputs):
+                if last_use[t] == step and t not in keep:
+                    del vals[t]
+    if return_all:
+        return vals
+    return {o: vals[o] for o in program.outputs}
+
+
+def evaluate(program, feeds: Optional[Dict[str, Any]] = None, *,
+             seed: int = 0, return_all: bool = False) -> Dict[str, Any]:
+    """Reference evaluation in the program's natural (build) order."""
+    return execute_plan(program, order=None, feeds=feeds, seed=seed,
+                        return_all=return_all)
+
+
+class ReferenceExecutor(Executor):
+    """Replay the co-designed schedule order through the interpreter."""
+
+    name = "reference"
+
+    def compile(self, plan):
+        program = plan_program(plan)
+        order = plan_order(plan)
+
+        def fn(feeds):
+            return execute_plan(program, order=order, feeds=feeds)
+        return fn

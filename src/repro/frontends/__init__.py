@@ -12,12 +12,15 @@ skewed-shape operators and complex cross-iteration reuse:
   ``hpc``        — a library of paper-style workloads built on it (CG,
                    BiCGStab, GMRES(m), Jacobi 2-D sweep, power iteration,
                    MTTKRP), each parameterized by size / skew,
-  ``reference``  — a ``jax.numpy`` interpreter over the expression DAG, the
-                   numerical oracle every lowered plan is validated against.
+  ``reference``  — deterministic per-leaf feeds (``make_feeds``, with a
+                   ``dtype`` knob for fp64 validation) plus re-exports of
+                   the numerical oracle, which now lives with the other
+                   execution backends in ``repro.exec``.
 
 Entry points: ``Session(...).trace(workload="cg", n=4096, iters=4)`` or
 ``Session.from_graph(program)`` — both flow through the standard
-``analyze → codesign → lower`` stages and the codesign disk cache.
+``analyze → codesign → lower`` stages and the codesign disk cache; the
+lowered plan executes via ``plan.run(backend="reference" | "pallas")``.
 """
 from .expr import Expr, ExprNode, Program
 from .hpc import (WORKLOADS, build_workload, cg, bicgstab, gmres, jacobi2d,

@@ -1,26 +1,30 @@
-"""Numerical reference executor for expression-DAG programs.
-
-A ``jax.numpy`` interpreter over :class:`~repro.frontends.expr.Program`:
-every lowered ``CompiledPlan`` for a frontend graph is validated against
-this oracle (``CompiledPlan.run()`` executes the *scheduled* op order
-through the same per-op rules, so plan output must match reference output
-bit-for-bit — ops are pure, only the execution order differs).
+"""Deterministic feeds (and numerics re-exports) for expression programs.
 
 Leaf values come from :func:`make_feeds`: deterministic per (seed, leaf
 name), honoring each leaf's ``init`` hint (``spd`` builds a well-conditioned
 symmetric positive-definite operator so unrolled Krylov iterations stay
 finite; ``zeros`` / ``ones`` / ``const`` / ``indices`` / ``randn`` cover
-the rest).  Execution uses JAX's default float precision — the frontend's
-``dtype_bytes`` annotations drive the traffic/energy model, not the math.
+the rest).  ``dtype`` picks the float width of the generated leaves —
+pass ``np.float64`` (with ``jax_enable_x64`` on) to validate the fp64-modeled
+Krylov workloads at their modeled precision instead of silently downcasting
+to float32.
+
+The interpreter that used to live here is now the ``reference`` execution
+backend (``repro.exec.reference``); :func:`evaluate` / :func:`execute_plan`
+are re-exported for compatibility and remain the numerical oracle every
+lowered plan is validated against.
 """
 from __future__ import annotations
 
 import hashlib
-from typing import Any, Dict, List, Optional, Sequence
+from typing import Dict, Optional
 
 import numpy as np
 
+from ..exec.reference import evaluate, execute_plan      # noqa: F401
 from .expr import ExprNode, Program
+
+__all__ = ["make_feeds", "evaluate", "execute_plan"]
 
 
 def _rng_for(seed: int, name: str) -> np.random.Generator:
@@ -28,16 +32,17 @@ def _rng_for(seed: int, name: str) -> np.random.Generator:
     return np.random.default_rng(int.from_bytes(h[:8], "little"))
 
 
-def _init_leaf(node: ExprNode, seed: int) -> np.ndarray:
+def _init_leaf(node: ExprNode, seed: int,
+               dtype: np.dtype = np.float32) -> np.ndarray:
     rng = _rng_for(seed, node.name)
     init = node.param("init", "randn")
     shape = node.shape
     if init == "zeros":
-        return np.zeros(shape, np.float32)
+        return np.zeros(shape, dtype)
     if init == "ones":
-        return np.ones(shape, np.float32)
+        return np.ones(shape, dtype)
     if init == "const":
-        return np.full(shape, node.param("value", 0.0), np.float32)
+        return np.full(shape, node.param("value", 0.0), dtype)
     if init == "indices":
         high = int(node.param("high", max(1, shape[0] if shape else 1)))
         return rng.integers(0, high, size=shape).astype(np.int32)
@@ -47,100 +52,25 @@ def _init_leaf(node: ExprNode, seed: int) -> np.ndarray:
                              f"matrix, got {shape}")
         n = shape[0]
         m = rng.standard_normal((n, n))
-        return ((m @ m.T) / n + np.eye(n)).astype(np.float32)
+        return ((m @ m.T) / n + np.eye(n)).astype(dtype)
     if init == "randn":
-        return rng.standard_normal(shape).astype(np.float32)
+        return rng.standard_normal(shape).astype(dtype)
     raise ValueError(f"{node.name}: unknown init hint {init!r}")
 
 
-def make_feeds(program: Program, seed: int = 0) -> Dict[str, np.ndarray]:
-    """Deterministic values for every leaf (inputs and operators)."""
-    return {nd.name: _init_leaf(nd, seed) for nd in program.leaves()}
+def make_feeds(program: Program, seed: int = 0, *,
+               dtype: Optional[np.dtype] = None) -> Dict[str, np.ndarray]:
+    """Deterministic values for every leaf (inputs and operators).
 
-
-def _eval_node(node: ExprNode, ins: List[Any]):
-    import jax.numpy as jnp
-    op = node.op
-    if op == "matmul":
-        return ins[0] @ ins[1]
-    if op == "einsum":
-        return jnp.einsum(node.param("spec"), *ins)
-    if op == "dot":
-        return jnp.dot(ins[0], ins[1])
-    if op == "norm":
-        return jnp.sqrt(jnp.dot(jnp.ravel(ins[0]), jnp.ravel(ins[0])))
-    if op == "add":
-        return ins[0] + ins[1]
-    if op == "sub":
-        return ins[0] - ins[1]
-    if op == "mul":
-        return ins[0] * ins[1]
-    if op == "div":
-        return ins[0] / ins[1]
-    if op == "neg":
-        return -ins[0]
-    if op == "axpy":
-        return ins[0] * ins[1] + ins[2]
-    if op == "stencil2d":
-        u = ins[0]
-        out = 0.25 * (jnp.roll(u, 1, 0) + jnp.roll(u, -1, 0)
-                      + jnp.roll(u, 1, 1) + jnp.roll(u, -1, 1))
-        if len(ins) > 1:
-            out = out + 0.25 * float(node.param("h2", 1.0)) * ins[1]
-        return out
-    if op == "gather":
-        return jnp.take(ins[0], ins[1], axis=0)
-    raise NotImplementedError(f"reference rule missing for op {op!r}")
-
-
-def execute_plan(program: Program, *, order: Optional[Sequence[str]] = None,
-                 feeds: Optional[Dict[str, np.ndarray]] = None,
-                 seed: int = 0, return_all: bool = False) -> Dict[str, Any]:
-    """Execute the program's ops in ``order`` (default: build order).
-
-    ``order`` is the flattened schedule from a co-designed plan; it must be
-    a topological permutation of the program's ops — validated here, since
-    a schedule that reads an unproduced tensor is a lowering bug, not a
-    numerics question.
+    ``dtype`` sets the float width of the generated leaves (integer
+    ``indices`` leaves stay int32).  Default float32 — JAX's default float
+    precision; pass ``np.float64`` under ``jax_enable_x64`` to validate
+    fp64-modeled workloads at full width.  The random draws are identical
+    across dtypes (same generator stream, cast at the end), so fp32 and
+    fp64 feeds describe the same mathematical problem.
     """
-    vals: Dict[str, Any] = {}
-    op_names = [n for n in program._order if not program.nodes[n].is_leaf]
-    order = list(order) if order is not None else op_names
-    if sorted(order) != sorted(op_names):
-        raise ValueError(f"order is not a permutation of {program.name!r} "
-                         "ops")
-    feeds = dict(feeds) if feeds is not None else make_feeds(program, seed)
-    for nd in program.leaves():
-        if nd.name not in feeds:
-            raise KeyError(f"feeds missing leaf {nd.name!r}")
-        vals[nd.name] = feeds[nd.name]
-    # free dead intermediates as execution passes their last consumer —
-    # paper-scale grids (jacobi2d n=4096 keeps 64 MiB per sweep) would
-    # otherwise all stay resident until the end of the run
-    last_use: Dict[str, int] = {}
-    for step, nname in enumerate(order):
-        for t in program.nodes[nname].inputs:
-            last_use[t] = step
-    keep = set(program.outputs) if not return_all else set(vals) | set(order)
-    for step, nname in enumerate(order):
-        node = program.nodes[nname]
-        missing = [i for i in node.inputs if i not in vals]
-        if missing:
-            raise ValueError(f"schedule order not topological: {nname} "
-                             f"reads unproduced {missing}")
-        vals[nname] = _eval_node(node, [vals[i] for i in node.inputs])
-        if not return_all:
-            for t in set(node.inputs):
-                if last_use[t] == step and t not in keep:
-                    del vals[t]
-    if return_all:
-        return vals
-    return {o: vals[o] for o in program.outputs}
-
-
-def evaluate(program: Program,
-             feeds: Optional[Dict[str, np.ndarray]] = None, *,
-             seed: int = 0, return_all: bool = False) -> Dict[str, Any]:
-    """Reference evaluation in the program's natural (build) order."""
-    return execute_plan(program, order=None, feeds=feeds, seed=seed,
-                        return_all=return_all)
+    dtype = np.dtype(dtype if dtype is not None else np.float32)
+    if dtype.kind != "f":
+        raise ValueError(f"make_feeds dtype must be a float dtype, "
+                         f"got {dtype}")
+    return {nd.name: _init_leaf(nd, seed, dtype) for nd in program.leaves()}

@@ -5,15 +5,13 @@ The golden values below were captured from the pre-refactor monolithic
 reproduce them bit-for-bit (same enumeration order, same arithmetic), and
 the disk cache must round-trip them exactly.
 """
-import warnings
-
 import pytest
 
 from repro.api import (CodesignCache, CompiledPlan, Session, STRATEGY_REGISTRY,
                        get_strategy, run_codesign)
 from repro.configs import get_config
 from repro.core import OpGraph, TensorKind
-from repro.core.lowering import decode_graph, layer_graph
+from repro.core.lowering import layer_graph
 from repro.core.policy import lower_codesign
 
 # (arch, phase) -> (speedup, energy_ratio, time_s, energy_j, hbm_bytes)
@@ -119,37 +117,30 @@ class TestSessionGolden:
 
 
 # ---------------------------------------------------------------------------
-# deprecated shims must produce identical results
+# the 0.2-era deprecation shims are gone (removed in 0.4 as promised)
 # ---------------------------------------------------------------------------
 
-class TestDeprecatedShims:
-    def test_co_design_shim_identical_and_warns(self, tmp_path):
-        cfg = get_config("gemma-7b")
-        g = decode_graph(cfg, **{"batch": 8, "kv_len": 4096})
-        with warnings.catch_warnings(record=True) as w:
-            warnings.simplefilter("always")
-            from repro.core import co_design
-            old = co_design(g)
-        assert any(issubclass(x.category, DeprecationWarning) for x in w)
-        new = Session("gemma-7b", cache_dir=tmp_path).trace(
-            phase="decode", **SHAPES["decode"]).codesign()
-        assert old.speedup() == new.speedup()
-        assert old.energy_ratio() == new.energy_ratio()
-        assert old.best.metrics == new.best.metrics
-        assert old.best.schedule.pins == new.best.schedule.pins
+class TestShimsRemoved:
+    def test_old_flat_entry_points_are_removed(self):
+        import repro.core
+        import repro.core.policy
+        import repro.core.schedule
+        for mod, name in [(repro.core, "co_design"),
+                          (repro.core, "plan_from_codesign"),
+                          (repro.core.schedule, "co_design"),
+                          (repro.core.schedule, "candidate_orders"),
+                          (repro.core.policy, "plan_from_codesign")]:
+            assert not hasattr(mod, name), (mod.__name__, name)
 
-    def test_plan_from_codesign_shim_identical_and_warns(self, tmp_path):
+    def test_new_engine_matches_old_goldens(self, tmp_path):
+        # the engine the shims delegated to is still golden-locked
         cfg = get_config("granite-3-8b")
         sess = Session(cfg, cache_dir=tmp_path)
         designed = sess.trace(phase="prefill", **SHAPES["prefill"]) \
             .analyze().codesign()
-        with warnings.catch_warnings(record=True) as w:
-            warnings.simplefilter("always")
-            from repro.core import plan_from_codesign
-            old_plan = plan_from_codesign(cfg, designed.result, seq=8192)
-        assert any(issubclass(x.category, DeprecationWarning) for x in w)
-        assert old_plan == designed.lower(seq=8192).plan
-        assert old_plan == lower_codesign(cfg, designed.result, seq=8192)
+        assert _measure(designed) == GOLDEN[("granite-3-8b", "prefill")]
+        assert designed.lower(seq=8192).plan == \
+            lower_codesign(cfg, designed.result, seq=8192)
 
 
 # ---------------------------------------------------------------------------

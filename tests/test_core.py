@@ -6,8 +6,8 @@ import pytest
 from conftest import given, settings, st
 
 from repro.core import (BufferConfig, OpGraph, TensorKind, analyze,
-                        build_groups, co_design, layer_graph,
-                        decode_graph, plan_from_codesign, default_plan,
+                        build_groups, layer_graph, lower_codesign,
+                        decode_graph, default_plan, run_codesign,
                         sequential_groups, simulate, V5E)
 from repro.core.buffer import MiB
 from repro.configs import get_config
@@ -177,7 +177,7 @@ class TestCoDesign:
         for arch in ("granite-3-8b", "moonshot-v1-16b-a3b", "rwkv6-7b"):
             cfg = get_config(arch)
             g = layer_graph(cfg, batch=2, seq=1024)
-            res = co_design(g)
+            res = run_codesign(g)
             for name, base in res.baselines.items():
                 assert res.best.metrics.time_s <= base.metrics.time_s * 1.001, \
                     (arch, name)
@@ -185,7 +185,7 @@ class TestCoDesign:
     def test_memory_bound_case_speedup(self):
         cfg = get_config("granite-3-8b")
         g = layer_graph(cfg, batch=1, seq=32768)
-        res = co_design(g)
+        res = run_codesign(g)
         assert res.speedup() > 1.5          # flash fusion must pay off
         assert res.energy_ratio() > 1.2
 
@@ -193,7 +193,7 @@ class TestCoDesign:
         for arch in ("granite-3-8b", "rwkv6-7b", "h2o-danube-1.8b"):
             cfg = get_config(arch)
             g = decode_graph(cfg, batch=8, kv_len=4096)
-            res = co_design(g)
+            res = run_codesign(g)
             assert res.best.metrics.time_s > 0
 
     def test_groups_are_partition(self):
@@ -224,11 +224,11 @@ class TestCoDesign:
 # ---------------------------------------------------------------------------
 
 class TestPolicy:
-    def test_plan_from_codesign_turns_on_fusion(self):
+    def test_lower_codesign_turns_on_fusion(self):
         cfg = get_config("granite-3-8b")
         g = layer_graph(cfg, batch=1, seq=8192)
-        res = co_design(g)
-        plan = plan_from_codesign(cfg, res, seq=8192)
+        res = run_codesign(g)
+        plan = lower_codesign(cfg, res, seq=8192)
         assert plan.use_flash_attention
         assert plan.use_fused_mlp
         assert plan.q_block % 128 == 0 and plan.kv_block % 128 == 0

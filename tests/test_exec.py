@@ -1,0 +1,329 @@
+"""Execution-backend tests: registry, kernel selection, and parity.
+
+Parity policy (see docs/execution_backends.md):
+
+* ``reference`` replays the co-designed schedule order through the same
+  pure per-op rules as natural-order evaluation — it must match the
+  natural-order oracle **bit-for-bit**.
+* ``pallas`` tiles reductions (per-tile partials accumulated across the
+  grid) and computes leaf-consuming contractions through XLA rather than
+  NumPy's BLAS, so it matches within reduction-reassociation tolerances:
+  rtol=2e-4 / atol=1e-5 for float32.  Everything elementwise and every
+  per-row matvec lane uses the reference rules verbatim.
+"""
+import numpy as np
+import pytest
+
+from repro.api import Session, get_backend, list_backends, register_backend
+from repro.core import build_groups, select_group_kernels
+from repro.exec import (EXECUTOR_REGISTRY, Executor, ReferenceExecutor,
+                        evaluate, plan_order)
+from repro.frontends import Program, build_workload, make_feeds
+
+# float32 reduction-reassociation tolerances (documented policy)
+RTOL, ATOL = 2e-4, 1e-5
+
+#: every workload in the HPC registry, sized small enough for interpret-mode
+#: CI but large enough that streaming passes run multiple row tiles
+PARITY_SET = [
+    ("cg", dict(n=96, iters=3)),
+    ("bicgstab", dict(n=96, iters=2)),
+    ("gmres", dict(n=96, restart=3)),
+    ("jacobi2d", dict(n=32, sweeps=3)),
+    ("power_iteration", dict(n=96, iters=3)),
+    ("mttkrp", dict(i=24, j=24, k=24, rank=8)),
+]
+
+
+def _llm_ffn_program(m=64, d=32, f=48) -> Program:
+    """One LLM FFN phase (gated MLP over a token block) on the expression
+    frontend: the token dimension streams, the weight matrices are the
+    resident operands — the same shape class `core.policy` fuses for the
+    arch-registry plans."""
+    p = Program("llm_ffn_prefill")
+    x = p.input("x", (m, d))
+    w_up = p.operator("w_up", (d, f))
+    w_gate = p.operator("w_gate", (d, f))
+    w_down = p.operator("w_down", (f, d))
+    h = p.matmul(x, w_up, name="up")
+    g = p.matmul(x, w_gate, name="gate")
+    a = p.mul(h, g, name="act")
+    p.output(p.matmul(a, w_down, name="ffn_out"))
+    return p
+
+
+def _lowered(tmp_path, workload=None, program=None, **params):
+    if workload is not None:
+        traced = Session(cache_dir=tmp_path).trace(workload=workload,
+                                                   **params)
+    else:
+        traced = Session.from_graph(program, cache_dir=tmp_path)
+    return traced, traced.analyze().codesign().lower()
+
+
+# ---------------------------------------------------------------------------
+# backend parity: HPC registry + one LLM phase under both backends
+# ---------------------------------------------------------------------------
+
+class TestBackendParity:
+    @pytest.mark.parametrize("workload,params",
+                             PARITY_SET, ids=[w for w, _ in PARITY_SET])
+    def test_hpc_workload_parity(self, workload, params, tmp_path):
+        traced, plan = _lowered(tmp_path, workload=workload, **params)
+        feeds = make_feeds(traced.program, seed=7)
+        want = evaluate(traced.program, feeds)
+
+        ref = plan.run(feeds, backend="reference")
+        assert sorted(ref) == sorted(want)
+        for k in want:                    # same pure ops => bitwise
+            np.testing.assert_array_equal(np.asarray(ref[k]),
+                                          np.asarray(want[k]), err_msg=k)
+
+        pal = plan.run(feeds, backend="pallas")
+        assert sorted(pal) == sorted(want)
+        for k in want:
+            np.testing.assert_allclose(np.asarray(pal[k]),
+                                       np.asarray(want[k]),
+                                       rtol=RTOL, atol=ATOL, err_msg=k)
+
+    def test_llm_ffn_phase_parity(self, tmp_path):
+        prog = _llm_ffn_program()
+        traced, plan = _lowered(tmp_path, program=prog)
+        feeds = make_feeds(prog, seed=5)
+        want = evaluate(prog, feeds)
+        ref = plan.run(feeds, backend="reference")
+        pal = plan.run(feeds, backend="pallas")
+        np.testing.assert_array_equal(np.asarray(ref["ffn_out"]),
+                                      np.asarray(want["ffn_out"]))
+        np.testing.assert_allclose(np.asarray(pal["ffn_out"]),
+                                   np.asarray(want["ffn_out"]),
+                                   rtol=RTOL, atol=ATOL)
+        # weights are resident operands of the streaming passes
+        res = {t for gk in plan.group_kernels for p in gk.passes
+               for t in p.resident}
+        assert res & {"w_up", "w_gate", "w_down"}
+
+    def test_awkward_row_count_still_streams(self, tmp_path):
+        # rows=50: only tile divisors 2 and 1 exist — the streamer must
+        # still produce correct results at the finest granularity
+        p = Program("odd_rows")
+        A = p.operator("A", (50, 50), init="spd")
+        x = p.input("x", (50,))
+        y = p.matmul(A, x, name="y")
+        p.output(p.dot(y, y, name="yy"))
+        traced, plan = _lowered(tmp_path, program=p)
+        feeds = make_feeds(p, seed=2)
+        want = evaluate(p, feeds)
+        got = plan.run(feeds, backend="pallas")
+        np.testing.assert_allclose(np.asarray(got["yy"]),
+                                   np.asarray(want["yy"]),
+                                   rtol=RTOL, atol=ATOL)
+
+    def test_pallas_runs_codesigned_group_order(self, tmp_path):
+        # the scheduled order a backend must honor differs from build
+        # order whenever the search reorders; assert the contract on the
+        # plan the backends actually execute
+        traced, plan = _lowered(tmp_path, workload="cg", n=96, iters=3)
+        order = plan_order(plan)
+        natural = [n for n in traced.program._order
+                   if not traced.program.nodes[n].is_leaf]
+        assert sorted(order) == sorted(natural)
+        groups = [list(g) for g in plan.codesigned.best.schedule.groups]
+        assert order == [o for g in groups for o in g]
+
+
+# ---------------------------------------------------------------------------
+# fp64 validation path (make_feeds dtype satellite)
+# ---------------------------------------------------------------------------
+
+class TestFeedsDtype:
+    def test_make_feeds_dtype(self):
+        prog = build_workload("cg", n=16, iters=1)
+        f32 = make_feeds(prog, seed=0)
+        f64 = make_feeds(prog, seed=0, dtype=np.float64)
+        assert all(v.dtype == np.float32 for v in f32.values())
+        assert all(v.dtype == np.float64 for v in f64.values())
+        # same generator stream, cast at the end: identical values
+        for k in f32:
+            np.testing.assert_allclose(f32[k], f64[k].astype(np.float32),
+                                       rtol=0, atol=0)
+
+    def test_index_leaves_stay_int32(self):
+        p = Program("g")
+        x = p.input("x", (8, 4))
+        idx = p.input("idx", (3,), init="indices")
+        p.output(p.gather(x, idx, name="out"))
+        feeds = make_feeds(p, seed=0, dtype=np.float64)
+        assert feeds["idx"].dtype == np.int32
+        assert feeds["x"].dtype == np.float64
+
+    def test_non_float_dtype_rejected(self):
+        prog = build_workload("cg", n=16, iters=1)
+        with pytest.raises(ValueError, match="float dtype"):
+            make_feeds(prog, dtype=np.int32)
+
+    def test_fp64_evaluation_under_x64(self, tmp_path):
+        import jax
+        prog = build_workload("cg", n=32, iters=2)
+        feeds = make_feeds(prog, seed=1, dtype=np.float64)
+        with jax.experimental.enable_x64():
+            out = evaluate(prog, feeds)
+            assert np.asarray(out["x2"]).dtype == np.float64
+            # fp64 CG at n=32 is essentially exact: residual identity holds
+            # far beyond fp32 precision
+            A, b = feeds["A"], feeds["b"]
+            r = np.asarray(out["r2"], np.float64)
+            x = np.asarray(out["x2"], np.float64)
+            np.testing.assert_allclose(r, b - A @ x, rtol=1e-12, atol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# registry + plan threading
+# ---------------------------------------------------------------------------
+
+class TestRegistry:
+    def test_builtins_registered(self):
+        assert {"reference", "pallas"} <= set(list_backends())
+        assert get_backend("reference").name == "reference"
+        assert get_backend("pallas").name == "pallas"
+
+    def test_unknown_backend_raises(self, tmp_path):
+        with pytest.raises(KeyError, match="unknown execution backend"):
+            get_backend("tpu-real")
+        _, plan = _lowered(tmp_path, workload="cg", n=16, iters=1)
+        with pytest.raises(KeyError, match="unknown execution backend"):
+            plan.run(backend="tpu-real")
+
+    def test_lower_backend_sets_default(self, tmp_path):
+        traced = Session(cache_dir=tmp_path).trace(workload="power_iteration",
+                                                   n=32, iters=2)
+        designed = traced.analyze().codesign()
+        plan = designed.lower(backend="pallas")
+        assert plan.backend == "pallas"
+        assert "execution backend : pallas" in plan.explain()
+        feeds = make_feeds(traced.program, seed=0)
+        got = plan.run(feeds)                 # defaults to pallas
+        want = evaluate(traced.program, feeds)
+        np.testing.assert_allclose(np.asarray(got["x2"]),
+                                   np.asarray(want["x2"]),
+                                   rtol=RTOL, atol=ATOL)
+
+    def test_custom_backend_registers_and_runs(self, tmp_path):
+        class ShoutingReference(ReferenceExecutor):
+            name = "shouting-reference"
+
+        register_backend(ShoutingReference)
+        try:
+            _, plan = _lowered(tmp_path, workload="cg", n=16, iters=1)
+            got = plan.run(seed=4, backend="shouting-reference")
+            want = plan.run(seed=4, backend="reference")
+            for k in want:
+                np.testing.assert_array_equal(np.asarray(got[k]),
+                                              np.asarray(want[k]))
+        finally:
+            EXECUTOR_REGISTRY.pop("shouting-reference", None)
+
+    def test_executor_is_abstract(self, tmp_path):
+        _, plan = _lowered(tmp_path, workload="cg", n=16, iters=1)
+        with pytest.raises(NotImplementedError):
+            Executor().run(plan)
+
+    def test_run_missing_feed_raises(self, tmp_path):
+        traced, plan = _lowered(tmp_path, workload="cg", n=16, iters=1)
+        feeds = make_feeds(traced.program, seed=0)
+        feeds.pop("b")
+        for backend in ("reference", "pallas"):
+            with pytest.raises(KeyError, match="feeds missing leaf"):
+                plan.run(feeds, backend=backend)
+
+
+# ---------------------------------------------------------------------------
+# group -> kernel-shape selection
+# ---------------------------------------------------------------------------
+
+class TestKernelSelection:
+    def _kernels(self, workload, **params):
+        prog = build_workload(workload, **params)
+        graph = prog.to_graph()
+        groups = build_groups(graph, graph.topo_order(), 64 << 20)
+        return select_group_kernels(graph, groups, 64 << 20)
+
+    def test_kernels_partition_the_groups(self, tmp_path):
+        _, plan = _lowered(tmp_path, workload="cg", n=96, iters=2)
+        groups = [tuple(g) for g in plan.codesigned.best.schedule.groups]
+        assert [gk.ops for gk in plan.group_kernels] == groups
+        for gk in plan.group_kernels:
+            if gk.kind == "stream":
+                flat = [o for p in gk.passes for o in p.ops]
+                assert flat == list(gk.ops)       # passes partition group
+                for p in gk.passes:
+                    assert p.rows % p.tile_rows == 0
+
+    def test_cg_in_pass_rhs_splits_into_two_passes(self):
+        kernels = self._kernels("cg", n=128, iters=2)
+        multi = [gk for gk in kernels
+                 if gk.kind == "stream" and len(gk.passes) == 2]
+        # p_{k+1} = axpy(...) immediately feeds A @ p_{k+1}: the vector
+        # must materialize before it can sit resident for the matvec
+        assert multi, [gk.describe() for gk in kernels]
+        gk = multi[0]
+        assert gk.passes[1].resident    # second pass holds the new vector
+
+    def test_in_pass_scalar_consumer_splits_and_executes(self):
+        # schedule.fusable never fuses a tiled op with the in-pass scalar
+        # it reads, but select_group_kernels is public API and must stay
+        # safe for hand-built groups: the pass splits where the scalar
+        # must materialize, and the resulting kernels execute correctly
+        import jax.numpy as jnp
+
+        from repro.exec.pallas import _StreamCall
+        p = Program("scal")
+        x = p.input("x", (16,))
+        y = p.input("y", (16,))
+        d = p.dot(x, y, name="d")
+        p.output(p.axpy(d, x, y, name="z"))
+        graph = p.to_graph()
+        kernels = select_group_kernels(graph, [["d", "z"]], 1 << 20)
+        assert kernels[0].kind == "stream"
+        assert [pss.ops for pss in kernels[0].passes] == [("d",), ("z",)]
+        feeds = make_feeds(p, seed=0)
+        env = {k: jnp.asarray(v) for k, v in feeds.items()}
+        for sp in kernels[0].passes:
+            env.update(_StreamCall(p, sp, needed={"d", "z"})(env))
+        want = evaluate(p, feeds)
+        np.testing.assert_allclose(np.asarray(env["z"]),
+                                   np.asarray(want["z"]),
+                                   rtol=RTOL, atol=ATOL)
+
+    def test_jacobi_is_block_kernel(self):
+        kernels = self._kernels("jacobi2d", n=32, sweeps=3)
+        assert all(gk.kind == "block" for gk in kernels)
+
+    def test_mttkrp_falls_back_with_reason(self):
+        kernels = self._kernels("mttkrp", i=16, j=16, k=16, rank=4)
+        assert all(gk.kind == "jnp" for gk in kernels)
+        assert any("einsum" in gk.reason for gk in kernels)
+
+    def test_gather_falls_back_irregular(self):
+        p = Program("gath")
+        x = p.input("x", (32, 8))
+        idx = p.input("idx", (8,), init="indices")
+        p.output(p.gather(x, idx, name="g"))
+        graph = p.to_graph()
+        kernels = select_group_kernels(
+            graph, build_groups(graph, graph.topo_order(), 1 << 20), 1 << 20)
+        assert kernels[0].kind == "jnp"
+        assert "irregular" in kernels[0].reason
+
+    def test_irregular_parity_through_fallback(self, tmp_path):
+        p = Program("gath2")
+        x = p.input("x", (32, 8))
+        idx = p.input("idx", (8,), init="indices")
+        g = p.gather(x, idx, name="g")
+        p.output(p.mul(g, g, name="sq"))
+        traced, plan = _lowered(tmp_path, program=p)
+        feeds = make_feeds(p, seed=9)
+        want = evaluate(p, feeds)
+        got = plan.run(feeds, backend="pallas")
+        np.testing.assert_array_equal(np.asarray(got["sq"]),
+                                      np.asarray(want["sq"]))

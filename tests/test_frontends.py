@@ -271,7 +271,8 @@ class TestSessionHpc:
         assert res.speedup("seq-implicit") > 2.0
         plan = res.lower()
         text = plan.explain()
-        assert "A[g" in text and "frontends.reference" in text
+        assert "A[g" in text and "execution backend : reference" in text
+        assert "pallas-stream" in text      # per-group kernel selection
 
     def test_gmres_pins_basis_vectors(self, tmp_path):
         res = (Session(cache_dir=tmp_path)
