@@ -1,28 +1,43 @@
 """Table 8 — measured wall-clock per execution backend, next to the cost
 model's predicted speedups.
 
-Every frontend workload is lowered once per backend and *executed for real*:
-``reference`` replays the co-designed order through the jax.numpy
-interpreter; ``pallas`` compiles each fusion group into tile-streaming
-``pl.pallas_call`` kernels (interpret mode off-TPU, so CI exercises the
-actual lowering — interpret wall-clock measures the lowering/dispatch path,
-not TPU kernel time).  ``predicted_speedup_vs_implicit`` is the co-design
-model's claim for the same schedule, reported alongside so the measured
-trajectory can be tracked against it per PR (``BENCH_exec.json``).
+Every frontend workload is lowered once per backend and *executed for
+real*: ``reference`` replays the co-designed order through the jax.numpy
+interpreter; ``pallas`` compiles the whole plan into ONE jitted
+single-program executable (residency-fused units, scan-rolled solver
+iterations, exactly one device dispatch per run); ``pallas-perunit`` is
+the 0.4-era per-unit driver kept as the A/B baseline the single-program
+speedup is measured against.  Off-TPU the Pallas kernels run in interpret
+mode, so CI exercises the actual lowering — interpret wall-clock measures
+the lowering/dispatch path, not TPU kernel time.
+``predicted_speedup_vs_implicit`` is the co-design model's claim for the
+same schedule, reported alongside so the measured trajectory can be
+tracked against it per PR (``BENCH_exec.json``).
+
+Timing protocol: one warmup run (excluded — it pays tracing/compilation),
+then the **median** of ``repeats`` timed runs (default 3; CI passes
+``--repeats 5`` through ``benchmarks.run``).
 
 ``pallas_groups`` / ``jnp_groups`` count how many fusion groups lowered to
-real Pallas kernels vs the jitted jax.numpy fallback;
-``max_rel_err_vs_reference`` is the observed parity gap (the documented
-tolerance is rtol=2e-4 for float32 reduction reassociation).
+real Pallas kernels vs the jitted jax.numpy fallback; ``exec_units`` is
+the fused dispatch-unit count and ``rolled_iters`` the rolled iteration
+trip count (0 = straight-line); ``max_rel_err_vs_reference`` is the
+observed parity gap (the documented tolerance is rtol=2e-4 for float32
+reduction reassociation).
 """
 from __future__ import annotations
 
+import statistics
 import time
 from typing import List, Optional
 
 import numpy as np
 
 REPS = 3
+
+#: backends measured by default — the per-unit driver rides along so every
+#: BENCH_exec.json records the single-program speedup on the same machine
+BACKENDS = ("reference", "pallas", "pallas-perunit")
 
 
 def _rel_err(got, want) -> float:
@@ -31,16 +46,19 @@ def _rel_err(got, want) -> float:
     return float(np.max(np.abs(g - w) / denom))
 
 
-def run(backend: Optional[str] = None) -> List[str]:
+def run(backend: Optional[str] = None,
+        repeats: Optional[int] = None) -> List[str]:
     import jax
 
     from repro.frontends import make_feeds
 
     from .workloads import hpc_exec_workloads
 
-    backends = [backend] if backend else ["reference", "pallas"]
+    reps = int(repeats) if repeats else REPS
+    backends = [backend] if backend else list(BACKENDS)
     rows = ["workload,us_per_call,backend,predicted_speedup_vs_implicit,"
-            "groups,pallas_groups,jnp_groups,max_rel_err_vs_reference"]
+            "groups,pallas_groups,jnp_groups,exec_units,rolled_iters,"
+            "max_rel_err_vs_reference"]
     for name, build in hpc_exec_workloads():
         traced = build()
         designed = traced.codesign()
@@ -51,21 +69,27 @@ def run(backend: Optional[str] = None) -> List[str]:
             baseline = designed.lower(backend="reference").run(feeds)
         for be in backends:
             plan = designed.lower(backend=be)
-            out = jax.block_until_ready(plan.run(feeds))     # warm compile
-            best = float("inf")
-            for _ in range(REPS):
+            out = jax.block_until_ready(plan.run(feeds))   # warmup: traces
+            times = []
+            for _ in range(reps):
                 t0 = time.perf_counter()
                 out = jax.block_until_ready(plan.run(feeds))
-                best = min(best, time.perf_counter() - t0)
+                times.append(time.perf_counter() - t0)
+            med = statistics.median(times)
             kinds = [gk.kind for gk in plan.group_kernels]
+            ep = plan.exec_plan
+            units = len(ep.units) if ep is not None else 0
+            rolled = (ep.roll.n_iters
+                      if ep is not None and ep.roll is not None else 0)
             err = 0.0
             if be != "reference" and baseline is not None:
                 err = max(_rel_err(out[k], baseline[k]) for k in baseline)
             rows.append(
-                f"{name}[{be}],{best * 1e6:.0f},{be},"
+                f"{name}[{be}],{med * 1e6:.0f},{be},"
                 f"{designed.speedup():.3f},{len(kinds)},"
                 f"{sum(k != 'jnp' for k in kinds)},"
-                f"{sum(k == 'jnp' for k in kinds)},{err:.2e}")
+                f"{sum(k == 'jnp' for k in kinds)},"
+                f"{units},{rolled},{err:.2e}")
     return rows
 
 

@@ -13,12 +13,14 @@ CSV-safe) — for the solvers this is the operator ``A`` plus
 residual/direction vectors.
 
 ``--backend NAME`` (via ``benchmarks.run``) appends measured execution
-columns: the plan is lowered for that backend and run once at the paper
-shapes, adding ``backend`` and ``run_us`` wall-clock next to the model
-columns — the model's claims and the executed schedule in one table.
+columns: the plan is lowered for that backend and run at the paper shapes
+(one excluded warmup, then the median of ``--repeats`` runs), adding
+``backend`` and ``run_us`` wall-clock next to the model columns — the
+model's claims and the executed schedule in one table.
 """
 from __future__ import annotations
 
+import statistics
 import time
 from typing import List, Optional
 
@@ -27,7 +29,9 @@ from repro.core.search import SearchContext, evaluate_point
 from .workloads import hpc_workloads
 
 
-def run(backend: Optional[str] = None) -> List[str]:
+def run(backend: Optional[str] = None,
+        repeats: Optional[int] = None) -> List[str]:
+    reps = int(repeats) if repeats else 1
     rows = ["workload,us_per_call,cached,best_split,speedup_vs_implicit,"
             "speedup_vs_explicit,speedup_vs_fused_nopin,hbm_reduction,"
             "pinned" + (",backend,run_us" if backend else "")]
@@ -58,10 +62,14 @@ def run(backend: Optional[str] = None) -> List[str]:
             from repro.frontends import make_feeds
             plan = res.lower(backend=backend)
             feeds = make_feeds(traced.program, seed=0)
-            jax.block_until_ready(plan.run(feeds))      # warm compile
-            t0 = time.perf_counter()
-            jax.block_until_ready(plan.run(feeds))
-            row += f",{backend},{(time.perf_counter() - t0) * 1e6:.0f}"
+            jax.block_until_ready(plan.run(feeds))      # warmup: traces
+            times = []
+            for _ in range(reps):
+                t0 = time.perf_counter()
+                jax.block_until_ready(plan.run(feeds))
+                times.append(time.perf_counter() - t0)
+            row += (f",{backend},"
+                    f"{statistics.median(times) * 1e6:.0f}")
         rows.append(row)
     return rows
 

@@ -11,7 +11,11 @@ per-PR perf trajectory (``BENCH_*.json``) can be recorded and diffed.
 which is what the CI smoke job uses to run one cheap table.  ``--backend``
 threads an execution backend into the tables that run plans for real (the
 HPC tables 7/8): TABLE 8 restricts to that backend, TABLE 7 gains measured
-``run_us`` wall-clock next to its model columns.
+``run_us`` wall-clock next to its model columns.  ``--repeats N`` threads a
+repeat count into the measuring tables: each timing is the **median of N
+runs after one excluded warmup** (the warmup pays tracing/compilation), so
+recorded trajectories (and the `scripts/bench_compare.py` regression gate)
+compare medians, not first-run noise.
 """
 from __future__ import annotations
 
@@ -92,6 +96,10 @@ def main(argv=None) -> None:
                     help="execution backend for the tables that run plans "
                          "for real (reference | pallas | any registered "
                          "name); threaded into the HPC tables")
+    ap.add_argument("--repeats", metavar="N", type=int,
+                    help="timed repetitions per measurement (median "
+                         "reported, one warmup excluded); threaded into "
+                         "the tables that accept it")
     args = ap.parse_args(argv)
     wanted = ([f.strip().lower() for f in args.tables.split(",") if f.strip()]
               if args.tables else None)
@@ -105,9 +113,11 @@ def main(argv=None) -> None:
         ran += 1
         print(f"\n# {title}")
         kwargs = {}
-        if args.backend and \
-                "backend" in inspect.signature(mod.run).parameters:
+        params = inspect.signature(mod.run).parameters
+        if args.backend and "backend" in params:
             kwargs["backend"] = args.backend
+        if args.repeats and "repeats" in params:
+            kwargs["repeats"] = args.repeats
         try:
             rows = list(mod.run(**kwargs))
         except Exception as e:                       # pragma: no cover

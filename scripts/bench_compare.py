@@ -1,0 +1,156 @@
+#!/usr/bin/env python
+"""Diff a fresh benchmark JSON dump against a committed baseline.
+
+The ``backend-parity`` CI job runs TABLE 8 with ``--repeats 5 --json
+BENCH_exec.json`` and then gates on this script: any pallas row whose
+measured ``us_per_call`` regresses more than ``--max-regress`` (default
+25%) over the committed baseline fails the job.
+
+Rows are matched by (table title, row name).  Rows present on only one
+side are reported but never fail the gate (new workloads appear, old ones
+retire).  Only rows whose recorded ``backend`` matches ``--backend``
+(default ``pallas``) gate; pass ``--backend ''`` to gate every measured
+row.  Speedups are reported alongside regressions so improvements are
+visible in the CI log.
+
+Wall-clock baselines are machine-specific: refresh the committed one from
+the same class of machine that gates on it (CI refreshes from CI):
+
+    python -m benchmarks.run --tables exec --repeats 5 --json BENCH_exec.json
+    python scripts/bench_compare.py BENCH_exec.json --update
+
+Exit status: 0 clean / regressions within bound, 1 gate failure, 2 usage.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import shutil
+import sys
+from typing import Dict, Tuple
+
+DEFAULT_BASELINE = "benchmarks/baselines/BENCH_exec.json"
+
+
+def _rows(dump: dict) -> Dict[Tuple[str, str], dict]:
+    out = {}
+    for table, rows in dump.items():
+        for rec in rows:
+            out[(table, rec.get("name", "?"))] = rec
+    return out
+
+
+def _metric(rows: Dict[Tuple[str, str], dict], key: Tuple[str, str],
+            normalize: str):
+    """A row's gating metric: raw ``us_per_call``, or — with
+    ``normalize`` — its ratio to the same workload's ``normalize``-backend
+    row in the same dump (machine-speed independent: TABLE 8 names rows
+    ``<workload>[<backend>]``)."""
+    rec = rows.get(key)
+    if rec is None or not rec.get("us_per_call"):
+        return None
+    us = rec["us_per_call"]
+    if not normalize:
+        return us
+    table, name = key
+    base_name = name.split("[", 1)[0]
+    ref = rows.get((table, f"{base_name}[{normalize}]"))
+    if ref is None or not ref.get("us_per_call"):
+        return None
+    return us / ref["us_per_call"]
+
+
+def compare(new: dict, base: dict, *, backend: str, max_regress: float,
+            normalize: str = "") -> Tuple[list, list, int]:
+    """Return (report lines, failing lines, number of rows gated)."""
+    new_rows, base_rows = _rows(new), _rows(base)
+    unit = "x" if normalize else "us"
+    lines, failures, gated_rows = [], [], 0
+    for key in sorted(set(new_rows) | set(base_rows)):
+        table, name = key
+        if key not in new_rows or key not in base_rows:
+            missing = "only-baseline" if key not in new_rows else "only-new"
+            lines.append(f"  {missing:>14s}  {name}")
+            continue
+        nus = _metric(new_rows, key, normalize)
+        bus = _metric(base_rows, key, normalize)
+        if nus is None or bus is None:
+            continue
+        ratio = nus / bus
+        gated = (not backend) or (new_rows[key].get("backend") == backend)
+        gated_rows += gated
+        tag = f"{name:40s} {bus:10.2f}{unit} -> {nus:10.2f}{unit}  " \
+              f"({ratio:5.2f}x)"
+        if gated and ratio > 1.0 + max_regress:
+            failures.append(tag)
+            lines.append("  REGRESSION  " + tag)
+        else:
+            lines.append("  " + ("ok    " if gated else "info  ") + tag)
+    return lines, failures, gated_rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python scripts/bench_compare.py", description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("new", metavar="NEW.json",
+                    help="fresh dump from benchmarks.run --json")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE,
+                    help=f"committed baseline (default {DEFAULT_BASELINE})")
+    ap.add_argument("--backend", default="pallas",
+                    help="gate only rows recorded for this backend "
+                         "(default pallas; '' gates every measured row)")
+    ap.add_argument("--max-regress", type=float, default=0.25,
+                    help="max tolerated fractional us_per_call growth "
+                         "(default 0.25 = +25%%)")
+    ap.add_argument("--normalize", default="", metavar="BACKEND",
+                    help="gate each row's us_per_call RATIO to the same "
+                         "workload's BACKEND row in the same dump (e.g. "
+                         "'reference') — machine-speed independent, so a "
+                         "baseline committed from one machine gates runs "
+                         "on another; default: raw us_per_call")
+    ap.add_argument("--update", action="store_true",
+                    help="copy NEW.json over the baseline instead of "
+                         "comparing")
+    args = ap.parse_args(argv)
+
+    if args.update:
+        shutil.copyfile(args.new, args.baseline)
+        print(f"baseline {args.baseline} <- {args.new}")
+        return 0
+    try:
+        with open(args.new) as f:
+            new = json.load(f)
+        with open(args.baseline) as f:
+            base = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"bench_compare: {e}", file=sys.stderr)
+        return 2
+
+    lines, failures, gated = compare(new, base, backend=args.backend,
+                                     max_regress=args.max_regress,
+                                     normalize=args.normalize)
+    print(f"bench_compare: {args.new} vs {args.baseline} "
+          f"(gate: backend={args.backend or '*'}, "
+          f"max +{args.max_regress:.0%}"
+          + (f", normalized to {args.normalize}" if args.normalize else "")
+          + ")")
+    print("\n".join(lines) or "  (no comparable rows)")
+    if failures:
+        print(f"\n{len(failures)} row(s) regressed past the bound:")
+        for f in failures:
+            print("  " + f)
+        return 1
+    if gated == 0:
+        # fail CLOSED: a gate that matched nothing (renamed rows, schema
+        # drift, missing normalize rows) must not pass silently
+        print("\nno row matched the gate — refusing to pass an empty gate "
+              "(check row names / --backend / --normalize, or --update "
+              "the baseline)", file=sys.stderr)
+        return 1
+    print(f"\n{gated} gated row(s) within bound")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

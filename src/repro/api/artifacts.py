@@ -18,7 +18,7 @@ from typing import TYPE_CHECKING, Any, Dict, Optional, Tuple
 
 from ..configs.base import ArchConfig
 from ..core.graph import OpGraph
-from ..core.lowering import GroupKernel
+from ..core.lowering import ExecPlan, GroupKernel
 from ..core.policy import CelloPlan
 from ..core.reuse import ReuseAnalysis
 from ..core.schedule import CoDesignResult, EvaluatedSchedule
@@ -176,6 +176,11 @@ class CompiledPlan:
     backend: str = "reference"
     group_kernels: Tuple[GroupKernel, ...] = dataclasses.field(
         default=(), repr=False, compare=False)
+    # execution-level plan (frontend plans): fused dispatch units,
+    # cross-pass residency spans, rolled iteration segment
+    # (`core.lowering.plan_execution`)
+    exec_plan: Optional[ExecPlan] = dataclasses.field(
+        default=None, repr=False, compare=False)
 
     @property
     def arch(self) -> str:
@@ -236,6 +241,12 @@ class CompiledPlan:
             out["backend"] = self.backend
             out["group_kernel_kinds"] = [gk.kind
                                          for gk in self.group_kernels]
+            if self.exec_plan is not None:
+                ep = self.exec_plan
+                out["exec_units"] = len(ep.units)
+                out["exec_fused_from"] = ep.n_prefuse
+                out["rolled_iters"] = (ep.roll.n_iters
+                                       if ep.roll is not None else 0)
         cd = self.codesigned
         if cd is not None:
             m = cd.best.metrics
@@ -301,6 +312,9 @@ class CompiledPlan:
                 for i, gk in enumerate(self.group_kernels):
                     lines.append(f"    g{i} {{{'+'.join(gk.ops)}}}: "
                                  f"{gk.describe()}")
+            if self.exec_plan is not None:
+                lines.append(f"  execution plan    : "
+                             f"{self.exec_plan.describe()}")
         else:
             lines += [
                 f"  flash attention   : {p.use_flash_attention} "

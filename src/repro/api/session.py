@@ -28,7 +28,8 @@ from ..configs import get_config, list_archs
 from ..configs.base import ArchConfig
 from ..core.costmodel import HardwareModel, V5E
 from ..core.graph import OpGraph
-from ..core.lowering import decode_graph, layer_graph, select_group_kernels
+from ..core.lowering import (decode_graph, layer_graph, plan_execution,
+                             select_group_kernels)
 from ..core.policy import CelloPlan
 from ..core.policy import default_plan as _default_plan
 from ..core.policy import lower_codesign
@@ -304,6 +305,13 @@ class Session:
         sched = designed.result.best.schedule
         kernels = select_group_kernels(traced.graph, sched.groups,
                                        sched.config.explicit_bytes)
+        # execution-level plan: residency-fused dispatch units + the rolled
+        # iteration segment (when the frontend recorded bodies and the
+        # scheduled units repeat them) — surfaced by explain()/report() and
+        # consumed by the single-program pallas executable
+        exec_plan = plan_execution(traced.graph, kernels,
+                                   sched.config.explicit_bytes,
+                                   program=traced.program)
         plan = CelloPlan(
             arch=traced.arch,
             use_flash_attention=False, q_block=0, kv_block=0,
@@ -315,7 +323,7 @@ class Session:
                    f"speedup={designed.result.speedup():.2f}x"))
         return CompiledPlan(cfg=None, plan=plan, trace=traced,
                             codesigned=designed, backend=backend,
-                            group_kernels=kernels)
+                            group_kernels=kernels, exec_plan=exec_plan)
 
     # -- fast path (no search) -------------------------------------------
     def default_plan(self, *, seq: int = 4096) -> CompiledPlan:

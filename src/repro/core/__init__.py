@@ -27,7 +27,10 @@ from .search import (DEFAULT_SPLITS, EvaluatePass, FusionPass, OrderPass,
                      default_pipeline, get_strategy, register_pass,
                      register_strategy, run_codesign, run_pipeline)
 from .policy import CelloPlan, default_plan, lower_codesign
-from .lowering import (GroupKernel, StreamPass, decode_graph, layer_graph,
+from .lowering import (CarrySlot, ExecPlan, ExecUnit, GroupKernel,
+                       ResidentSpan, RolledLoop, StreamPass, decode_graph,
+                       detect_rolled_loop, flatten_units, fuse_units,
+                       layer_graph, plan_execution, resident_spans,
                        select_group_kernels)
 
 __all__ = [
@@ -42,6 +45,9 @@ __all__ = [
     "PASS_REGISTRY", "STRATEGY_REGISTRY", "default_pipeline", "get_strategy",
     "register_pass", "register_strategy", "run_codesign", "run_pipeline",
     "CelloPlan", "default_plan", "lower_codesign",
-    "GroupKernel", "StreamPass", "decode_graph", "layer_graph",
+    "CarrySlot", "ExecPlan", "ExecUnit", "GroupKernel", "ResidentSpan",
+    "RolledLoop", "StreamPass", "decode_graph", "detect_rolled_loop",
+    "flatten_units", "fuse_units", "layer_graph", "plan_execution",
+    "resident_spans",
     "select_group_kernels",
 ]

@@ -24,7 +24,7 @@ Conventions:
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 from ..configs.base import ArchConfig
 from .graph import GraphBuilder, OpGraph, TensorKind
@@ -332,13 +332,16 @@ def _pick_tile_rows(rows: int, per_row_bytes: int, resident_bytes: int,
                     explicit_bytes: int) -> int:
     """Largest row tile (a divisor of ``rows``) whose streaming working set
     fits the explicit region.  The co-design's own fusion-legality check
-    (`schedule.fusable`) guaranteed *some* tile fits; if the chosen split
-    went all-implicit we still stream, at the finest granularity."""
+    (`schedule.fusable`) guaranteed *some* tile fits; when the resident
+    operands already cover (or exceed) the budget, we still stream — at
+    the finest granularity, never a zero/negative tile."""
     budget = max(explicit_bytes - resident_bytes, 0)
     for t in _TILE_ROW_CANDIDATES:
         if t <= rows and rows % t == 0 and t * per_row_bytes <= budget:
             return t
-    return next(t for t in _TILE_ROW_CANDIDATES
+    # over-budget fallback: the smallest divisor among the candidates
+    # (1 divides everything, so this always exists and is positive)
+    return next(t for t in reversed(_TILE_ROW_CANDIDATES)
                 if t <= rows and rows % t == 0)
 
 
@@ -353,32 +356,49 @@ def select_group_kernels(graph: OpGraph, groups, explicit_bytes: int
                  for g in groups)
 
 
+def _finalizes_late(graph: OpGraph, op, late: set) -> bool:
+    """True when ``op``'s value only exists on the pass's *final* grid step:
+    rank-0 reductions (dot/norm/`a,a->` accumulate across tiles), and any
+    scalar computed from one (the ``beta = rs'/rs`` epilogues)."""
+    if graph.tensors[op.output].shape != ():
+        return False
+    if op.spec == "reduce" or op.is_einsum:
+        return True
+    return any(t in late for t in op.inputs)
+
+
 def _segment_group(graph: OpGraph, group) -> list:
     """Split a group into streaming passes.  A new pass starts where an op
     needs a value that only exists once the current pass *completes*:
 
     * a contraction whose resident operand was produced earlier in the
       group (the vector must fully materialize before it can sit in VMEM),
-    * a tiled op reading a rank-0 scalar produced earlier in the group
-      (reductions/epilogues finalize on the last tile).  ``fusable()``
-      never emits such groups, but ``select_group_kernels`` is public API
-      and must be safe for any group handed to it.
+    * a tiled op reading an in-pass rank-0 value that *finalizes on the
+      last tile* — a reduction, or a scalar chained off one.  A scalar
+      whose in-pass inputs are all tile-invariant (``nalpha = -alpha`` with
+      ``alpha`` external) is recomputed per tile instead ("eager" scalar),
+      so it does NOT force a pass break; this is what lets the residency
+      planner fuse ``x``/``r`` updates with the neg/axpy glue between them.
+
+    ``fusable()`` never emits groups that need the late-scalar break, but
+    ``select_group_kernels`` is public API and must be safe for any group
+    handed to it.
     """
-    segments, cur, produced = [], [], set()
+    segments, cur, produced, late = [], [], set(), set()
     for oname in group:
         op = graph.ops[oname]
         needs_break = False
         if op.is_einsum and op.spec in STREAM_EINSUMS:
             needs_break = op.inputs[STREAM_EINSUMS[op.spec]] in produced
         if not needs_break and graph.tensors[op.output].shape != ():
-            needs_break = any(t in produced
-                              and graph.tensors[t].shape == ()
-                              for t in op.inputs)
+            needs_break = any(t in late for t in op.inputs)
         if needs_break and cur:
             segments.append(cur)
-            cur, produced = [], set()
+            cur, produced, late = [], set(), set()
         cur.append(oname)
         produced.add(op.output)
+        if _finalizes_late(graph, op, late):
+            late.add(op.output)
     if cur:
         segments.append(cur)
     return segments
@@ -479,3 +499,337 @@ def _classify_pass(graph: OpGraph, seg, explicit_bytes: int):
                            max(explicit_bytes, 1 << 20))
     return StreamPass(ops=tuple(seg), rows=rows, tile_rows=tile,
                       resident=tuple(resident), reductions=tuple(reductions))
+
+
+# ---------------------------------------------------------------------------
+# execution planning: fused dispatch units, cross-pass residency, rolled loops
+# ---------------------------------------------------------------------------
+#
+# ``select_group_kernels`` answers "what kernel shape does each fusion group
+# lower to"; this layer answers "how does the whole plan execute as ONE
+# program".  Three decisions live here:
+#
+#   * **units** — the flat dispatch sequence (stream groups contribute one
+#     unit per pass);
+#   * **residency planning** — adjacent units sharing the same streamed
+#     length fuse into a single pass when no value must materialize between
+#     them, so streamed operands are read once and resident operands are
+#     carried across what used to be pass *and group* boundaries (the
+#     execution image of the explicit region persisting across the group
+#     order) instead of being re-streamed per unit;
+#   * **rolled loops** — when the frontend recorded per-iteration bodies
+#     (``Program.iteration``) and the scheduled unit sequence repeats them
+#     verbatim, the repeated segment is described once plus a trip count,
+#     so an executor can run it as ``lax.fori_loop`` over one compiled body
+#     instead of dispatching every unrolled copy.
+
+@dataclasses.dataclass(frozen=True)
+class ExecUnit:
+    """One execution dispatch unit: a streaming pass, a whole-array block
+    kernel, or a jnp-fallback group slice."""
+    ops: Tuple[str, ...]
+    kind: str                           # "stream" | "block" | "jnp"
+    sp: Optional[StreamPass] = None     # populated for kind == "stream"
+    groups: Tuple[int, ...] = ()        # originating fusion-group indices
+    fused: int = 1                      # pre-fusion units merged into this
+
+    def describe(self) -> str:
+        extra = ""
+        if self.sp is not None:
+            extra = f" {self.sp.rows}r/{self.sp.tile_rows}t"
+            if self.sp.resident:
+                extra += f" res={'+'.join(self.sp.resident)}"
+        if self.fused > 1:
+            extra += f" (fused x{self.fused})"
+        return f"{self.kind}[{'+'.join(self.ops)}]{extra}"
+
+
+@dataclasses.dataclass(frozen=True)
+class ResidentSpan:
+    """A tensor held resident (constant index map) over a unit range."""
+    tensor: str
+    first: int                          # first unit index (inclusive)
+    last: int                           # last unit index (inclusive)
+
+
+@dataclasses.dataclass(frozen=True)
+class CarrySlot:
+    """One loop-carried value of a rolled iteration segment."""
+    update: str            # template node whose value advances the slot
+    final: str             # unrolled name the slot holds after the loop
+    init: Optional[str] = None   # pre-loop env name seeding the slot
+    #                              (None: seed with zeros — the slot is
+    #                              only read after its first update)
+    read: Optional[str] = None   # name the template reads it as (None:
+    #                              output-only slot, threaded for the final)
+
+
+@dataclasses.dataclass(frozen=True)
+class RolledLoop:
+    """A detected repeated iteration segment of the unit sequence: units
+    ``[first, first + per_iter)`` are the template body; executing it
+    ``n_iters`` times with the carry rebinding below reproduces units
+    ``[first, first + per_iter * n_iters)`` exactly."""
+    first: int
+    per_iter: int
+    n_iters: int
+    slots: Tuple[CarrySlot, ...]
+
+    @property
+    def stop(self) -> int:
+        """Index one past the last unit the rolled segment replaces."""
+        return self.first + self.per_iter * self.n_iters
+
+
+def flatten_units(kernels) -> Tuple[ExecUnit, ...]:
+    """The flat dispatch sequence of a kernel selection (stream groups
+    contribute one unit per pass, in order)."""
+    units: List[ExecUnit] = []
+    for gi, gk in enumerate(kernels):
+        if gk.kind == "stream":
+            for sp in gk.passes:
+                units.append(ExecUnit(sp.ops, "stream", sp, (gi,)))
+        else:
+            units.append(ExecUnit(tuple(gk.ops), gk.kind, None, (gi,)))
+    return tuple(units)
+
+
+def _merge_candidate(graph: OpGraph, unit: ExecUnit) -> bool:
+    """Streaming passes merge; so do scalar-only jnp groups (their rank-0
+    chains become eager/epilogue scalars of the absorbing pass)."""
+    if unit.kind == "stream":
+        return True
+    if unit.kind != "jnp":
+        return False
+    return all(graph.ops[o].spec == "ew" and not graph.ops[o].irregular
+               and graph.tensors[graph.ops[o].output].shape == ()
+               for o in unit.ops)
+
+
+def fuse_units(graph: OpGraph, units, explicit_bytes: int
+               ) -> Tuple[ExecUnit, ...]:
+    """The cross-pass residency planner: greedily merge adjacent units into
+    one streaming pass wherever re-segmentation proves no value has to
+    materialize at the old boundary.  Merged units stream each operand once
+    for all their ops and keep resident operands in place across the former
+    pass/group boundaries instead of re-streaming them."""
+    fused: List[ExecUnit] = []
+    for unit in units:
+        prev = fused[-1] if fused else None
+        if (prev is not None and _merge_candidate(graph, prev)
+                and _merge_candidate(graph, unit)):
+            ops = list(prev.ops) + list(unit.ops)
+            segs = _segment_group(graph, ops)
+            if len(segs) == 1:
+                sp = _classify_pass(graph, segs[0], explicit_bytes)
+                if isinstance(sp, StreamPass):
+                    fused[-1] = ExecUnit(tuple(ops), "stream", sp,
+                                         prev.groups + unit.groups,
+                                         prev.fused + unit.fused)
+                    continue
+        fused.append(unit)
+    return tuple(fused)
+
+
+def resident_spans(units) -> Tuple[ResidentSpan, ...]:
+    """Unit-index span each resident operand is held over."""
+    first: Dict[str, int] = {}
+    last: Dict[str, int] = {}
+    for ui, unit in enumerate(units):
+        if unit.sp is None:
+            continue
+        for t in unit.sp.resident:
+            first.setdefault(t, ui)
+            last[t] = ui
+    return tuple(ResidentSpan(t, first[t], last[t]) for t in sorted(first))
+
+
+def _build_sigma(program) -> Optional[Dict[str, str]]:
+    """The iteration-successor renaming: node at position ``j`` of body
+    ``i`` ↦ node at position ``j`` of body ``i+1``.  Only equal-length
+    consecutive bodies contribute (GMRES's growing Arnoldi bodies simply
+    produce a partial map the matcher then rejects)."""
+    bodies = [list(b) for b in program.iteration_bodies()]
+    if len(bodies) < 2:
+        return None
+    sigma: Dict[str, str] = {}
+    for a, b in zip(bodies, bodies[1:]):
+        if len(a) == len(b):
+            sigma.update(zip(a, b))
+    return sigma or None
+
+
+def _unit_matches(program, sigma: Dict[str, str], ua: ExecUnit,
+                  ub: ExecUnit) -> bool:
+    """Is ``ub`` exactly the σ-image of ``ua``?  Ops map positionally
+    through σ, node structure is identical, and every operand is either
+    σ-renamed or the same loop-invariant name."""
+    if ua.kind != ub.kind or len(ua.ops) != len(ub.ops):
+        return False
+    if (ua.sp is None) != (ub.sp is None):
+        return False
+    if ua.sp is not None and (ua.sp.rows != ub.sp.rows
+                              or ua.sp.tile_rows != ub.sp.tile_rows):
+        return False
+    for o, o2 in zip(ua.ops, ub.ops):
+        if sigma.get(o) != o2:
+            return False
+        na, nb = program.nodes[o], program.nodes[o2]
+        if (na.op != nb.op or na.shape != nb.shape
+                or na.dtype_bytes != nb.dtype_bytes
+                or na.params != nb.params
+                or len(na.inputs) != len(nb.inputs)):
+            return False
+        for ta, tb in zip(na.inputs, nb.inputs):
+            if tb != sigma.get(ta, ta):
+                return False
+    return True
+
+
+def detect_rolled_loop(program, units) -> Optional[RolledLoop]:
+    """Find the repeated per-iteration segment of a scheduled unit sequence.
+
+    ``program`` is an expression ``Program`` (duck-typed: needs
+    ``iteration_bodies()``, ``nodes`` and ``outputs``) whose builders
+    recorded the unrolled solver-iteration bodies.  Those bodies define the
+    successor renaming σ (:func:`_build_sigma`); detection then *proves*
+    unit-level periodicity — a period ``P`` and region where every unit is
+    exactly the σ-image of the unit ``P`` places earlier — so it tolerates
+    schedules that phase-shift work across iteration boundaries (BiCGStab's
+    deferred ``x`` update).  Iteration 0 typically stays unrolled: CG's
+    ``p0`` aliases ``r0``, so its wiring differs from every later
+    iteration's.  Returns the roll with the largest unit savings, or
+    ``None`` when no period survives the proof.
+    """
+    if program is None:
+        return None
+    sigma = _build_sigma(program)
+    if sigma is None:
+        return None
+    total = len(units)
+
+    best: Optional[Tuple[int, int, int, int]] = None   # (saved, first, P, n)
+    for P in range(1, total // 2 + 1):
+        # every maximal run of σ-matches units[t] -> units[t+P]: a run over
+        # t ∈ [a, c] makes units[a, c+P+1) periodic with period P.  All
+        # runs matter — the final unrolled iteration often schedules
+        # differently (CG fuses the last x-update into it), leaving a
+        # trivial run at the tail next to the real one
+        t = total - P - 1
+        while t >= 0:
+            if not _unit_matches(program, sigma, units[t], units[t + P]):
+                t -= 1
+                continue
+            c = t
+            while t > 0 and _unit_matches(program, sigma,
+                                          units[t - 1], units[t - 1 + P]):
+                t -= 1
+            a = t
+            n = (c + P + 1 - a) // P     # whole periods in the region
+            a = (c + P + 1) - P * n      # truncate the partial leading one
+            saved = (n - 1) * P
+            if n >= 2 and (best is None or saved > best[0]):
+                best = (saved, a, P, n)
+            t -= 1
+    if best is None:
+        return None
+    _, first, P, n = best
+
+    # carry slots: template reads whose σ-image the template itself
+    # produces thread through the loop; σ-mapped reads produced elsewhere
+    # defeat the roll; σ-less reads are loop-invariant
+    template = units[first:first + P]
+    products = [o for u in template for o in u.ops]
+    prod_set = set(products)
+    reads: List[str] = []
+    for u in template:
+        for o in u.ops:
+            for t in program.nodes[o].inputs:
+                if t not in prod_set and t not in reads:
+                    reads.append(t)
+
+    def sig_pow(name: str, k: int) -> Optional[str]:
+        for _ in range(k):
+            name = sigma.get(name)
+            if name is None:
+                return None
+        return name
+
+    final_of: Dict[str, str] = {}
+    for o in products:
+        f = sig_pow(o, n - 1)
+        if f is None:
+            return None
+        final_of[o] = f
+
+    slots: List[CarrySlot] = []
+    updates: set = set()
+    for t in reads:
+        st = sigma.get(t)
+        if st is None:
+            continue                     # loop-invariant operand
+        if st not in prod_set:
+            return None                  # next-generation value produced
+        #                                  outside the template
+        slots.append(CarrySlot(update=st, final=final_of[st],
+                               init=t, read=t))
+        updates.add(st)
+
+    # products the epilogue (or the program outputs) read must come from
+    # the final rolled generation; thread them as output-only slots
+    region_products = {o for u in units[first:first + P * n] for o in u.ops}
+    needed_after = set(program.outputs)
+    for u in units[first + P * n:]:
+        for o in u.ops:
+            needed_after.update(program.nodes[o].inputs)
+    final_to_template = {f: o for o, f in final_of.items()}
+    for f in sorted(needed_after & region_products):
+        o = final_to_template.get(f)
+        if o is None:
+            return None                  # a mid-generation value escapes
+        if o not in updates:
+            updates.add(o)
+            slots.append(CarrySlot(update=o, final=f, init=None,
+                                   read=None))
+    if not slots:
+        return None                      # iterations that carry nothing
+    return RolledLoop(first=first, per_iter=P, n_iters=n,
+                      slots=tuple(slots))
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecPlan:
+    """Execution-level plan for one compiled frontend plan: the fused
+    dispatch units, the residency spans they imply, and the rolled
+    iteration segment (when one was proven)."""
+    units: Tuple[ExecUnit, ...]
+    roll: Optional[RolledLoop]
+    spans: Tuple[ResidentSpan, ...]
+    n_prefuse: int                      # unit count before residency fusion
+
+    def describe(self) -> str:
+        bits = [f"{len(self.units)} units"]
+        if len(self.units) != self.n_prefuse:
+            bits.append(f"fused from {self.n_prefuse} passes")
+        if self.roll is not None:
+            r = self.roll
+            bits.append(f"units[u{r.first}..u{r.first + r.per_iter - 1}] "
+                        f"rolled x{r.n_iters}")
+        carried = [sp for sp in self.spans if sp.last > sp.first]
+        if carried:
+            bits.append("resident across units: " + ", ".join(
+                f"{sp.tensor}[u{sp.first}..u{sp.last}]" for sp in carried))
+        return "; ".join(bits)
+
+
+def plan_execution(graph: OpGraph, kernels, explicit_bytes: int,
+                   program=None) -> ExecPlan:
+    """Units → residency fusion → rolled-loop detection, in that order.
+    ``program`` (the frontend expression DAG) is optional; without it the
+    plan is straight-line."""
+    units = flatten_units(kernels)
+    n_pre = len(units)
+    fused = fuse_units(graph, units, explicit_bytes)
+    roll = detect_rolled_loop(program, fused)
+    return ExecPlan(units=fused, roll=roll, spans=resident_spans(fused),
+                    n_prefuse=n_pre)

@@ -5,26 +5,33 @@ groups, pins, buffer split); this package is where those decisions become
 computation.  ``CompiledPlan.run(backend=...)`` resolves a backend by name
 from the same kind of registry as ``core.search.SearchStrategy``:
 
-  ``reference`` — the ``jax.numpy`` interpreter (op-by-op, full tensors),
-                  the bit-exact oracle every other backend validates against,
-  ``pallas``    — each fusion group as tile-streaming ``pl.pallas_call``
-                  kernels (``interpret=True`` off-TPU), honoring the
-                  co-designed group order end-to-end.
+  ``reference``       — the ``jax.numpy`` interpreter (op-by-op, full
+                        tensors), the bit-exact oracle every other backend
+                        validates against,
+  ``pallas``          — the whole plan compiled into ONE jitted
+                        single-program executable: tile-streaming
+                        ``pl.pallas_call`` units (``interpret=True``
+                        off-TPU) with cross-pass residency fusion and
+                        scan-rolled solver iterations; exactly one device
+                        dispatch per ``run()``,
+  ``pallas-perunit``  — the 0.4-era per-unit driver (one dispatch per
+                        pass), kept as the measured A/B baseline.
 
 Add a backend by subclassing :class:`Executor` and calling
 :func:`register_backend` — see ``docs/execution_backends.md``.
 """
 from .base import (EXECUTOR_REGISTRY, Executor, get_backend, list_backends,
                    plan_groups, plan_order, plan_program, register_backend)
-from .pallas import PallasExecutor
+from .pallas import PallasExecutor, PerUnitPallasExecutor
 from .reference import ReferenceExecutor, evaluate, eval_node, execute_plan
 
 register_backend(ReferenceExecutor)
 register_backend(PallasExecutor)
+register_backend(PerUnitPallasExecutor)
 
 __all__ = [
     "EXECUTOR_REGISTRY", "Executor", "get_backend", "list_backends",
     "register_backend", "plan_groups", "plan_order", "plan_program",
-    "ReferenceExecutor", "PallasExecutor",
+    "ReferenceExecutor", "PallasExecutor", "PerUnitPallasExecutor",
     "evaluate", "eval_node", "execute_plan",
 ]

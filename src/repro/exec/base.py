@@ -88,7 +88,7 @@ def plan_groups(plan) -> List[List[str]]:
     program = plan_program(plan)
     if plan.codesigned is not None:
         return [list(g) for g in plan.codesigned.best.schedule.groups]
-    return [[n] for n in program._order if not program.nodes[n].is_leaf]
+    return [[n] for n in program.schedulable_order()]
 
 
 def plan_order(plan) -> List[str]:

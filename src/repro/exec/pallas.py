@@ -1,24 +1,47 @@
-"""The ``pallas`` execution backend: co-designed groups as real kernels.
+"""The ``pallas`` execution backend: whole-plan single-program executables.
 
-Every fusion group of a lowered plan executes as `pl.pallas_call` kernels
-shaped by :func:`repro.core.lowering.select_group_kernels`:
+A compiled plan executes as **one jitted device program**: every stream /
+block / jnp unit of the execution plan (``core.lowering.plan_execution``)
+is traced inside a single ``jax.jit``, so a ``run()`` is exactly one device
+dispatch — no per-unit Python driver, no scalar round-trips between
+kernels, no per-call ``result_type``/``asarray`` conversion.  The pieces:
 
-* ``stream`` passes run a 1-D grid over row tiles of the pass's shared
-  streamed length.  Contraction right-hand sides (and any other full-block
-  operands) use a *constant index map*, so Pallas keeps them resident in
-  VMEM across every grid step — the execution-level image of the plan's
-  explicit-region pins.  Rank-0 dot/norm reductions accumulate into a
-  revisited ``(1,)`` output block across the pass; scalar epilogues
+* ``stream`` units run ``pl.pallas_call`` with a 1-D grid over row tiles of
+  the unit's shared streamed length.  Contraction right-hand sides (and any
+  other full-block operands) use a *constant index map*, so Pallas keeps
+  them resident in VMEM across every grid step — the execution-level image
+  of the plan's explicit-region pins.  Rank-0 dot/norm reductions
+  accumulate into a revisited ``(1,)`` output block across the pass;
+  *eager* scalars (rank-0 glue whose in-pass inputs are tile-invariant,
+  e.g. ``nalpha = -alpha``) are recomputed per tile so tiled ops can read
+  them without a pass break; reduction-derived scalar epilogues
   (``beta = rs'/rs``) run once on the final tile.
-* ``block`` kernels hold whole arrays as single blocks (stencil sweeps need
-  halo rows, which row tiles cannot provide without overlap).
-* ``jnp`` groups — irregular gathers, >2-operand einsums, scalar-only
-  groups — fall back to one jitted ``jax.numpy`` closure per group.
+* ``block`` units hold whole arrays as single blocks (stencil halos).
+* ``jnp`` units — irregular gathers, >2-operand einsums — inline the
+  reference rules straight into the trace.
+* Adjacent units fused by the residency planner execute as one pass, so
+  operands resident across former pass/group boundaries are not
+  re-streamed (``core.lowering.fuse_units``).
+* When the frontend recorded iteration bodies and
+  ``core.lowering.detect_rolled_loop`` proved the scheduled units repeat
+  them, the repeated segment runs as ``lax.fori_loop`` over one compiled
+  body — ``cg(iters=64)`` traces one iteration, not 64.
+
+Dtype is resolved once per trace from the leaf avals (jit retraces on a
+dtype change); feeds are donated to the executable where the backend
+supports it (never consuming caller-owned device buffers — those are
+copied first); dead intermediates need no runtime ``del``: inside one
+traced program, XLA's buffer liveness frees them.
+
+The PR-3 per-unit driver is kept as the ``pallas-perunit`` backend — one
+dispatch per unit, runtime freeing — as the A/B baseline TABLE 8 measures
+the single-program speedup against.
 
 On CPU (and any non-TPU backend) kernels run with ``interpret=True``, so CI
 exercises the real lowering; on TPU they compile through Mosaic with the
 grid marked ``arbitrary`` (accumulation makes steps order-dependent).
-Override with ``CELLO_PALLAS_INTERPRET=0/1``.
+Override with ``CELLO_PALLAS_INTERPRET=0/1``; donation with
+``CELLO_PALLAS_DONATE=0/1``.
 
 Numerics: tiled reductions re-associate the sum (per-tile partials), so
 outputs match the ``reference`` backend within the tolerances documented in
@@ -29,22 +52,50 @@ verbatim.
 from __future__ import annotations
 
 import os
-from typing import Any, Callable, Dict, List, Sequence, Set, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Set, Tuple
 
-from ..core.lowering import (GroupKernel, STREAM_EINSUMS, StreamPass,
+from ..core.lowering import (STREAM_EINSUMS, ExecPlan, GroupKernel,
+                             StreamPass, flatten_units, plan_execution,
                              select_group_kernels)
 from .base import Executor, plan_groups, plan_program
 from .reference import eval_node
+
+_BACKEND_PROBE: Optional[str] = None
+
+
+def _default_backend() -> str:
+    """``jax.default_backend()``, probed once per process (the probe
+    imports jax and touches the platform registry — too slow per call)."""
+    global _BACKEND_PROBE
+    if _BACKEND_PROBE is None:
+        import jax
+        _BACKEND_PROBE = jax.default_backend()
+    return _BACKEND_PROBE
+
+
+def _env_flag(name: str) -> Optional[bool]:
+    env = os.environ.get(name)
+    if env is None or not env.strip():
+        return None                      # unset/empty: use the default
+    return env.strip().lower() not in ("0", "false", "no")
 
 
 def use_interpret() -> bool:
     """Interpret Pallas kernels unless we are actually on a TPU (CI and
     laptops exercise the same lowering through the interpreter)."""
-    env = os.environ.get("CELLO_PALLAS_INTERPRET")
+    env = _env_flag("CELLO_PALLAS_INTERPRET")
     if env is not None:
-        return env.strip().lower() not in ("0", "false", "no", "")
-    import jax
-    return jax.default_backend() != "tpu"
+        return env
+    return _default_backend() != "tpu"
+
+
+def use_donation() -> bool:
+    """Donate leaf feeds into the executable (dead after their last read).
+    Off on CPU, where XLA ignores donation and warns."""
+    env = _env_flag("CELLO_PALLAS_DONATE")
+    if env is not None:
+        return env
+    return _default_backend() != "cpu"
 
 
 def _pallas_call_kwargs(interpret: bool) -> Dict[str, Any]:
@@ -61,19 +112,33 @@ def _pallas_call_kwargs(interpret: bool) -> Dict[str, Any]:
 # node classification inside a streaming pass
 # --------------------------------------------------------------------------
 
-def _node_class(node) -> str:
-    """"tiled" | "reduce" | "epilogue" for one expr node in a stream pass."""
-    if node.op in ("dot", "norm"):
-        return "reduce"
-    if node.shape == ():
-        # a rank-0 matmul (``a,a->``) is a reduction; rank-0 elementwise
-        # (alpha = rs/pAp) is a scalar epilogue
-        return "reduce" if node.op in ("matmul", "einsum") else "epilogue"
-    return "tiled"
+def _classify_nodes(nodes) -> Dict[str, str]:
+    """"tiled" | "reduce" | "eager" | "epilogue" per node of one pass.
+
+    ``eager`` scalars have tile-invariant in-pass inputs and are recomputed
+    per tile; ``epilogue`` scalars depend on an in-pass reduction and only
+    exist on the final tile.
+    """
+    classes: Dict[str, str] = {}
+    late: Set[str] = set()
+    for nd in nodes:
+        if nd.op in ("dot", "norm") or (nd.op in ("matmul", "einsum")
+                                        and nd.shape == ()):
+            classes[nd.name] = "reduce"
+            late.add(nd.name)
+        elif nd.shape == ():
+            if any(t in late for t in nd.inputs):
+                classes[nd.name] = "epilogue"
+                late.add(nd.name)
+            else:
+                classes[nd.name] = "eager"
+        else:
+            classes[nd.name] = "tiled"
+    return classes
 
 
 # --------------------------------------------------------------------------
-# kernel builders (one per GroupKernel kind)
+# kernel builders (one per ExecUnit kind)
 # --------------------------------------------------------------------------
 
 class _StreamCall:
@@ -86,6 +151,7 @@ class _StreamCall:
         shapes = {n: program.nodes[n].shape
                   for nd in self.nodes for n in (*nd.inputs, nd.name)}
         self.shapes = shapes
+        self.classes = _classify_nodes(self.nodes)
 
         stream_in: List[str] = []
         scalar_in: List[str] = []
@@ -96,7 +162,7 @@ class _StreamCall:
                 bucket.append(name)
 
         for nd in self.nodes:
-            cls = _node_class(nd)
+            cls = self.classes[nd.name]
             if cls == "tiled" and nd.op in ("matmul", "einsum"):
                 rhs = STREAM_EINSUMS[nd.param("spec")]
                 _want(nd.inputs[1 - rhs], stream_in)
@@ -106,24 +172,28 @@ class _StreamCall:
             elif cls == "reduce":
                 for t in nd.inputs:
                     _want(t, stream_in)
-            else:                                   # epilogue: all scalars
+            else:                       # eager/epilogue: rank-0 operands
                 for t in nd.inputs:
                     _want(t, scalar_in)
 
         self.stream_in, self.res_in, self.scalar_in = \
             stream_in, res_in, scalar_in
         # reductions always need an output block to accumulate into;
-        # streamed / epilogue values only when read outside this pass
+        # streamed / scalar values only when read outside this pass
         self.red_out = [nd.name for nd in self.nodes
-                        if _node_class(nd) == "reduce"]
-        self.stream_out = [nd.name for nd in self.nodes
-                           if _node_class(nd) == "tiled"
-                           and nd.name in needed]
-        self.epi_out = [nd.name for nd in self.nodes
-                        if _node_class(nd) == "epilogue"
+                        if self.classes[nd.name] == "reduce"]
+        self.sca_out = [nd.name for nd in self.nodes
+                        if self.classes[nd.name] in ("eager", "epilogue")
                         and nd.name in needed]
+        self.stream_out = [nd.name for nd in self.nodes
+                           if self.classes[nd.name] == "tiled"
+                           and nd.name in needed]
         self.needed = needed
         self._built: Dict[Any, Callable] = {}
+
+    @property
+    def in_names(self) -> List[str]:
+        return self.stream_in + self.res_in + self.scalar_in
 
     # -- pallas plumbing ------------------------------------------------
     def _specs(self, dtype):
@@ -145,7 +215,7 @@ class _StreamCall:
                     + [full_spec(self.shapes[n]) for n in self.res_in]
                     + [full_spec(()) for n in self.scalar_in])
         out_specs, out_shape = [], []
-        for n in self.red_out + self.epi_out:
+        for n in self.red_out + self.sca_out:
             out_specs.append(full_spec(()))
             out_shape.append(jax.ShapeDtypeStruct((1,), dtype))
         for n in self.stream_out:
@@ -158,13 +228,14 @@ class _StreamCall:
         from jax.experimental import pallas as pl
 
         n_tiles = self.sp.rows // self.sp.tile_rows
-        nodes, shapes = self.nodes, self.shapes
+        nodes, shapes, classes = self.nodes, self.shapes, self.classes
         n_stream, n_res = len(self.stream_in), len(self.res_in)
         n_scal = len(self.scalar_in)
-        scalar_outs = self.red_out + self.epi_out
+        scalar_outs = self.red_out + self.sca_out
         stream_out_set = set(self.stream_out)
+        sca_out_set = set(self.sca_out)
         red_set = set(self.red_out)
-        epi_nodes = [nd for nd in nodes if _node_class(nd) == "epilogue"]
+        epi_nodes = [nd for nd in nodes if classes[nd.name] == "epilogue"]
 
         def kernel(*refs):
             i = pl.program_id(0)
@@ -177,18 +248,27 @@ class _StreamCall:
             oref = dict(zip(scalar_outs + self.stream_out,
                             refs[n_stream + n_res + n_scal:]))
             tiles: Dict[str, Any] = {}
+            scal: Dict[str, Any] = {}
 
             def stv(name):                      # streamed tile value
                 if name not in tiles:
                     tiles[name] = sref[name][...]
                 return tiles[name]
 
+            def scv(name):                      # tile-invariant scalar
+                if name not in scal:
+                    scal[name] = cref[name][0]
+                return scal[name]
+
             def opv(nd, t):                     # tiled-op operand value
-                return cref[t][0] if shapes[t] == () else stv(t)
+                return scv(t) if shapes[t] == () else stv(t)
 
             for nd in nodes:
-                cls = _node_class(nd)
-                if cls == "tiled":
+                cls = classes[nd.name]
+                if cls == "eager":
+                    scal[nd.name] = eval_node(
+                        nd, [scv(t) for t in nd.inputs])
+                elif cls == "tiled":
                     if nd.op in ("matmul", "einsum"):
                         rhs = STREAM_EINSUMS[nd.param("spec")]
                         val = jnp.dot(stv(nd.inputs[1 - rhs]),
@@ -210,7 +290,7 @@ class _StreamCall:
                     _accumulate(oref[nd.name], part, i)
                     if nd.op == "norm":
                         _sqrt_at(oref[nd.name], i == last)
-            if epi_nodes:
+            if epi_nodes or sca_out_set:
                 @pl.when(i == last)
                 def _():
                     vals: Dict[str, Any] = {}
@@ -220,12 +300,14 @@ class _StreamCall:
                             return vals[t]
                         if t in red_set:
                             return oref[t][0]
+                        if t in scal:
+                            return scal[t]
                         return cref[t][0]
                     for nd in epi_nodes:
                         vals[nd.name] = eval_node(
                             nd, [sval(t) for t in nd.inputs])
-                        if nd.name in oref:
-                            oref[nd.name][0] = vals[nd.name]
+                    for n in sca_out_set:
+                        oref[n][0] = vals[n] if n in vals else scal[n]
 
         in_specs, out_specs, out_shape = self._specs(dtype)
         return pl.pallas_call(
@@ -233,12 +315,10 @@ class _StreamCall:
             out_specs=out_specs, out_shape=out_shape,
             **_pallas_call_kwargs(use_interpret()))
 
-    # -- driver ---------------------------------------------------------
-    def __call__(self, env: Dict[str, Any]) -> Dict[str, Any]:
+    # -- drivers --------------------------------------------------------
+    def apply(self, env: Dict[str, Any], dtype) -> Dict[str, Any]:
+        """Run (or trace) this pass over ``env`` at a resolved ``dtype``."""
         import jax.numpy as jnp
-        dtype = jnp.result_type(
-            *(env[n].dtype for n in
-              self.stream_in + self.res_in + self.scalar_in))
         call = self._built.get(dtype)
         if call is None:
             call = self._built[dtype] = self._build(dtype)
@@ -247,12 +327,17 @@ class _StreamCall:
                 + [jnp.reshape(jnp.asarray(env[n], dtype), (1,))
                    for n in self.scalar_in])
         outs = call(*args)
-        names = self.red_out + self.epi_out + self.stream_out
+        names = self.red_out + self.sca_out + self.stream_out
         result = {}
         for n, v in zip(names, outs):
             if n in self.needed:
                 result[n] = v[0] if self.shapes[n] == () else v
         return result
+
+    def __call__(self, env: Dict[str, Any]) -> Dict[str, Any]:
+        import jax.numpy as jnp
+        dtype = jnp.result_type(*(env[n].dtype for n in self.in_names))
+        return self.apply(env, dtype)
 
 
 def _accumulate(ref, part, i):
@@ -317,94 +402,272 @@ class _BlockCall:
                        for n in self.out_names],
             **_pallas_call_kwargs(use_interpret()))
 
-    def __call__(self, env: Dict[str, Any]) -> Dict[str, Any]:
+    def apply(self, env: Dict[str, Any], dtype) -> Dict[str, Any]:
         import jax.numpy as jnp
-        dtype = jnp.result_type(*(env[n].dtype for n in self.in_names))
         call = self._built.get(dtype)
         if call is None:
             call = self._built[dtype] = self._build(dtype)
         outs = call(*[jnp.asarray(env[n], dtype) for n in self.in_names])
         return dict(zip(self.out_names, outs))
 
+    def __call__(self, env: Dict[str, Any]) -> Dict[str, Any]:
+        import jax.numpy as jnp
+        dtype = jnp.result_type(*(env[n].dtype for n in self.in_names))
+        return self.apply(env, dtype)
+
 
 class _JnpCall:
-    """Jitted jax.numpy fallback for one non-streamable group."""
+    """jax.numpy fallback for one non-streamable group.  Inside a
+    single-program trace it inlines straight into the outer jit; driven
+    standalone (``pallas-perunit``) it jits itself lazily on first call, so
+    compiling a plan never eagerly builds closures for units a rolled loop
+    may subsume."""
 
     def __init__(self, program, ops: Sequence[str], needed: Set[str]):
         self.nodes = [program.nodes[o] for o in ops]
         self.in_names, self.out_names = _group_io(program, self.nodes,
                                                   needed)
-        import jax
+        self._fn = None                    # jitted lazily (standalone only)
 
-        def f(*args):
-            vals = dict(zip(self.in_names, args))
-            for nd in self.nodes:
-                vals[nd.name] = eval_node(nd,
-                                          [vals[t] for t in nd.inputs])
-            return tuple(vals[n] for n in self.out_names)
-        self._fn = jax.jit(f)
+    def _f(self, *args):
+        vals = dict(zip(self.in_names, args))
+        for nd in self.nodes:
+            vals[nd.name] = eval_node(nd, [vals[t] for t in nd.inputs])
+        return tuple(vals[n] for n in self.out_names)
+
+    def apply(self, env: Dict[str, Any], dtype=None) -> Dict[str, Any]:
+        outs = self._f(*[env[n] for n in self.in_names])
+        return dict(zip(self.out_names, outs))
 
     def __call__(self, env: Dict[str, Any]) -> Dict[str, Any]:
+        if self._fn is None:
+            import jax
+            self._fn = jax.jit(self._f)
         outs = self._fn(*[env[n] for n in self.in_names])
         return dict(zip(self.out_names, outs))
 
 
+def _build_call(program, unit, needed: Set[str]):
+    if unit.kind == "stream":
+        return _StreamCall(program, unit.sp, needed)
+    if unit.kind == "block":
+        return _BlockCall(program, unit.ops, needed)
+    return _JnpCall(program, unit.ops, needed)
+
+
 # --------------------------------------------------------------------------
-# the executor
+# plan plumbing shared by both pallas drivers
 # --------------------------------------------------------------------------
+
+def _plan_explicit_bytes(plan) -> int:
+    sched = (plan.codesigned.best.schedule
+             if plan.codesigned is not None else None)
+    return sched.config.explicit_bytes if sched is not None else 0
+
 
 def _plan_kernels(plan, groups) -> Tuple[GroupKernel, ...]:
     kernels = getattr(plan, "group_kernels", ()) or ()
     if len(kernels) == len(groups):
         return tuple(kernels)
-    sched = (plan.codesigned.best.schedule
-             if plan.codesigned is not None else None)
-    explicit = sched.config.explicit_bytes if sched is not None else 0
-    return select_group_kernels(plan.trace.graph, groups, explicit)
+    return select_group_kernels(plan.trace.graph, groups,
+                                _plan_explicit_bytes(plan))
 
+
+def _plan_exec(plan, program, kernels) -> ExecPlan:
+    """The plan's carried :class:`ExecPlan` when it matches the kernel
+    selection, else a freshly computed one."""
+    ep = getattr(plan, "exec_plan", None)
+    if ep is not None:
+        flat = [o for u in ep.units for o in u.ops]
+        if flat == [o for gk in kernels for o in gk.ops]:
+            return ep
+    return plan_execution(plan.trace.graph, kernels,
+                          _plan_explicit_bytes(plan), program=program)
+
+
+def _unit_needed(program, units
+                 ) -> Tuple[List[Set[str]], Dict[str, List[int]]]:
+    """Per-unit "read outside this unit" sets over the straight-line unit
+    sequence (program outputs always count), plus the tensor -> consuming
+    unit indices map they were derived from."""
+    outputs = set(program.outputs)
+    consumers: Dict[str, List[int]] = {}
+    for ui, unit in enumerate(units):
+        for o in unit.ops:
+            for t in program.nodes[o].inputs:
+                consumers.setdefault(t, []).append(ui)
+    needed = [{o for o in unit.ops
+               if o in outputs or any(c > ui for c in consumers.get(o, ()))}
+              for ui, unit in enumerate(units)]
+    return needed, consumers
+
+
+# --------------------------------------------------------------------------
+# the single-program executable
+# --------------------------------------------------------------------------
+
+class _SingleProgram:
+    """One whole-plan jitted executable: ``feeds -> {output: value}``.
+
+    All units trace inside a single ``jax.jit``; a detected rolled loop
+    runs as ``lax.fori_loop`` over the template body's calls.  ``stats``
+    counts traces (Python body executions under jit) and device dispatches
+    (calls of the one jitted function) — the one-dispatch guarantee is
+    ``dispatches == runs`` with ``traces`` staying at 1 per dtype.
+    """
+
+    def __init__(self, plan):
+        program = plan_program(plan)
+        groups = plan_groups(plan)
+        kernels = _plan_kernels(plan, groups)
+        ep = _plan_exec(plan, program, kernels)
+        self.exec_plan = ep
+        units, roll = ep.units, ep.roll
+        needed, _ = _unit_needed(program, units)
+        if roll is not None:
+            # loop-carried values must leave their kernels even when the
+            # straight-line view says nothing later reads them
+            updates = {sl.update for sl in roll.slots}
+            inits = {sl.init for sl in roll.slots if sl.init is not None}
+            for ui in range(roll.first, roll.first + roll.per_iter):
+                needed[ui] = needed[ui] | (updates & set(units[ui].ops))
+            for ui in range(roll.first):
+                needed[ui] = needed[ui] | (inits & set(units[ui].ops))
+            pro = range(roll.first)
+            tmpl = range(roll.first, roll.first + roll.per_iter)
+            epi = range(roll.stop, len(units))
+        else:
+            pro, tmpl, epi = range(len(units)), (), ()
+        self._pro = [_build_call(program, units[i], needed[i]) for i in pro]
+        self._tmpl = [_build_call(program, units[i], needed[i])
+                      for i in tmpl]
+        self._epi = [_build_call(program, units[i], needed[i]) for i in epi]
+        self.roll = roll
+        self.leaf_names = [nd.name for nd in program.leaves()]
+        self.out_names = list(program.outputs)
+        self.stats = {"traces": 0, "dispatches": 0}
+
+        if roll is not None:
+            tmpl_ops = {o for i in tmpl for o in units[i].ops}
+            reads = {sl.read for sl in roll.slots if sl.read is not None}
+            ext: List[str] = []
+            for call in self._tmpl:
+                for n in call.in_names:
+                    if n not in tmpl_ops and n not in reads \
+                            and n not in ext:
+                        ext.append(n)
+            # detect_rolled_loop guarantees every carry update is produced
+            # by the template (it bails out otherwise)
+            assert all(sl.update in tmpl_ops for sl in roll.slots)
+            self._tmpl_ext = ext
+            self._slot_shapes = [program.nodes[sl.update].shape
+                                 for sl in roll.slots]
+
+        self._donate = use_donation()
+        # every leaf dies inside the program (outputs are op-produced)
+        self.donate_argnums = tuple(range(len(self.leaf_names)))
+        import jax
+        kwargs = ({"donate_argnums": self.donate_argnums}
+                  if self._donate else {})
+        self._jit = jax.jit(self._traced, **kwargs)
+
+    # -- the traced program --------------------------------------------
+    def _traced(self, *leaf_vals):
+        import jax.numpy as jnp
+        self.stats["traces"] += 1
+        float_dts = [v.dtype for v in leaf_vals
+                     if jnp.issubdtype(v.dtype, jnp.floating)]
+        # dtype resolved once per trace from the leaf avals; integer
+        # leaves (gather indices) keep their own dtype
+        dtype = jnp.result_type(*float_dts) if float_dts else jnp.float32
+        env: Dict[str, Any] = {}
+        for name, v in zip(self.leaf_names, leaf_vals):
+            env[name] = (jnp.asarray(v, dtype)
+                         if jnp.issubdtype(v.dtype, jnp.floating) else v)
+        for call in self._pro:
+            env.update(call.apply(env, dtype))
+        if self.roll is not None:
+            from jax import lax
+            slots = self.roll.slots
+            base = {n: env[n] for n in self._tmpl_ext}
+
+            def body(_, carry):
+                env_l = dict(base)
+                for sl, v in zip(slots, carry):
+                    if sl.read is not None:
+                        env_l[sl.read] = v
+                for call in self._tmpl:
+                    env_l.update(call.apply(env_l, dtype))
+                return tuple(env_l[sl.update] for sl in slots)
+
+            # output-only slots (init=None) seed with zeros: their carry-in
+            # is never read, only their final generation leaves the loop
+            carry = tuple(
+                env[sl.init] if sl.init is not None
+                else jnp.zeros(shape, dtype)
+                for sl, shape in zip(slots, self._slot_shapes))
+            carry = lax.fori_loop(0, self.roll.n_iters, body, carry)
+            for sl, v in zip(slots, carry):
+                env[sl.final] = v
+        for call in self._epi:
+            env.update(call.apply(env, dtype))
+        # no runtime freeing: inside one traced program, XLA buffer
+        # liveness retires dead intermediates
+        return tuple(env[o] for o in self.out_names)
+
+    # -- the dispatch ---------------------------------------------------
+    def __call__(self, feeds: Dict[str, Any]) -> Dict[str, Any]:
+        args = []
+        for leaf in self.leaf_names:
+            if leaf not in feeds:
+                raise KeyError(f"feeds missing leaf {leaf!r}")
+            v = feeds[leaf]
+            if self._donate:
+                import jax
+                import jax.numpy as jnp
+                if isinstance(v, jax.Array):
+                    # donation must never consume a caller-owned buffer
+                    v = jnp.array(v, copy=True)
+            args.append(v)
+        self.stats["dispatches"] += 1
+        outs = self._jit(*args)
+        return dict(zip(self.out_names, outs))
+
+
+# --------------------------------------------------------------------------
+# the executors
+# --------------------------------------------------------------------------
 
 class PallasExecutor(Executor):
-    """Execute the co-designed group order through Pallas kernels."""
+    """Compile the whole plan into one jitted single-program executable."""
 
     name = "pallas"
+
+    def compile(self, plan) -> _SingleProgram:
+        return _SingleProgram(plan)
+
+
+class PerUnitPallasExecutor(Executor):
+    """The PR-3 driver: one dispatch per execution unit, runtime freeing.
+
+    Kept as the measured A/B baseline for the single-program executable
+    (TABLE 8) and as a debugging surface — each unit can be inspected in
+    isolation.  Uses the *unfused* unit sequence: no cross-pass residency,
+    no rolled loops.
+    """
+
+    name = "pallas-perunit"
 
     def compile(self, plan):
         program = plan_program(plan)
         groups = plan_groups(plan)
         kernels = _plan_kernels(plan, groups)
+        units = flatten_units(kernels)
+        needed, consumers = _unit_needed(program, units)
+        calls = [_build_call(program, units[ui], needed[ui])
+                 for ui in range(len(units))]
 
-        # flatten groups into execution units (stream groups contribute one
-        # unit per pass), then compute per-unit "needed outside" sets and
-        # per-tensor last-use for freeing dead intermediates
-        units: List[Tuple[List[str], Any]] = []     # (ops, kind/StreamPass)
-        for gk in kernels:
-            if gk.kind == "stream":
-                for sp in gk.passes:
-                    units.append((list(sp.ops), sp))
-            else:
-                units.append((list(gk.ops), gk.kind))
-
-        unit_of_op = {o: ui for ui, (ops, _) in enumerate(units)
-                      for o in ops}
         outputs = set(program.outputs)
-        consumers: Dict[str, List[int]] = {}
-        for ops, _ in units:
-            for o in ops:
-                for t in program.nodes[o].inputs:
-                    consumers.setdefault(t, []).append(unit_of_op[o])
-
-        calls = []
-        for ui, (ops, how) in enumerate(units):
-            needed = {o for o in ops
-                      if o in outputs
-                      or any(c > ui for c in consumers.get(o, ()))}
-            if isinstance(how, StreamPass):
-                calls.append(_StreamCall(program, how, needed))
-            elif how == "block":
-                calls.append(_BlockCall(program, ops, needed))
-            else:
-                calls.append(_JnpCall(program, ops, needed))
-
         last_use = {t: max(uis) for t, uis in consumers.items()}
         leaves = [nd.name for nd in program.leaves()]
 

@@ -64,7 +64,7 @@ def execute_plan(program, *, order: Optional[Sequence[str]] = None,
     numerics question.
     """
     vals: Dict[str, Any] = {}
-    op_names = [n for n in program._order if not program.nodes[n].is_leaf]
+    op_names = program.schedulable_order()
     order = list(order) if order is not None else op_names
     if sorted(order) != sorted(op_names):
         raise ValueError(f"order is not a permutation of {program.name!r} "

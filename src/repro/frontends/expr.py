@@ -31,10 +31,11 @@ JAX's default float precision regardless.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import hashlib
 import math
-from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
+from typing import Any, Dict, Iterator, List, Optional, Sequence, Tuple, Union
 
 from ..core.graph import OpGraph, TensorKind, _parse_einsum
 
@@ -126,6 +127,8 @@ class Program:
         self._order: List[str] = []       # insertion order = a topo order
         self.outputs: List[str] = []
         self._counts: Dict[str, int] = {}
+        self._bodies: List[List[str]] = []   # per-iteration node names
+        self._cur_body: Optional[List[str]] = None
 
     # -- node plumbing ----------------------------------------------------
     def _register(self, node: ExprNode) -> Expr:
@@ -133,7 +136,33 @@ class Program:
             raise ValueError(f"duplicate node name {node.name!r}")
         self.nodes[node.name] = node
         self._order.append(node.name)
+        if self._cur_body is not None:
+            self._cur_body.append(node.name)
         return Expr(self, node.name)
+
+    @contextlib.contextmanager
+    def iteration(self) -> Iterator[None]:
+        """Record the nodes built inside as one solver-iteration body.
+
+        Unrolled solver loops wrap each iteration in this context; the
+        recorded bodies (:meth:`iteration_bodies`) let the execution layer
+        recognize the repeated per-iteration structure and run it *rolled*
+        (one compiled body under ``lax.fori_loop``) instead of dispatching
+        every unrolled copy.  Purely metadata: the DAG, its schedule, and
+        its numerics are identical with or without the annotation.
+        """
+        if self._cur_body is not None:
+            raise ValueError("iteration() contexts do not nest")
+        self._cur_body = []
+        try:
+            yield
+        finally:
+            self._bodies.append(self._cur_body)
+            self._cur_body = None
+
+    def iteration_bodies(self) -> List[List[str]]:
+        """Recorded per-iteration node names (copies; possibly empty)."""
+        return [list(b) for b in self._bodies]
 
     def _autoname(self, op: str) -> str:
         while True:
@@ -381,6 +410,11 @@ class Program:
 
     def leaves(self) -> List[ExprNode]:
         return [self.nodes[n] for n in self._order if self.nodes[n].is_leaf]
+
+    def schedulable_order(self) -> List[str]:
+        """The non-leaf node names in build order (a valid topo order) —
+        the op universe every schedule must permute."""
+        return [n for n in self._order if not self.nodes[n].is_leaf]
 
     def __repr__(self) -> str:
         n_ops = sum(1 for nd in self.nodes.values() if not nd.is_leaf)

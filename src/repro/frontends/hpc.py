@@ -48,15 +48,17 @@ def cg(n: int = 4096, iters: int = 4) -> Program:
     pk = r                                  # p0 aliases r0
     rs = p.dot(r, r, name="rs0")
     for k in range(iters):
-        Ap = p.matmul(A, pk, name=f"Ap{k}")
-        pAp = p.dot(pk, Ap, name=f"pAp{k}")
-        alpha = p.div(rs, pAp, name=f"alpha{k}")
-        x = p.axpy(alpha, pk, x, name=f"x{k + 1}")
-        r = p.axpy(p.neg(alpha, name=f"nalpha{k}"), Ap, r, name=f"r{k + 1}")
-        rs_new = p.dot(r, r, name=f"rs{k + 1}")
-        beta = p.div(rs_new, rs, name=f"beta{k}")
-        pk = p.axpy(beta, pk, r, name=f"p{k + 1}")
-        rs = rs_new
+        with p.iteration():
+            Ap = p.matmul(A, pk, name=f"Ap{k}")
+            pAp = p.dot(pk, Ap, name=f"pAp{k}")
+            alpha = p.div(rs, pAp, name=f"alpha{k}")
+            x = p.axpy(alpha, pk, x, name=f"x{k + 1}")
+            r = p.axpy(p.neg(alpha, name=f"nalpha{k}"), Ap, r,
+                       name=f"r{k + 1}")
+            rs_new = p.dot(r, r, name=f"rs{k + 1}")
+            beta = p.div(rs_new, rs, name=f"beta{k}")
+            pk = p.axpy(beta, pk, r, name=f"p{k + 1}")
+            rs = rs_new
     p.output(x, r)
     return p
 
@@ -74,24 +76,26 @@ def bicgstab(n: int = 4096, iters: int = 3) -> Program:
     pk = r
     rho = p.dot(rhat, r, name="rho0")
     for k in range(iters):
-        v = p.matmul(A, pk, name=f"v{k}")
-        alpha = p.div(rho, p.dot(rhat, v, name=f"rhv{k}"),
-                      name=f"alpha{k}")
-        s = p.axpy(p.neg(alpha, name=f"nalpha{k}"), v, r, name=f"s{k}")
-        t = p.matmul(A, s, name=f"t{k}")
-        omega = p.div(p.dot(t, s, name=f"ts{k}"),
-                      p.dot(t, t, name=f"tt{k}"), name=f"omega{k}")
-        x = p.axpy(omega, s, p.axpy(alpha, pk, x, name=f"xh{k}"),
-                   name=f"x{k + 1}")
-        r = p.axpy(p.neg(omega, name=f"nomega{k}"), t, s, name=f"r{k + 1}")
-        rho_new = p.dot(rhat, r, name=f"rho{k + 1}")
-        beta = p.mul(p.div(rho_new, rho, name=f"rr{k}"),
-                     p.div(alpha, omega, name=f"ao{k}"), name=f"beta{k}")
-        pk = p.axpy(beta,
-                    p.axpy(p.neg(omega, name=f"nomega2_{k}"), v, pk,
-                           name=f"pv{k}"),
-                    r, name=f"p{k + 1}")
-        rho = rho_new
+        with p.iteration():
+            v = p.matmul(A, pk, name=f"v{k}")
+            alpha = p.div(rho, p.dot(rhat, v, name=f"rhv{k}"),
+                          name=f"alpha{k}")
+            s = p.axpy(p.neg(alpha, name=f"nalpha{k}"), v, r, name=f"s{k}")
+            t = p.matmul(A, s, name=f"t{k}")
+            omega = p.div(p.dot(t, s, name=f"ts{k}"),
+                          p.dot(t, t, name=f"tt{k}"), name=f"omega{k}")
+            x = p.axpy(omega, s, p.axpy(alpha, pk, x, name=f"xh{k}"),
+                       name=f"x{k + 1}")
+            r = p.axpy(p.neg(omega, name=f"nomega{k}"), t, s,
+                       name=f"r{k + 1}")
+            rho_new = p.dot(rhat, r, name=f"rho{k + 1}")
+            beta = p.mul(p.div(rho_new, rho, name=f"rr{k}"),
+                         p.div(alpha, omega, name=f"ao{k}"), name=f"beta{k}")
+            pk = p.axpy(beta,
+                        p.axpy(p.neg(omega, name=f"nomega2_{k}"), v, pk,
+                               name=f"pv{k}"),
+                        r, name=f"p{k + 1}")
+            rho = rho_new
     p.output(x, r)
     return p
 
@@ -111,13 +115,18 @@ def gmres(n: int = 4096, restart: int = 8) -> Program:
     vs: List[Expr] = [p.div(r, beta, name="v0")]
     h_last = beta
     for j in range(m):
-        w = p.matmul(A, vs[j], name=f"w{j}")
-        for i in range(j + 1):
-            hij = p.dot(vs[i], w, name=f"h{i}_{j}")
-            w = p.axpy(p.neg(hij, name=f"nh{i}_{j}"), vs[i], w,
-                       name=f"w{j}_{i}")
-        h_last = p.norm(w, name=f"h{j + 1}_{j}")
-        vs.append(p.div(w, h_last, name=f"v{j + 1}"))
+        # each Arnoldi step is recorded as an iteration body even though
+        # the growing orthogonalization loop makes the bodies structurally
+        # distinct: the roll detector must prove them identical (it will
+        # refuse here) rather than assume it
+        with p.iteration():
+            w = p.matmul(A, vs[j], name=f"w{j}")
+            for i in range(j + 1):
+                hij = p.dot(vs[i], w, name=f"h{i}_{j}")
+                w = p.axpy(p.neg(hij, name=f"nh{i}_{j}"), vs[i], w,
+                           name=f"w{j}_{i}")
+            h_last = p.norm(w, name=f"h{j + 1}_{j}")
+            vs.append(p.div(w, h_last, name=f"v{j + 1}"))
     p.output(vs[-1], h_last)
     return p
 
@@ -130,7 +139,8 @@ def jacobi2d(n: int = 4096, sweeps: int = 8) -> Program:
     u = p.input("u0", (n, n))
     f = p.input("f", (n, n))
     for k in range(sweeps):
-        u = p.stencil2d(u, f, name=f"u{k + 1}")
+        with p.iteration():
+            u = p.stencil2d(u, f, name=f"u{k + 1}")
     p.output(u)
     return p
 
@@ -144,9 +154,10 @@ def power_iteration(n: int = 4096, iters: int = 8) -> Program:
     x = p.input("x0", (n,))
     lam = None
     for k in range(iters):
-        y = p.matmul(A, x, name=f"y{k}")
-        lam = p.norm(y, name=f"lam{k}")
-        x = p.div(y, lam, name=f"x{k + 1}")
+        with p.iteration():
+            y = p.matmul(A, x, name=f"y{k}")
+            lam = p.norm(y, name=f"lam{k}")
+            x = p.div(y, lam, name=f"x{k + 1}")
     p.output(x, lam)
     return p
 

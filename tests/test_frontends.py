@@ -237,11 +237,45 @@ class TestReferenceNumerics:
 
     def test_non_topological_order_rejected(self):
         prog = build_workload("cg", n=8, iters=1)
-        ops = [n for n in prog._order if not prog.nodes[n].is_leaf]
+        ops = prog.schedulable_order()
         with pytest.raises(ValueError, match="not topological"):
             execute_plan(prog, order=list(reversed(ops)))
         with pytest.raises(ValueError, match="permutation"):
             execute_plan(prog, order=ops[:-1])
+
+    def test_schedulable_order_is_public_and_leaf_free(self):
+        prog = build_workload("cg", n=8, iters=1)
+        order = prog.schedulable_order()
+        assert order == [n for n in prog._order
+                         if not prog.nodes[n].is_leaf]
+        assert not any(prog.nodes[n].is_leaf for n in order)
+
+    def test_iteration_bodies_recorded(self):
+        prog = build_workload("cg", n=8, iters=3)
+        bodies = prog.iteration_bodies()
+        assert len(bodies) == 3
+        # each CG iteration registers exactly its 9 nodes, in build order
+        assert all(len(b) == 9 for b in bodies)
+        assert bodies[0][0] == "Ap0" and bodies[2][-1] == "p3"
+        # returned lists are copies: mutating them cannot corrupt the
+        # program's record
+        bodies[0].clear()
+        assert len(prog.iteration_bodies()[0]) == 9
+        # bodies are metadata only — the DAG is identical to an
+        # unannotated build
+        assert prog.schedulable_order() == \
+            build_workload("cg", n=8, iters=3).schedulable_order()
+
+    def test_iteration_context_does_not_nest(self):
+        p = Program("nest")
+        with pytest.raises(ValueError, match="nest"):
+            with p.iteration():
+                with p.iteration():
+                    pass  # pragma: no cover
+        # the failed inner context must not wedge recording
+        with p.iteration():
+            p.input("x", (4,))
+        assert [len(b) for b in p.iteration_bodies()] == [0, 1]
 
 
 # ---------------------------------------------------------------------------
