@@ -52,13 +52,13 @@ def run(backend: Optional[str] = None,
 
     from repro.frontends import make_feeds
 
-    from .workloads import hpc_exec_workloads
+    from .workloads import hpc_exec_workloads, workload_density
 
     reps = int(repeats) if repeats else REPS
     backends = [backend] if backend else list(BACKENDS)
     rows = ["workload,us_per_call,backend,predicted_speedup_vs_implicit,"
             "groups,pallas_groups,jnp_groups,exec_units,rolled_iters,"
-            "max_rel_err_vs_reference"]
+            "max_rel_err_vs_reference,density"]
     for name, build in hpc_exec_workloads():
         traced = build()
         designed = traced.codesign()
@@ -89,7 +89,8 @@ def run(backend: Optional[str] = None,
                 f"{designed.speedup():.3f},{len(kinds)},"
                 f"{sum(k != 'jnp' for k in kinds)},"
                 f"{sum(k == 'jnp' for k in kinds)},"
-                f"{units},{rolled},{err:.2e}")
+                f"{units},{rolled},{err:.2e},"
+                f"{workload_density(traced.program):.6f}")
     return rows
 
 

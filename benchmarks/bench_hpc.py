@@ -10,7 +10,10 @@ exactly the cross-iteration reuse a pure schedule cannot capture.
 the search space, so CELLO vs it is ~1.0 by construction.)  ``pinned``
 lists the winning schedule's explicit-region pins ('+'-joined to stay
 CSV-safe) — for the solvers this is the operator ``A`` plus
-residual/direction vectors.
+residual/direction vectors.  ``density`` records the sparse operand's
+stored-entry fraction (1.0 for dense rows); for the ``*_sparse`` rows the
+pinned set is the operand's CSR triple — pinned by *nnz footprint*, the
+density-aware decision the dense rows can't make.
 
 ``--backend NAME`` (via ``benchmarks.run``) appends measured execution
 columns: the plan is lowered for that backend and run at the paper shapes
@@ -26,7 +29,7 @@ from typing import List, Optional
 
 from repro.core.search import SearchContext, evaluate_point
 
-from .workloads import hpc_workloads
+from .workloads import hpc_workloads, workload_density
 
 
 def run(backend: Optional[str] = None,
@@ -34,7 +37,7 @@ def run(backend: Optional[str] = None,
     reps = int(repeats) if repeats else 1
     rows = ["workload,us_per_call,cached,best_split,speedup_vs_implicit,"
             "speedup_vs_explicit,speedup_vs_fused_nopin,hbm_reduction,"
-            "pinned" + (",backend,run_us" if backend else "")]
+            "density,pinned" + (",backend,run_us" if backend else "")]
     for name, build in hpc_workloads():
         traced = build()
         t0 = time.perf_counter()
@@ -53,9 +56,11 @@ def run(backend: Optional[str] = None,
                / max(1, m.hbm_bytes))
         pins = res.best.schedule.pins
         pinned = "+".join(sorted(pins)) if pins else "(none)"
+        density = workload_density(traced.program)
         row = (f"{name},{us:.0f},{int(res.from_cache)},"
                f"{res.best.schedule.config.explicit_frac},"
-               f"{si:.3f},{se:.3f},{sf:.3f},{hbm:.2f},{pinned}")
+               f"{si:.3f},{se:.3f},{sf:.3f},{hbm:.2f},"
+               f"{density:.6f},{pinned}")
         if backend:
             import jax
 

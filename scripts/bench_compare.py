@@ -1,17 +1,26 @@
 #!/usr/bin/env python
 """Diff a fresh benchmark JSON dump against a committed baseline.
 
-The ``backend-parity`` CI job runs TABLE 8 with ``--repeats 5 --json
-BENCH_exec.json`` and then gates on this script: any pallas row whose
-measured ``us_per_call`` regresses more than ``--max-regress`` (default
-25%) over the committed baseline fails the job.
+Two CI gates run on this script:
+
+* ``backend-parity`` / ``bench-trajectory`` run TABLE 8 with ``--repeats 5
+  --json BENCH_exec.json`` and gate the pallas rows' measured
+  ``us_per_call`` (normalized to the same run's ``reference`` rows so
+  runner speed drops out) against ``benchmarks/baselines/BENCH_exec.json``.
+* ``bench-smoke`` / ``bench-trajectory`` run TABLE 7 with ``--json
+  BENCH_hpc.json`` and gate the *model* trajectory — ``--metric
+  speedup_vs_implicit --higher-is-better`` against
+  ``benchmarks/baselines/BENCH_hpc.json``; the model numbers are
+  deterministic, so any drift is a real co-design change.
 
 Rows are matched by (table title, row name).  Rows present on only one
-side are reported but never fail the gate (new workloads appear, old ones
-retire).  Only rows whose recorded ``backend`` matches ``--backend``
-(default ``pallas``) gate; pass ``--backend ''`` to gate every measured
-row.  Speedups are reported alongside regressions so improvements are
-visible in the CI log.
+side are reported but never fail the gate: a **new row** (a workload
+added since the baseline was committed — sparse rows did this) prints a
+clear "run --update" hint instead of failing opaquely; a row only in the
+baseline is reported as retired.  Only rows whose recorded ``backend``
+matches ``--backend`` (default ``pallas``) gate; pass ``--backend ''`` to
+gate every measured row.  Speedups are reported alongside regressions so
+improvements are visible in the CI log.
 
 Wall-clock baselines are machine-specific: refresh the committed one from
 the same class of machine that gates on it (CI refreshes from CI):
@@ -19,12 +28,15 @@ the same class of machine that gates on it (CI refreshes from CI):
     python -m benchmarks.run --tables exec --repeats 5 --json BENCH_exec.json
     python scripts/bench_compare.py BENCH_exec.json --update
 
+``--update`` creates the baseline's parent directories if needed.
+
 Exit status: 0 clean / regressions within bound, 1 gate failure, 2 usage.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import pathlib
 import shutil
 import sys
 from typing import Dict, Tuple
@@ -41,47 +53,71 @@ def _rows(dump: dict) -> Dict[Tuple[str, str], dict]:
 
 
 def _metric(rows: Dict[Tuple[str, str], dict], key: Tuple[str, str],
-            normalize: str):
-    """A row's gating metric: raw ``us_per_call``, or — with
-    ``normalize`` — its ratio to the same workload's ``normalize``-backend
-    row in the same dump (machine-speed independent: TABLE 8 names rows
+            normalize: str, metric: str):
+    """A row's gating metric: ``metric`` read from the record (top level
+    first, then the ``derived`` columns), or — with ``normalize`` — its
+    ratio to the same workload's ``normalize``-backend row in the same
+    dump (machine-speed independent: TABLE 8 names rows
     ``<workload>[<backend>]``)."""
     rec = rows.get(key)
-    if rec is None or not rec.get("us_per_call"):
+    if rec is None:
         return None
-    us = rec["us_per_call"]
+    val = rec.get(metric, rec.get("derived", {}).get(metric))
+    # only a genuinely absent/non-numeric value is "missing": a metric of
+    # exactly 0.0 (e.g. a collapsed speedup) must still gate, not slip
+    # through the cracks
+    if not isinstance(val, (int, float)) or isinstance(val, bool):
+        return None
     if not normalize:
-        return us
+        return val
     table, name = key
     base_name = name.split("[", 1)[0]
     ref = rows.get((table, f"{base_name}[{normalize}]"))
-    if ref is None or not ref.get("us_per_call"):
+    if ref is None:
         return None
-    return us / ref["us_per_call"]
+    ref_val = ref.get(metric, ref.get("derived", {}).get(metric))
+    if (not isinstance(ref_val, (int, float)) or isinstance(ref_val, bool)
+            or ref_val == 0):
+        return None
+    return val / ref_val
 
 
 def compare(new: dict, base: dict, *, backend: str, max_regress: float,
-            normalize: str = "") -> Tuple[list, list, int]:
+            normalize: str = "", metric: str = "us_per_call",
+            higher_is_better: bool = False,
+            baseline_path: str = DEFAULT_BASELINE
+            ) -> Tuple[list, list, int]:
     """Return (report lines, failing lines, number of rows gated)."""
     new_rows, base_rows = _rows(new), _rows(base)
-    unit = "x" if normalize else "us"
+    unit = "x" if normalize else ""
     lines, failures, gated_rows = [], [], 0
     for key in sorted(set(new_rows) | set(base_rows)):
         table, name = key
-        if key not in new_rows or key not in base_rows:
-            missing = "only-baseline" if key not in new_rows else "only-new"
-            lines.append(f"  {missing:>14s}  {name}")
+        if key not in base_rows:
+            # new workloads appear between baseline refreshes (sparse rows
+            # did); report them clearly, never fail the gate on them
+            lines.append(f"  new-row       {name} — not in the baseline; "
+                         "run `scripts/bench_compare.py NEW.json "
+                         f"--baseline {baseline_path} --update` to adopt "
+                         "it")
             continue
-        nus = _metric(new_rows, key, normalize)
-        bus = _metric(base_rows, key, normalize)
+        if key not in new_rows:
+            lines.append(f"  retired       {name} — baseline only")
+            continue
+        nus = _metric(new_rows, key, normalize, metric)
+        bus = _metric(base_rows, key, normalize, metric)
         if nus is None or bus is None:
             continue
-        ratio = nus / bus
+        # a zero baseline can't ratio: infinitely worse unless the new
+        # value is zero too (then nothing changed)
+        ratio = nus / bus if bus else (1.0 if nus == 0 else float("inf"))
         gated = (not backend) or (new_rows[key].get("backend") == backend)
         gated_rows += gated
-        tag = f"{name:40s} {bus:10.2f}{unit} -> {nus:10.2f}{unit}  " \
+        tag = f"{name:40s} {bus:10.3f}{unit} -> {nus:10.3f}{unit}  " \
               f"({ratio:5.2f}x)"
-        if gated and ratio > 1.0 + max_regress:
+        regressed = (ratio < 1.0 - max_regress if higher_is_better
+                     else ratio > 1.0 + max_regress)
+        if gated and regressed:
             failures.append(tag)
             lines.append("  REGRESSION  " + tag)
         else:
@@ -100,21 +136,30 @@ def main(argv=None) -> int:
     ap.add_argument("--backend", default="pallas",
                     help="gate only rows recorded for this backend "
                          "(default pallas; '' gates every measured row)")
+    ap.add_argument("--metric", default="us_per_call",
+                    help="which recorded value gates: us_per_call "
+                         "(default) or any derived column, e.g. "
+                         "speedup_vs_implicit for the TABLE 7 model gate")
+    ap.add_argument("--higher-is-better", action="store_true",
+                    help="the metric improves upward (speedups): fail "
+                         "when it *drops* past --max-regress instead")
     ap.add_argument("--max-regress", type=float, default=0.25,
-                    help="max tolerated fractional us_per_call growth "
-                         "(default 0.25 = +25%%)")
+                    help="max tolerated fractional metric regression "
+                         "(default 0.25 = 25%%)")
     ap.add_argument("--normalize", default="", metavar="BACKEND",
-                    help="gate each row's us_per_call RATIO to the same "
+                    help="gate each row's metric RATIO to the same "
                          "workload's BACKEND row in the same dump (e.g. "
                          "'reference') — machine-speed independent, so a "
                          "baseline committed from one machine gates runs "
-                         "on another; default: raw us_per_call")
+                         "on another; default: the raw metric")
     ap.add_argument("--update", action="store_true",
                     help="copy NEW.json over the baseline instead of "
-                         "comparing")
+                         "comparing (creates parent dirs)")
     args = ap.parse_args(argv)
 
     if args.update:
+        pathlib.Path(args.baseline).parent.mkdir(parents=True,
+                                                 exist_ok=True)
         shutil.copyfile(args.new, args.baseline)
         print(f"baseline {args.baseline} <- {args.new}")
         return 0
@@ -127,12 +172,15 @@ def main(argv=None) -> int:
         print(f"bench_compare: {e}", file=sys.stderr)
         return 2
 
-    lines, failures, gated = compare(new, base, backend=args.backend,
-                                     max_regress=args.max_regress,
-                                     normalize=args.normalize)
+    lines, failures, gated = compare(
+        new, base, backend=args.backend, max_regress=args.max_regress,
+        normalize=args.normalize, metric=args.metric,
+        higher_is_better=args.higher_is_better,
+        baseline_path=args.baseline)
+    direction = "-" if args.higher_is_better else "+"
     print(f"bench_compare: {args.new} vs {args.baseline} "
-          f"(gate: backend={args.backend or '*'}, "
-          f"max +{args.max_regress:.0%}"
+          f"(gate: backend={args.backend or '*'}, metric={args.metric}, "
+          f"max {direction}{args.max_regress:.0%}"
           + (f", normalized to {args.normalize}" if args.normalize else "")
           + ")")
     print("\n".join(lines) or "  (no comparable rows)")
@@ -145,8 +193,8 @@ def main(argv=None) -> int:
         # fail CLOSED: a gate that matched nothing (renamed rows, schema
         # drift, missing normalize rows) must not pass silently
         print("\nno row matched the gate — refusing to pass an empty gate "
-              "(check row names / --backend / --normalize, or --update "
-              "the baseline)", file=sys.stderr)
+              "(check row names / --backend / --metric / --normalize, or "
+              "--update the baseline)", file=sys.stderr)
         return 1
     print(f"\n{gated} gated row(s) within bound")
     return 0

@@ -34,6 +34,7 @@ from ..core.policy import CelloPlan
 from ..core.policy import default_plan as _default_plan
 from ..core.policy import lower_codesign
 from ..core.reuse import analyze as _analyze
+from ..core.schedule import sparse_operand_groups
 from ..core.search import DEFAULT_SPLITS, get_strategy, run_codesign
 from .artifacts import AnalyzedGraph, CoDesigned, CompiledPlan, TracedGraph
 from .cache import (CodesignCache, algo_fingerprint, cache_disabled_by_env,
@@ -305,6 +306,15 @@ class Session:
         sched = designed.result.best.schedule
         kernels = select_group_kernels(traced.graph, sched.groups,
                                        sched.config.explicit_bytes)
+        # density-aware pin outcome: a CSR operand pins as one unit when
+        # its nnz footprint fits — surface the decision in explain()
+        sparse_note = ""
+        sparse_grps = sparse_operand_groups(traced.graph)
+        if sparse_grps:
+            pinned = sum(all(m in sched.pins for m in g)
+                         for g in sparse_grps)
+            sparse_note = (f" sparse-operands={len(sparse_grps)} "
+                           f"pinned-by-nnz-footprint={pinned}")
         # execution-level plan: residency-fused dispatch units + the rolled
         # iteration segment (when the frontend recorded bodies and the
         # scheduled units repeat them) — surfaced by explain()/report() and
@@ -320,7 +330,8 @@ class Session:
             explicit_frac=sched.config.explicit_frac,
             notes=(f"frontend graph: groups={len(sched.groups)} "
                    f"pins={len(sched.pins)} "
-                   f"speedup={designed.result.speedup():.2f}x"))
+                   f"speedup={designed.result.speedup():.2f}x"
+                   + sparse_note))
         return CompiledPlan(cfg=None, plan=plan, trace=traced,
                             codesigned=designed, backend=backend,
                             group_kernels=kernels, exec_plan=exec_plan)

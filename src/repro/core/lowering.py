@@ -277,6 +277,12 @@ def decode_graph(cfg: ArchConfig, batch: int, kv_len: int) -> OpGraph:
 #                sequential passes exactly where a contraction reads a
 #                vector produced earlier in the same group (the value must
 #                fully materialize before it can be a resident operand).
+#   ``spmv-stream`` — a stream group whose passes include CSR SpMV ops:
+#                the same 1-D row-tile grid, but the sparse operand's
+#                indptr/indices/data triple AND the gathered x stay fully
+#                resident in VMEM across every tile (rows are ragged and
+#                column access is data-dependent, so nothing of the
+#                operand can stream); the output vector streams row tiles.
 #   ``block``  — one `pl.pallas_call` with whole arrays as single blocks:
 #                stencil sweeps need halo rows, so they cannot row-stream
 #                without overlap; the explicit region holds the full grid.
@@ -312,7 +318,7 @@ class GroupKernel:
     reason: str = ""                # why a jnp fallback was selected
 
     def describe(self) -> str:
-        if self.kind == "stream":
+        if self.kind in ("stream", "spmv-stream"):
             bits = []
             for p in self.passes:
                 res = f" res={'+'.join(p.resident)}" if p.resident else ""
@@ -321,8 +327,10 @@ class GroupKernel:
                 bits.append(f"{p.rows}r/{p.tile_rows}t{res}{red}")
             tag = " | ".join(bits)
             n = len(self.passes)
-            return (f"pallas-stream[{tag}]" if n == 1
-                    else f"pallas-stream[{n} passes: {tag}]")
+            label = ("pallas-spmv" if self.kind == "spmv-stream"
+                     else "pallas-stream")
+            return (f"{label}[{tag}]" if n == 1
+                    else f"{label}[{n} passes: {tag}]")
         if self.kind == "block":
             return "pallas-block[halo ops, full-array block]"
         return f"jnp-fallback({self.reason})"
@@ -390,6 +398,10 @@ def _segment_group(graph: OpGraph, group) -> list:
         needs_break = False
         if op.is_einsum and op.spec in STREAM_EINSUMS:
             needs_break = op.inputs[STREAM_EINSUMS[op.spec]] in produced
+        if op.spec == "spmv":
+            # every spmv operand (CSR triple + gathered x) sits resident,
+            # so any of them produced in-pass must materialize first
+            needs_break = any(t in produced for t in op.inputs)
         if not needs_break and graph.tensors[op.output].shape != ():
             needs_break = any(t in late for t in op.inputs)
         if needs_break and cur:
@@ -429,7 +441,9 @@ def _select_one(graph: OpGraph, group, explicit_bytes: int) -> GroupKernel:
         if isinstance(sp, str):                    # rejection reason
             return GroupKernel(gops, "jnp", reason=sp)
         passes.append(sp)
-    return GroupKernel(gops, "stream", passes=tuple(passes))
+    kind = ("spmv-stream" if any(op.spec == "spmv" for op in ops)
+            else "stream")
+    return GroupKernel(gops, kind, passes=tuple(passes))
 
 
 def _classify_pass(graph: OpGraph, seg, explicit_bytes: int):
@@ -472,6 +486,17 @@ def _classify_pass(graph: OpGraph, seg, explicit_bytes: int):
                 return f"{op.name}: mixed row counts"
             if op.inputs[rhs] not in resident:
                 resident.append(op.inputs[rhs])
+        elif op.spec == "spmv":
+            # CSR SpMV: the output vector streams row tiles; the operand
+            # triple and the gathered x are held whole (resident) — rows
+            # are ragged and column access is data-dependent
+            if any(t in produced for t in op.inputs):
+                return f"{op.name}: spmv operand produced in-pass"
+            if not _stream(op.output):
+                return f"{op.name}: mixed row counts"
+            for t in op.inputs:
+                if t not in resident:
+                    resident.append(t)
         elif op.spec == "reduce":
             if any(len(graph.tensors[t].shape) != 1 for t in op.inputs):
                 return f"{op.name}: non-vector reduction"
@@ -586,7 +611,10 @@ def flatten_units(kernels) -> Tuple[ExecUnit, ...]:
     contribute one unit per pass, in order)."""
     units: List[ExecUnit] = []
     for gi, gk in enumerate(kernels):
-        if gk.kind == "stream":
+        if gk.kind in ("stream", "spmv-stream"):
+            # spmv-stream passes dispatch exactly like plain stream passes
+            # (the pass's ops carry the spmv-ness); the distinct group
+            # kind only records which kernel family was selected
             for sp in gk.passes:
                 units.append(ExecUnit(sp.ops, "stream", sp, (gi,)))
         else:

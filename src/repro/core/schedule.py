@@ -77,17 +77,27 @@ def _group_tile_working_set(graph: OpGraph, group: Sequence[str]) -> Tuple[int, 
     produced = {graph.ops[o].output for o in group}
     weights = set()
     streamed = set()
+    full_resident = set()
     for oname in group:
         op = graph.ops[oname]
+        if op.spec == "spmv":
+            # the CSR kernel holds every operand whole across its row
+            # tiles: the indptr/indices/data triple (rows are ragged) and
+            # the gathered x (column access is data-dependent)
+            full_resident.update(op.inputs)
+            streamed.add(op.output)
+            continue
         for t in op.inputs:
             if graph.tensors[t].kind == TensorKind.WEIGHT:
                 weights.add(t)
             else:
                 streamed.add(t)
         streamed.add(op.output)
+    weights -= full_resident
+    streamed -= full_resident
     # Weights are double-buffered tiles streamed along their largest axis
     # (128 wide — one MXU tile column/row), not fully resident.
-    resident = 0
+    resident = sum(graph.tensors[t].bytes for t in full_resident)
     for t in weights:
         spec = graph.tensors[t]
         big = max(spec.shape) if spec.shape else 1
@@ -163,6 +173,26 @@ def _group_index(groups: Sequence[Sequence[str]]) -> Dict[str, int]:
     return gi
 
 
+def sparse_operand_groups(graph: OpGraph) -> List[Tuple[str, ...]]:
+    """CSR leaf triples read together by an spmv op.
+
+    Each triple (``A.indptr``, ``A.indices``, ``A.data``) is one *pin
+    unit*: the CSR kernel streams all three together, so a partial pin
+    saves nothing, and pin-or-not is exactly the density-aware question
+    "does the operand's nnz footprint fit the explicit region?".
+    """
+    groups: List[Tuple[str, ...]] = []
+    seen = set()
+    for op in graph.ops.values():
+        if op.spec != "spmv":
+            continue
+        members = tuple(op.inputs[:3])
+        if members not in seen:
+            seen.add(members)
+            groups.append(members)
+    return groups
+
+
 def choose_pins(graph: OpGraph, groups: Sequence[Sequence[str]],
                 analysis: ReuseAnalysis, explicit_bytes: int
                 ) -> Dict[str, Tuple[int, int]]:
@@ -174,8 +204,18 @@ def choose_pins(graph: OpGraph, groups: Sequence[Sequence[str]],
     operator dominates — an HPC solver's ``(n×n)`` matrix at near-capacity
     size is starved by density greedy, because any small vector committed
     first blocks the exact fit).  Ties keep the density set.
+
+    Sparse operands pin *density-aware*: the CSR sub-leaf triple of one
+    operand (:func:`sparse_operand_groups`) is an all-or-nothing unit
+    whose combined **nnz footprint** is what must fit — so a sparse ``A``
+    pins whenever its stored bytes fit capacity, even when its dense
+    ``n²`` silhouette never would, and never pins partially.
     """
     gi = _group_index(groups)
+    member_of: Dict[str, Tuple[str, ...]] = {}
+    for grp in sparse_operand_groups(graph):
+        for t in grp:
+            member_of[t] = grp
     internal = set()
     for g in groups:
         gset = set(g)
@@ -199,21 +239,48 @@ def choose_pins(graph: OpGraph, groups: Sequence[Sequence[str]],
                     return False
             return True
 
+        def span(cand) -> Tuple[int, int]:
+            first = (0 if cand.def_step is None
+                     else gi[analysis.order[cand.def_step]])
+            last = (gi[analysis.order[cand.uses[-1]]] if cand.uses
+                    else first)
+            return first, last
+
+        def commit(name: str, first: int, last: int, nbytes: int) -> None:
+            timeline[first] += nbytes
+            timeline[min(last, n - 1) + 1] -= nbytes
+            pins[name] = (first, last)
+
         pins: Dict[str, Tuple[int, int]] = {}
         saved = 0
+        decided: Dict[Tuple[str, ...], bool] = {}
         for cand in candidates:
             if cand.pin_value() <= 0 or cand.name in internal:
+                continue
+            grp = member_of.get(cand.name)
+            if grp is not None:
+                # density-aware, all-or-nothing: the operand's combined
+                # nnz footprint must fit over the union of member spans
+                if grp in decided:
+                    continue
+                members = [analysis.tensors[m] for m in grp]
+                total = sum(graph.tensors[m.name].bytes for m in members)
+                spans = [span(m) for m in members]
+                gf = min(a for a, _ in spans)
+                gl = max(b for _, b in spans)
+                ok = total <= explicit_bytes and fits(gf, gl, total)
+                decided[grp] = ok
+                if ok:
+                    for m, (a, b) in zip(members, spans):
+                        commit(m.name, a, b, graph.tensors[m.name].bytes)
+                        saved += m.traffic_if_missed()
                 continue
             spec = graph.tensors[cand.name]
             if spec.bytes > explicit_bytes:
                 continue
-            first = (0 if cand.def_step is None
-                     else gi[analysis.order[cand.def_step]])
-            last = gi[analysis.order[cand.uses[-1]]] if cand.uses else first
+            first, last = span(cand)
             if fits(first, last, spec.bytes):
-                timeline[first] += spec.bytes
-                timeline[min(last, n - 1) + 1] -= spec.bytes
-                pins[cand.name] = (first, last)
+                commit(cand.name, first, last, spec.bytes)
                 saved += cand.traffic_if_missed()
         return pins, saved
 

@@ -16,6 +16,11 @@ kernels, no per-call ``result_type``/``asarray`` conversion.  The pieces:
   e.g. ``nalpha = -alpha``) are recomputed per tile so tiled ops can read
   them without a pass break; reduction-derived scalar epilogues
   (``beta = rs'/rs``) run once on the final tile.
+* CSR SpMV ops (``spmv-stream`` group kernels) run inside stream units as
+  row-tiled passes whose *entire* operand — the indptr/indices/data triple
+  plus the gathered ``x`` — is VMEM-resident across every tile (constant
+  index maps): rows are ragged and column access is data-dependent, so
+  only the output vector streams.
 * ``block`` units hold whole arrays as single blocks (stencil halos).
 * ``jnp`` units — irregular gathers, >2-operand einsums — inline the
   reference rules straight into the trace.
@@ -58,7 +63,7 @@ from ..core.lowering import (STREAM_EINSUMS, ExecPlan, GroupKernel,
                              StreamPass, flatten_units, plan_execution,
                              select_group_kernels)
 from .base import Executor, plan_groups, plan_program
-from .reference import eval_node
+from .reference import csr_row_ids, eval_node
 
 _BACKEND_PROBE: Optional[str] = None
 
@@ -156,6 +161,12 @@ class _StreamCall:
         stream_in: List[str] = []
         scalar_in: List[str] = []
         res_in = list(sp.resident)
+        # derived resident inputs: per-entry CSR row ids, computed ONCE
+        # per dispatch from indptr (outside the kernel) instead of a
+        # searchsorted per grid step; keyed by indptr so spmv ops sharing
+        # an operand share one array
+        self.derived: Dict[str, Tuple[str, int]] = {}
+        self._spmv_rows: Dict[str, str] = {}
 
         def _want(name: str, bucket: List[str]):
             if name not in produced and name not in bucket:
@@ -163,7 +174,17 @@ class _StreamCall:
 
         for nd in self.nodes:
             cls = self.classes[nd.name]
-            if cls == "tiled" and nd.op in ("matmul", "einsum"):
+            if cls == "tiled" and nd.op == "spmv":
+                for t in nd.inputs:         # CSR triple + x: all resident
+                    _want(t, res_in)
+                indptr, indices = nd.inputs[0], nd.inputs[1]
+                rows_name = f"{indptr}@rows"
+                nnz = shapes[indices][0]
+                self.derived[rows_name] = (indptr, nnz)
+                self._spmv_rows[nd.name] = rows_name
+                shapes[rows_name] = (nnz,)
+                _want(rows_name, res_in)
+            elif cls == "tiled" and nd.op in ("matmul", "einsum"):
                 rhs = STREAM_EINSUMS[nd.param("spec")]
                 _want(nd.inputs[1 - rhs], stream_in)
             elif cls == "tiled":
@@ -193,7 +214,9 @@ class _StreamCall:
 
     @property
     def in_names(self) -> List[str]:
-        return self.stream_in + self.res_in + self.scalar_in
+        """External inputs only (derived row-id arrays are internal)."""
+        return [n for n in self.stream_in + self.res_in + self.scalar_in
+                if n not in self.derived]
 
     # -- pallas plumbing ------------------------------------------------
     def _specs(self, dtype):
@@ -228,6 +251,7 @@ class _StreamCall:
         from jax.experimental import pallas as pl
 
         n_tiles = self.sp.rows // self.sp.tile_rows
+        tile_rows = self.sp.tile_rows
         nodes, shapes, classes = self.nodes, self.shapes, self.classes
         n_stream, n_res = len(self.stream_in), len(self.res_in)
         n_scal = len(self.scalar_in)
@@ -269,7 +293,14 @@ class _StreamCall:
                     scal[nd.name] = eval_node(
                         nd, [scv(t) for t in nd.inputs])
                 elif cls == "tiled":
-                    if nd.op in ("matmul", "einsum"):
+                    if nd.op == "spmv":
+                        val = _spmv_row_tile(
+                            rref[self._spmv_rows[nd.name]][...],
+                            rref[nd.inputs[1]][...],
+                            rref[nd.inputs[2]][...],
+                            rref[nd.inputs[3]][...],
+                            i * tile_rows, tile_rows, dtype)
+                    elif nd.op in ("matmul", "einsum"):
                         rhs = STREAM_EINSUMS[nd.param("spec")]
                         val = jnp.dot(stv(nd.inputs[1 - rhs]),
                                       rref[nd.inputs[rhs]][...],
@@ -322,8 +353,19 @@ class _StreamCall:
         call = self._built.get(dtype)
         if call is None:
             call = self._built[dtype] = self._build(dtype)
-        args = ([jnp.asarray(env[n], dtype) for n in self.stream_in]
-                + [jnp.asarray(env[n], dtype) for n in self.res_in]
+
+        def arr(n):
+            d = self.derived.get(n)
+            if d is not None:       # per-entry CSR row ids, from indptr
+                indptr, nnz = d
+                return csr_row_ids(jnp.asarray(env[indptr]), nnz)
+            v = jnp.asarray(env[n])
+            if jnp.issubdtype(v.dtype, jnp.integer):
+                return v            # CSR indptr/indices stay integer
+            return jnp.asarray(v, dtype)
+
+        args = ([arr(n) for n in self.stream_in]
+                + [arr(n) for n in self.res_in]
                 + [jnp.reshape(jnp.asarray(env[n], dtype), (1,))
                    for n in self.scalar_in])
         outs = call(*args)
@@ -338,6 +380,27 @@ class _StreamCall:
         import jax.numpy as jnp
         dtype = jnp.result_type(*(env[n].dtype for n in self.in_names))
         return self.apply(env, dtype)
+
+
+def _spmv_row_tile(row_of, indices, data, x, row0, tile_rows, dtype):
+    """CSR SpMV for the output rows ``[row0, row0 + tile_rows)``.
+
+    The whole CSR operand and ``x`` are VMEM-resident (rows are ragged
+    and column access is data-dependent — nothing of the operand
+    streams); ``row_of`` is the per-entry row-id array, derived from
+    indptr once per dispatch (``csr_row_ids``) rather than per grid
+    step.  Each step keeps only its own rows' contributions via a mask
+    and a per-tile segment sum, so per-row summation order matches the
+    reference rule exactly.
+    """
+    import jax
+    import jax.numpy as jnp
+    contrib = (data * jnp.take(x, indices, axis=0)).astype(dtype)
+    local = row_of - row0
+    in_tile = (local >= 0) & (local < tile_rows)
+    return jax.ops.segment_sum(
+        jnp.where(in_tile, contrib, jnp.zeros((), dtype)),
+        jnp.clip(local, 0, tile_rows - 1), num_segments=tile_rows)
 
 
 def _accumulate(ref, part, i):

@@ -17,6 +17,15 @@ from typing import Any, Dict, List, Optional, Sequence
 from .base import Executor, plan_order, plan_program
 
 
+def csr_row_ids(indptr, nnz: int):
+    """Row id of every stored CSR entry, from ``indptr`` — the one rule
+    both the reference spmv and the pallas ``spmv-stream`` kernel use, so
+    their per-row summation order can never drift apart."""
+    import jax.numpy as jnp
+    return jnp.searchsorted(indptr, jnp.arange(nnz, dtype=indptr.dtype),
+                            side="right") - 1
+
+
 def eval_node(node, ins: List[Any]):
     """Reference rule for one expression op (``ins`` in operand order)."""
     import jax.numpy as jnp
@@ -50,6 +59,15 @@ def eval_node(node, ins: List[Any]):
         return out
     if op == "gather":
         return jnp.take(ins[0], ins[1], axis=0)
+    if op == "spmv":
+        # CSR SpMV via explicit gather + segment sum: one multiply-add per
+        # stored entry, rows resolved from indptr — the scipy-free rule
+        # every sparse backend is validated against
+        import jax
+        indptr, indices, data, x = ins
+        seg = csr_row_ids(indptr, data.shape[0])
+        return jax.ops.segment_sum(data * jnp.take(x, indices, axis=0),
+                                   seg, num_segments=node.shape[0])
     raise NotImplementedError(f"reference rule missing for op {op!r}")
 
 

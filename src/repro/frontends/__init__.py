@@ -11,7 +11,12 @@ skewed-shape operators and complex cross-iteration reuse:
                    reuse / buffer / cost-model layers work unchanged,
   ``hpc``        — a library of paper-style workloads built on it (CG,
                    BiCGStab, GMRES(m), Jacobi 2-D sweep, power iteration,
-                   MTTKRP), each parameterized by size / skew,
+                   MTTKRP — plus CSR-sparse variants ``cg_sparse`` /
+                   ``bicgstab_sparse`` / ``jacobi_sparse``), each
+                   parameterized by size / skew / sparsity pattern,
+  ``sparse``     — deterministic CSR pattern/value generators (5-point
+                   Laplacian, banded, random, skewed density) shared by
+                   the build-time nnz sizing and the feed-time values,
   ``reference``  — deterministic per-leaf feeds (``make_feeds``, with a
                    ``dtype`` knob for fp64 validation) plus re-exports of
                    the numerical oracle, which now lives with the other
@@ -22,14 +27,18 @@ Entry points: ``Session(...).trace(workload="cg", n=4096, iters=4)`` or
 ``analyze → codesign → lower`` stages and the codesign disk cache; the
 lowered plan executes via ``plan.run(backend="reference" | "pallas")``.
 """
-from .expr import Expr, ExprNode, Program
-from .hpc import (WORKLOADS, build_workload, cg, bicgstab, gmres, jacobi2d,
-                  list_workloads, mttkrp, power_iteration)
+from .expr import Expr, ExprNode, Program, SparseOperand
+from .hpc import (WORKLOADS, bicgstab, bicgstab_sparse, build_workload, cg,
+                  cg_sparse, gmres, jacobi2d, jacobi_sparse, list_workloads,
+                  mttkrp, power_iteration)
 from .reference import evaluate, execute_plan, make_feeds
+from .sparse import csr_to_dense, pattern_nnz
 
 __all__ = [
-    "Expr", "ExprNode", "Program",
+    "Expr", "ExprNode", "Program", "SparseOperand",
     "WORKLOADS", "build_workload", "list_workloads",
     "cg", "bicgstab", "gmres", "jacobi2d", "power_iteration", "mttkrp",
+    "cg_sparse", "bicgstab_sparse", "jacobi_sparse",
     "evaluate", "execute_plan", "make_feeds",
+    "csr_to_dense", "pattern_nnz",
 ]

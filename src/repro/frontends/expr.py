@@ -47,7 +47,7 @@ I32 = 4
 _SPEC = {
     "add": "ew", "sub": "ew", "mul": "ew", "div": "ew", "neg": "ew",
     "axpy": "ew", "dot": "reduce", "norm": "reduce",
-    "stencil2d": "stencil2d", "gather": "gather",
+    "stencil2d": "stencil2d", "gather": "gather", "spmv": "spmv",
 }
 
 #: FLOPs per output element for the simple elementwise ops
@@ -116,6 +116,60 @@ class Expr:
 
 def _as_params(params: Dict[str, Any]) -> Tuple[Tuple[str, Any], ...]:
     return tuple(sorted(params.items()))
+
+
+class SparseOperand:
+    """Handle to a CSR sparse operator: three typed sub-leaves.
+
+    ``Program.sparse_operator`` registers ``name.indptr`` (int32,
+    ``(n+1,)``), ``name.indices`` (int32, ``(nnz,)``) and ``name.data``
+    (float, ``(nnz,)``) as ordinary operator leaves — the analysis layers
+    see three tensors whose combined *nnz footprint* (not the dense ``n²``
+    silhouette) competes for buffer capacity.  Consume it with
+    ``Program.spmv`` (or ``A @ x``); :meth:`diag_inv` lazily registers a
+    fourth derived leaf holding ``1/diag(A)`` for Jacobi-style sweeps.
+    """
+    __slots__ = ("program", "name", "shape", "nnz", "pattern", "_meta",
+                 "indptr", "indices", "data")
+
+    def __init__(self, program: "Program", name: str, shape: Shape,
+                 nnz: int, pattern: str, meta: Dict[str, Any],
+                 indptr: "Expr", indices: "Expr", data: "Expr"):
+        self.program = program
+        self.name = name
+        self.shape = shape
+        self.nnz = nnz
+        self.pattern = pattern
+        self._meta = dict(meta)
+        self.indptr = indptr
+        self.indices = indices
+        self.data = data
+
+    @property
+    def density(self) -> float:
+        return self.nnz / (self.shape[0] * self.shape[1])
+
+    @property
+    def leaf_names(self) -> Tuple[str, str, str]:
+        return (self.indptr.name, self.indices.name, self.data.name)
+
+    def diag_inv(self) -> "Expr":
+        """The ``1/diag(A)`` vector as a derived leaf (``name.dinv``)."""
+        dname = f"{self.name}.dinv"
+        if dname not in self.program.nodes:
+            self.program._register(ExprNode(
+                dname, "operator", (), (self.shape[0],),
+                self.data.dtype_bytes,
+                params=_as_params({**self._meta, "role": "dinv"})))
+        return Expr(self.program, dname)
+
+    def __matmul__(self, x: "Expr") -> "Expr":
+        return self.program.spmv(self, x)
+
+    def __repr__(self) -> str:
+        return (f"SparseOperand({self.name!r}, {self.pattern}, "
+                f"shape={self.shape}, nnz={self.nnz}, "
+                f"density={self.density:.2e})")
 
 
 class Program:
@@ -203,6 +257,68 @@ class Program:
 
     # alias matching the LLM-side vocabulary
     weight = operator
+
+    def sparse_operator(self, name: str, shape: Sequence[int], *,
+                        pattern: str = "laplacian5",
+                        density: Optional[float] = None,
+                        bandwidth: Optional[int] = None,
+                        dtype_bytes: int = F64) -> SparseOperand:
+        """A resident CSR sparse operator: three typed sub-leaves.
+
+        ``pattern`` picks the deterministic generator
+        (``repro.frontends.sparse``): ``laplacian5`` (SPD 5-point grid
+        Laplacian; ``n`` must be a perfect square), ``banded`` (SPD, needs
+        ``bandwidth``), ``random`` / ``skewed`` (diagonally dominant,
+        need ``density``).  The exact ``nnz`` is computed here, at build
+        time, so the sub-leaf shapes — and with them every FLOP/byte
+        annotation downstream — are nnz-based, not ``n²``-based.
+        """
+        from .sparse import pattern_nnz       # numpy-only helper module
+        shape = tuple(int(s) for s in shape)
+        if len(shape) != 2 or shape[0] != shape[1]:
+            raise ValueError(f"sparse_operator needs a square (n, n) "
+                             f"shape, got {shape}")
+        n = shape[0]
+        nnz = pattern_nnz(pattern, n, density=density, bandwidth=bandwidth)
+        meta = {"init": "csr", "pattern": pattern, "rows": n, "cols": n,
+                "nnz": nnz, "density": density, "bandwidth": bandwidth}
+        ip = self._register(ExprNode(
+            f"{name}.indptr", "operator", (), (n + 1,), I32,
+            params=_as_params({**meta, "role": "indptr"})))
+        ix = self._register(ExprNode(
+            f"{name}.indices", "operator", (), (nnz,), I32,
+            params=_as_params({**meta, "role": "indices"})))
+        dv = self._register(ExprNode(
+            f"{name}.data", "operator", (), (nnz,), dtype_bytes,
+            params=_as_params({**meta, "role": "data"})))
+        return SparseOperand(self, name, shape, nnz, pattern, meta,
+                             ip, ix, dv)
+
+    def spmv(self, A: SparseOperand, x: "Expr",
+             name: Optional[str] = None) -> Expr:
+        """CSR sparse matrix–vector product ``A @ x`` → ``(rows,)``.
+
+        FLOPs are nnz-based (``2·nnz``: one multiply-add per stored
+        entry); the op reads the three CSR sub-leaves plus ``x``, so the
+        reuse analysis sees the operand's true byte footprint.
+        """
+        if not isinstance(A, SparseOperand):
+            raise TypeError(f"spmv needs a SparseOperand (from "
+                            f"Program.sparse_operator), got "
+                            f"{type(A).__name__}")
+        if A.program is not self:
+            raise ValueError("operands belong to different Programs")
+        x = self._expr(x)
+        if x.shape != (A.shape[1],):
+            raise ValueError(f"spmv: {A.name} is {A.shape}, x is "
+                             f"{x.shape}; need x of shape "
+                             f"({A.shape[1]},)")
+        return self._register(ExprNode(
+            name or self._autoname("spmv"), "spmv",
+            (*A.leaf_names, x.name), (A.shape[0],),
+            max(A.data.dtype_bytes, x.dtype_bytes), flops=2 * A.nnz,
+            params=_as_params({"nnz": A.nnz, "rows": A.shape[0],
+                               "cols": A.shape[1]})))
 
     # -- contractions -----------------------------------------------------
     def einsum(self, spec: str, *operands: "Expr",

@@ -3,8 +3,9 @@
 Leaf values come from :func:`make_feeds`: deterministic per (seed, leaf
 name), honoring each leaf's ``init`` hint (``spd`` builds a well-conditioned
 symmetric positive-definite operator so unrolled Krylov iterations stay
-finite; ``zeros`` / ``ones`` / ``const`` / ``indices`` / ``randn`` cover
-the rest).  ``dtype`` picks the float width of the generated leaves —
+finite; ``csr`` builds one component of a sparse operand's CSR triple via
+the pattern generators in ``repro.frontends.sparse``; ``zeros`` / ``ones``
+/ ``const`` / ``indices`` / ``randn`` cover the rest).  ``dtype`` picks the float width of the generated leaves —
 pass ``np.float64`` (with ``jax_enable_x64`` on) to validate the fp64-modeled
 Krylov workloads at their modeled precision instead of silently downcasting
 to float32.
@@ -46,6 +47,12 @@ def _init_leaf(node: ExprNode, seed: int,
     if init == "indices":
         high = int(node.param("high", max(1, shape[0] if shape else 1)))
         return rng.integers(0, high, size=shape).astype(np.int32)
+    if init == "csr":
+        # CSR sub-leaf of a sparse operator: the three (or four, with
+        # dinv) sub-leaves of one operand share a single generator stream
+        # keyed by the *operand* name, so they describe one matrix
+        from .sparse import csr_component
+        return csr_component(node, seed, dtype)
     if init == "spd":
         if len(shape) != 2 or shape[0] != shape[1]:
             raise ValueError(f"{node.name}: init='spd' needs a square "
@@ -63,7 +70,8 @@ def make_feeds(program: Program, seed: int = 0, *,
     """Deterministic values for every leaf (inputs and operators).
 
     ``dtype`` sets the float width of the generated leaves (integer
-    ``indices`` leaves stay int32).  Default float32 — JAX's default float
+    ``indices`` leaves — including CSR ``indptr``/``indices`` sub-leaves —
+    stay int32).  Default float32 — JAX's default float
     precision; pass ``np.float64`` under ``jax_enable_x64`` to validate
     fp64-modeled workloads at full width.  The random draws are identical
     across dtypes (same generator stream, cast at the end), so fp32 and

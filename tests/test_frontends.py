@@ -146,7 +146,8 @@ class TestWorkloadLibrary:
     def test_non_positive_params_rejected_up_front(self, name):
         params = ({"i": 8, "j": 8, "k": 0, "rank": 2}
                   if name == "mttkrp" else
-                  {"n": 16, {"gmres": "restart", "jacobi2d": "sweeps"}
+                  {"n": 16, {"gmres": "restart", "jacobi2d": "sweeps",
+                             "jacobi_sparse": "sweeps"}
                    .get(name, "iters"): 0})
         with pytest.raises(ValueError, match="positive int"):
             build_workload(name, **params)

@@ -1,0 +1,348 @@
+"""Sparse-operand tests: CSR frontend, density-aware co-design, kernels.
+
+Covers the contract end-to-end:
+
+* **CSR lowering goldens** — the sub-leaf triple's shapes/dtypes/bytes are
+  nnz-based, spmv carries ``2·nnz`` FLOPs, and kernel selection lowers
+  spmv groups to ``spmv-stream`` passes with the whole operand resident.
+* **Generators** — exact nnz counts, valid CSR structure, and the
+  promised numerics (laplacian5/banded SPD, random/skewed diagonally
+  dominant), all against the scipy-free :func:`csr_to_dense` densifier.
+* **Sparse CG** — the residual identity ``r_k = b − A x_k`` against the
+  dense reconstruction, plus SPD convergence on the Laplacian.
+* **Parity** — reference replays bitwise; pallas matches within the
+  documented tolerances, at fp64 under ``jax_enable_x64`` (the modeled
+  precision) as well as default fp32.
+* **Density-aware pins** — the CSR triple pins all-or-nothing exactly at
+  the nnz-footprint capacity boundary, and a paper-shaped sparse solve
+  shows the pin in ``plan.explain()``.
+"""
+import numpy as np
+import pytest
+
+from repro.api import Session
+from repro.core import select_group_kernels
+from repro.core.reuse import analyze
+from repro.core.schedule import choose_pins, sparse_operand_groups
+from repro.frontends import (Program, build_workload, csr_to_dense,
+                             evaluate, make_feeds, pattern_nnz)
+from repro.frontends.sparse import row_counts
+
+# float32 reduction-reassociation tolerances (documented policy)
+RTOL32, ATOL32 = 2e-4, 1e-5
+# fp64: same reassociation, ~2^-29 smaller ulps
+RTOL64, ATOL64 = 1e-9, 1e-12
+
+#: every sparse workload in the registry, one row per pattern family
+SPARSE_PARITY_SET = [
+    ("cg_sparse", dict(n=64, iters=3)),                       # laplacian5
+    ("cg_sparse", dict(n=50, iters=2, pattern="banded", bandwidth=3)),
+    ("bicgstab_sparse", dict(n=64, iters=2)),
+    ("bicgstab_sparse", dict(n=48, iters=2, pattern="random",
+                             density=0.1)),
+    ("jacobi_sparse", dict(n=64, sweeps=3)),
+    ("jacobi_sparse", dict(n=40, sweeps=2, pattern="skewed",
+                           density=0.15)),
+]
+_IDS = [f"{w}-{p.get('pattern', 'laplacian5')}"
+        for w, p in SPARSE_PARITY_SET]
+
+
+def _dense_A(feeds, n):
+    return csr_to_dense(feeds["A.indptr"], feeds["A.indices"],
+                        feeds["A.data"], (n, n))
+
+
+def _lowered(tmp_path, workload, **params):
+    traced = Session(cache_dir=tmp_path).trace(workload=workload, **params)
+    return traced, traced.analyze().codesign().lower()
+
+
+# ---------------------------------------------------------------------------
+# CSR lowering goldens
+# ---------------------------------------------------------------------------
+
+class TestCsrLowering:
+    def test_sub_leaf_shapes_and_nnz_annotations(self):
+        p = Program("lower")
+        A = p.sparse_operator("A", (16, 16))           # laplacian5, g=4
+        x = p.input("x", (16,))
+        y = p.spmv(A, x, name="y")
+        p.output(y)
+        nnz = 5 * 16 - 4 * 4
+        assert A.nnz == nnz == pattern_nnz("laplacian5", 16)
+        assert p.nodes["A.indptr"].shape == (17,)
+        assert p.nodes["A.indices"].shape == (nnz,)
+        assert p.nodes["A.data"].shape == (nnz,)
+        assert y.node.flops == 2 * nnz                 # nnz-based FLOPs
+        g = p.to_graph()
+        # byte annotations are nnz-based: int32 indices, fp64 data
+        assert g.tensors["A.indptr"].bytes == 17 * 4
+        assert g.tensors["A.indices"].bytes == nnz * 4
+        assert g.tensors["A.data"].bytes == nnz * 8
+        assert g.ops["y"].spec == "spmv" and not g.ops["y"].irregular
+
+    def test_spmv_group_selects_spmv_stream_kernel(self):
+        p = Program("sel")
+        A = p.sparse_operator("A", (64, 64))
+        x = p.input("x", (64,))
+        y = p.spmv(A, x, name="y")
+        p.output(p.dot(y, y, name="yy"))
+        g = p.to_graph()
+        (gk,) = select_group_kernels(g, [["y", "yy"]], 16 << 20)
+        assert gk.kind == "spmv-stream"
+        (sp,) = gk.passes
+        # the whole operand (CSR triple + gathered x) is resident
+        assert set(sp.resident) == {"A.indptr", "A.indices", "A.data", "x"}
+        assert sp.reductions == ("yy",)
+        assert "pallas-spmv" in gk.describe()
+
+    def test_spmv_reading_in_pass_vector_splits_passes(self):
+        p = Program("split")
+        A = p.sparse_operator("A", (16, 16))
+        x = p.input("x", (16,))
+        y1 = p.spmv(A, x, name="y1")
+        y2 = p.spmv(A, y1, name="y2")                  # y1 must materialize
+        p.output(y2)
+        (gk,) = select_group_kernels(p.to_graph(), [["y1", "y2"]], 16 << 20)
+        assert gk.kind == "spmv-stream" and len(gk.passes) == 2
+
+    def test_spmv_validation(self):
+        p = Program("bad")
+        A = p.sparse_operator("A", (16, 16))
+        with pytest.raises(ValueError, match="square"):
+            p.sparse_operator("B", (16, 8))
+        with pytest.raises(TypeError, match="SparseOperand"):
+            p.spmv(p.input("d", (16, 16)), p.input("x", (16,)))
+        with pytest.raises(ValueError, match="shape"):
+            p.spmv(A, p.input("x2", (8,)))
+        with pytest.raises(ValueError, match="perfect square"):
+            p.sparse_operator("C", (12, 12))           # laplacian5 needs g²
+        with pytest.raises(ValueError, match="density"):
+            p.sparse_operator("D", (16, 16), pattern="random")
+        with pytest.raises(ValueError, match="bandwidth"):
+            p.sparse_operator("E", (16, 16), pattern="banded")
+        with pytest.raises(ValueError, match="unknown sparse pattern"):
+            p.sparse_operator("F", (16, 16), pattern="hypercube")
+
+
+# ---------------------------------------------------------------------------
+# deterministic generators
+# ---------------------------------------------------------------------------
+
+class TestGenerators:
+    @pytest.mark.parametrize("pattern,kw,n", [
+        ("laplacian5", {}, 64),
+        ("banded", {"bandwidth": 3}, 50),
+        ("random", {"density": 0.1}, 48),
+        ("skewed", {"density": 0.1}, 48),
+    ])
+    def test_csr_structure_and_nnz(self, pattern, kw, n):
+        p = Program(f"gen_{pattern}")
+        A = p.sparse_operator("A", (n, n), pattern=pattern, **kw)
+        p.output(p.spmv(A, p.input("x", (n,))))
+        feeds = make_feeds(p, seed=4)
+        ip, ix, dv = (feeds["A.indptr"], feeds["A.indices"],
+                      feeds["A.data"])
+        nnz = pattern_nnz(pattern, n, **kw)
+        assert nnz == int(row_counts(pattern, n, **kw).sum())
+        assert ip.dtype == np.int32 and ix.dtype == np.int32
+        assert ip.shape == (n + 1,) and ip[0] == 0 and ip[-1] == nnz
+        assert np.all(np.diff(ip) >= 1)                # diagonal present
+        assert ix.shape == dv.shape == (nnz,)
+        assert ix.min() >= 0 and ix.max() < n
+        # columns sorted & unique within every row
+        for r in range(n):
+            cols = ix[ip[r]:ip[r + 1]]
+            assert np.all(np.diff(cols) > 0)
+            assert r in cols                           # diagonal entry
+
+    @pytest.mark.parametrize("pattern,kw", [
+        ("laplacian5", {}), ("banded", {"bandwidth": 4})])
+    def test_symmetric_patterns_are_spd(self, pattern, kw):
+        n = 49 if pattern == "laplacian5" else 40
+        p = Program(f"spd_{pattern}")
+        A = p.sparse_operator("A", (n, n), pattern=pattern, **kw)
+        p.output(p.spmv(A, p.input("x", (n,))))
+        feeds = make_feeds(p, seed=0, dtype=np.float64)
+        D = _dense_A(feeds, n)
+        np.testing.assert_allclose(D, D.T)
+        assert np.linalg.eigvalsh(D).min() > 0
+
+    @pytest.mark.parametrize("pattern", ["random", "skewed"])
+    def test_dominant_diagonal(self, pattern):
+        n = 32
+        p = Program(f"dom_{pattern}")
+        A = p.sparse_operator("A", (n, n), pattern=pattern, density=0.2)
+        p.output(p.spmv(A, p.input("x", (n,))))
+        D = _dense_A(make_feeds(p, seed=9, dtype=np.float64), n)
+        off = np.abs(D - np.diag(np.diag(D))).sum(axis=1)
+        assert np.all(np.diag(D) > off - 1e-9)
+
+    def test_dinv_matches_diagonal(self):
+        n = 36
+        prog = build_workload("jacobi_sparse", n=n, sweeps=1)
+        feeds = make_feeds(prog, seed=2, dtype=np.float64)
+        D = _dense_A(feeds, n)
+        np.testing.assert_allclose(feeds["A.dinv"], 1.0 / np.diag(D))
+
+    def test_deterministic_and_seed_sensitive(self):
+        prog = build_workload("cg_sparse", n=36, iters=1,
+                              pattern="random", density=0.2)
+        a = make_feeds(prog, seed=1)
+        b = make_feeds(prog, seed=1)
+        c = make_feeds(prog, seed=2)
+        np.testing.assert_array_equal(a["A.data"], b["A.data"])
+        assert not np.array_equal(a["A.data"], c["A.data"])
+        # same pattern+value stream across dtypes (cast at the end)
+        d = make_feeds(prog, seed=1, dtype=np.float64)
+        np.testing.assert_array_equal(a["A.indices"], d["A.indices"])
+        np.testing.assert_allclose(a["A.data"],
+                                   d["A.data"].astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# sparse CG numerics vs the scipy-free dense reference
+# ---------------------------------------------------------------------------
+
+class TestSparseCG:
+    def test_residual_identity_and_convergence(self):
+        import jax
+        prog = build_workload("cg_sparse", n=64, iters=4)
+        feeds = make_feeds(prog, seed=1, dtype=np.float64)
+        with jax.experimental.enable_x64():
+            vals = evaluate(prog, feeds, return_all=True)
+        D = _dense_A(feeds, 64)
+        x4, r4 = np.asarray(vals["x4"]), np.asarray(vals["r4"])
+        np.testing.assert_allclose(r4, feeds["b"] - D @ x4, atol=1e-8)
+        norms = [float(np.linalg.norm(np.asarray(vals[f"r{k}"])))
+                 for k in range(5)]
+        assert norms[-1] < 0.2 * norms[0]       # SPD Laplacian: converges
+
+    def test_spmv_matches_dense_matvec(self):
+        import jax
+        for pattern, kw in [("laplacian5", {}),
+                            ("banded", {"bandwidth": 5}),
+                            ("random", {"density": 0.15})]:
+            n = 49
+            p = Program(f"mv_{pattern}")
+            A = p.sparse_operator("A", (n, n), pattern=pattern, **kw)
+            x = p.input("x", (n,))
+            p.output(p.spmv(A, x, name="y"))
+            feeds = make_feeds(p, seed=5, dtype=np.float64)
+            with jax.experimental.enable_x64():
+                out = evaluate(p, feeds)
+            np.testing.assert_allclose(
+                np.asarray(out["y"]), _dense_A(feeds, n) @ feeds["x"],
+                rtol=1e-12, atol=1e-12, err_msg=pattern)
+
+
+# ---------------------------------------------------------------------------
+# reference <-> pallas parity for every sparse workload
+# ---------------------------------------------------------------------------
+
+class TestSparseParity:
+    @pytest.mark.parametrize("workload,params", SPARSE_PARITY_SET,
+                             ids=_IDS)
+    def test_parity_fp32(self, workload, params, tmp_path):
+        traced, plan = _lowered(tmp_path, workload, **params)
+        feeds = make_feeds(traced.program, seed=7)
+        want = evaluate(traced.program, feeds)
+        ref = plan.run(feeds, backend="reference")
+        for k in want:                    # same pure ops => bitwise
+            np.testing.assert_array_equal(np.asarray(ref[k]),
+                                          np.asarray(want[k]), err_msg=k)
+        pal = plan.run(feeds, backend="pallas")
+        for k in want:
+            np.testing.assert_allclose(np.asarray(pal[k]),
+                                       np.asarray(want[k]),
+                                       rtol=RTOL32, atol=ATOL32,
+                                       err_msg=k)
+
+    @pytest.mark.parametrize("workload,params", SPARSE_PARITY_SET,
+                             ids=_IDS)
+    def test_parity_fp64(self, workload, params, tmp_path):
+        """The modeled precision: fp64 feeds under jax_enable_x64."""
+        import jax
+        traced, plan = _lowered(tmp_path, workload, **params)
+        feeds = make_feeds(traced.program, seed=11, dtype=np.float64)
+        with jax.experimental.enable_x64():
+            want = evaluate(traced.program, feeds)
+            pal = plan.run(feeds, backend="pallas")
+        for k in want:
+            assert np.asarray(pal[k]).dtype == np.float64, k
+            np.testing.assert_allclose(np.asarray(pal[k]),
+                                       np.asarray(want[k]),
+                                       rtol=RTOL64, atol=ATOL64,
+                                       err_msg=k)
+
+    def test_sparse_cg_rolls_iterations(self, tmp_path):
+        traced, plan = _lowered(tmp_path, "cg_sparse", n=64, iters=4)
+        assert plan.exec_plan.roll is not None
+        assert plan.exec_plan.roll.n_iters >= 2
+
+
+# ---------------------------------------------------------------------------
+# density-aware pinning
+# ---------------------------------------------------------------------------
+
+def _two_spmv_graph(n=64, bandwidth=2):
+    """A is read twice (reuse!); the only pin candidates are its triple."""
+    p = Program("pin_boundary")
+    A = p.sparse_operator("A", (n, n), pattern="banded",
+                          bandwidth=bandwidth)
+    x = p.input("x", (n,))
+    y1 = p.spmv(A, x, name="y1")
+    p.output(p.spmv(A, y1, name="y2"))
+    g = p.to_graph()
+    csr_bytes = sum(g.tensors[t].bytes
+                    for t in ("A.indptr", "A.indices", "A.data"))
+    return g, csr_bytes
+
+
+class TestDensityAwarePins:
+    def test_nnz_footprint_boundary(self):
+        g, csr_bytes = _two_spmv_graph()
+        an = analyze(g)
+        groups = [[o] for o in g.topo_order()]
+        assert sparse_operand_groups(g) == [("A.indptr", "A.indices",
+                                             "A.data")]
+        # nnz footprint exactly fits -> the whole triple pins
+        pins = choose_pins(g, groups, an, csr_bytes)
+        assert {"A.indptr", "A.indices", "A.data"} <= set(pins)
+        # one byte short -> nothing of the operand pins (no partial pin)
+        pins = choose_pins(g, groups, an, csr_bytes - 1)
+        assert not ({"A.indptr", "A.indices", "A.data"} & set(pins))
+
+    def test_pin_is_all_or_nothing_even_when_members_fit(self):
+        g, csr_bytes = _two_spmv_graph()
+        # indptr+indices alone would fit this budget; the unit must not
+        ip_ix = (g.tensors["A.indptr"].bytes
+                 + g.tensors["A.indices"].bytes)
+        pins = choose_pins(g, [[o] for o in g.topo_order()], analyze(g),
+                           ip_ix)
+        assert not ({"A.indptr", "A.indices", "A.data"} & set(pins))
+
+    def test_session_plan_shows_density_aware_pin(self, tmp_path):
+        """Acceptance: a sparse A whose nnz footprint fits capacity is
+        pinned, visibly, where the dense A of the same n might not be."""
+        traced, plan = _lowered(tmp_path, "cg_sparse", n=64, iters=3)
+        pins = plan.codesigned.best.schedule.pins
+        assert {"A.indptr", "A.indices", "A.data"} <= set(pins)
+        text = plan.explain()
+        assert "A.data[g" in text and "A.indices[g" in text
+        assert "pinned-by-nnz-footprint=1" in text
+        assert "pallas-spmv" in text
+
+    def test_dense_vs_sparse_footprint_crossover(self, tmp_path):
+        """At a capacity far below the dense n² silhouette the sparse
+        operand still pins — the density-aware co-design's whole point."""
+        n = 256    # dense A = 512 KiB fp64; CSR footprint ~15.6 KiB
+        sess = Session(capacity_bytes=256 << 10, cache_dir=tmp_path)
+        dense = sess.trace(workload="cg", n=n, iters=2)
+        dplan = dense.analyze().codesign().lower()
+        assert "A" not in dplan.codesigned.best.schedule.pins
+        sparse = sess.trace(workload="cg_sparse", n=n, iters=2)
+        splan = sparse.analyze().codesign().lower()
+        spins = splan.codesigned.best.schedule.pins
+        assert {"A.indptr", "A.indices", "A.data"} <= set(spins)
