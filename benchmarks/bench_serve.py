@@ -1,0 +1,172 @@
+"""Table 9 — batched serving throughput/latency vs sequential solves.
+
+A deterministic load generator drives ``repro.serve.Server`` for one dense
+and one sparse workload and reports, per row:
+
+* ``seq32`` — the baseline the tentpole is measured against: 32 requests
+  answered one at a time through eager per-request ``plan.run()`` (one
+  compile-cache hit + one dispatch each, no batching).
+* ``batch16`` — the same 32 requests submitted as a burst to a paused
+  server, then served with ``max_batch_size=16``: the worker coalesces
+  them into exactly ``ceil(32/16)`` batches, one vmapped dispatch each.
+  ``speedup_vs_sequential`` is this row's ``requests_per_s`` over the
+  ``seq32`` row's — the acceptance number (≥ 3× at batch ≥ 16).
+* ``open@<rate>`` — open-loop arrival at a fixed rate (requests submitted
+  on a timer, never waiting for results): measures the latency a steady
+  client sees, p50/p99 end-to-end (queue wait + batch + dispatch).
+
+Every row reports ``us_per_call`` (mean per-request latency — the shared
+trajectory metric), ``requests_per_s``, ``p50_ms``/``p99_ms``, and the
+batch shape that served it.  Requests use fixed seeds and a fixed arrival
+schedule, and warmup passes (excluded) pre-pay tracing/compilation, so the
+recorded trajectory (``BENCH_serve.json``) tracks serving-layer changes,
+not compiler noise.  The bench-trajectory gate reads this table with the
+multi-metric direction spec:
+``requests_per_s:higher,p50_ms:lower,p99_ms:lower``.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+#: serving-scale shapes: small enough that CI serves hundreds of solves,
+#: large enough that a vmapped batch amortizes real per-request overhead
+SERVE_SET = [
+    ("cg", "cg", dict(n=256, iters=4)),
+    ("cg_sparse/lap5", "cg_sparse", dict(n=256, iters=4)),
+]
+
+N_REQUESTS = 32          # burst size for seq / batch rows
+MAX_BATCH = 16
+MAX_WAIT_US = 2000.0
+OPEN_RATES = (500, 2000)     # open-loop arrival rates, requests/sec
+N_OPEN = 48                  # requests per open-loop row
+
+
+def _percentiles(lat_s: List[float]) -> Tuple[float, float, float]:
+    """(mean_us, p50_ms, p99_ms) of a latency sample."""
+    arr = np.asarray(lat_s, dtype=np.float64)
+    return (float(arr.mean() * 1e6),
+            float(np.percentile(arr, 50) * 1e3),
+            float(np.percentile(arr, 99) * 1e3))
+
+
+def _row(name: str, backend: str, mean_us: float, rps: float, p50: float,
+         p99: float, batches="", mean_batch="", speedup="") -> str:
+    return (f"{name},{mean_us:.0f},{backend},{rps:.1f},{p50:.3f},"
+            f"{p99:.3f},{batches},{mean_batch},{speedup}")
+
+
+def _sequential(plan, program, backend: str) -> Tuple[float, List[float]]:
+    """(requests/sec, per-request latencies) for eager one-at-a-time
+    ``plan.run()`` — the unbatched serving baseline."""
+    import jax
+
+    from repro.frontends import make_feeds
+
+    feeds = [make_feeds(program, seed=s) for s in range(N_REQUESTS)]
+    jax.block_until_ready(plan.run(feeds[0], backend=backend))  # warmup
+    lat = []
+    t0 = time.perf_counter()
+    for f in feeds:
+        t1 = time.perf_counter()
+        jax.block_until_ready(plan.run(f, backend=backend))
+        lat.append(time.perf_counter() - t1)
+    return N_REQUESTS / (time.perf_counter() - t0), lat
+
+
+def _burst(router, reqs) -> Tuple[float, List[float], Dict]:
+    """Serve ``reqs`` as one paused-submit burst: every request is queued
+    before the worker starts, so coalescing is deterministic —
+    ``ceil(len(reqs)/MAX_BATCH)`` batches, one dispatch each."""
+    from repro.serve import Server
+
+    srv = Server(router, max_batch_size=MAX_BATCH,
+                 max_wait_us=MAX_WAIT_US, autostart=False)
+    futs = [srv.submit(r) for r in reqs]
+    t0 = time.perf_counter()
+    srv.start()
+    results = [f.result(timeout=600) for f in futs]
+    rps = len(reqs) / (time.perf_counter() - t0)
+    srv.close()
+    return rps, [r.latency_s for r in results], srv.stats()
+
+
+def _open_loop(router, reqs, rate: float) -> Tuple[float, List[float]]:
+    """Submit ``reqs`` on a fixed-interval clock (open loop: arrivals
+    never wait for completions) and measure end-to-end latency."""
+    from repro.serve import Server
+
+    interval = 1.0 / rate
+    srv = Server(router, max_batch_size=MAX_BATCH,
+                 max_wait_us=MAX_WAIT_US)
+    t0 = time.perf_counter()
+    futs = []
+    for i, r in enumerate(reqs):
+        target = t0 + i * interval
+        delay = target - time.perf_counter()
+        if delay > 0:
+            time.sleep(delay)
+        futs.append(srv.submit(r))
+    results = [f.result(timeout=600) for f in futs]
+    rps = len(reqs) / (time.perf_counter() - t0)
+    srv.close()
+    return rps, [r.latency_s for r in results]
+
+
+def run(backend: Optional[str] = None) -> List[str]:
+    from repro.serve import PlanRouter, request
+
+    be = backend or "reference"
+    router = PlanRouter()       # shared: plans compile once per bucket
+    rows = ["name,us_per_call,backend,requests_per_s,p50_ms,p99_ms,"
+            "batches,mean_batch,speedup_vs_sequential"]
+    for label, wl, params in SERVE_SET:
+        reqs = [request(wl, backend=be, seed=s, **params)
+                for s in range(N_REQUESTS)]
+        entry = router.plan_for(router.bucket(reqs[0]))
+        # warm every padded batch size the server can form (jit retraces
+        # per size; measurements track serving, not tracing)
+        one = router.request_feeds(entry, reqs[0])
+        b = 1
+        while b <= MAX_BATCH:
+            entry.bplan.run_many([one] * b, entry.shared_feeds)
+            b *= 2
+
+        seq_rps, seq_lat = _sequential(entry.bplan.plan, entry.program, be)
+        mean_us, p50, p99 = _percentiles(seq_lat)
+        rows.append(_row(f"hpc/{label}/seq{N_REQUESTS}", be, mean_us,
+                         seq_rps, p50, p99, batches=N_REQUESTS,
+                         mean_batch=1))
+
+        _burst(router, reqs)                 # warmup: pays the B=16 trace
+        d0 = entry.bplan.stats["dispatches"]
+        rps, lat, stats = _burst(router, reqs)
+        served = stats["buckets"][entry.key.label]
+        n_batches = entry.bplan.stats["dispatches"] - d0
+        mean_us, p50, p99 = _percentiles(lat)
+        rows.append(_row(
+            f"hpc/{label}/batch{MAX_BATCH}", be, mean_us, rps, p50, p99,
+            batches=n_batches,
+            mean_batch=f"{N_REQUESTS / max(n_batches, 1):.1f}",
+            speedup=f"{rps / seq_rps:.2f}"))
+        assert served["queued"] == 0
+
+        for rate in OPEN_RATES:
+            open_reqs = [request(wl, backend=be, seed=s, **params)
+                         for s in range(N_OPEN)]
+            d0 = entry.bplan.stats["dispatches"]
+            rps, lat = _open_loop(router, open_reqs, rate)
+            n_batches = entry.bplan.stats["dispatches"] - d0
+            mean_us, p50, p99 = _percentiles(lat)
+            rows.append(_row(
+                f"hpc/{label}/open@{rate}", be, mean_us, rps, p50, p99,
+                batches=n_batches,
+                mean_batch=f"{N_OPEN / max(n_batches, 1):.1f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

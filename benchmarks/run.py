@@ -29,7 +29,8 @@ from typing import Any, Dict, List
 
 def _tables():
     from . import (bench_speedup, bench_energy, bench_capacity, bench_split,
-                   bench_kernels, bench_roofline, bench_hpc, bench_exec)
+                   bench_kernels, bench_roofline, bench_hpc, bench_exec,
+                   bench_serve)
     return [
         ("TABLE 1 — CELLO speedup vs baselines", bench_speedup),
         ("TABLE 2 — energy vs baselines", bench_energy),
@@ -43,6 +44,8 @@ def _tables():
          bench_hpc),
         ("TABLE 8 — measured wall-clock per execution backend",
          bench_exec),
+        ("TABLE 9 — batched serving throughput vs sequential solves",
+         bench_serve),
     ]
 
 

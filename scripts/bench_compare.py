@@ -82,12 +82,43 @@ def _metric(rows: Dict[Tuple[str, str], dict], key: Tuple[str, str],
     return val / ref_val
 
 
+def parse_metrics(metric: str, higher_is_better: bool = False
+                  ) -> list:
+    """``--metric`` spec -> ``[(name, higher_is_better), ...]``.
+
+    Comma-separated, each entry optionally carrying its own direction as
+    ``name:higher`` / ``name:lower`` — so one invocation gates throughput
+    *and* latency (``requests_per_s:higher,p99_ms:lower``).  Entries
+    without a suffix inherit the ``--higher-is-better`` flag.
+    """
+    out = []
+    for part in metric.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        name, sep, direction = part.partition(":")
+        if not sep:
+            out.append((name, higher_is_better))
+        elif direction in ("higher", "lower"):
+            out.append((name, direction == "higher"))
+        else:
+            raise ValueError(f"bad metric direction {part!r}: use "
+                             "name, name:higher or name:lower")
+    if not out:
+        raise ValueError("empty --metric spec")
+    return out
+
+
 def compare(new: dict, base: dict, *, backend: str, max_regress: float,
             normalize: str = "", metric: str = "us_per_call",
             higher_is_better: bool = False,
             baseline_path: str = DEFAULT_BASELINE
             ) -> Tuple[list, list, int]:
-    """Return (report lines, failing lines, number of rows gated)."""
+    """Return (report lines, failing lines, number of (row, metric) cells
+    gated).  ``metric`` takes the :func:`parse_metrics` spec — several
+    comma-separated metrics, each with its own direction, gate in one
+    pass."""
+    metrics = parse_metrics(metric, higher_is_better)
     new_rows, base_rows = _rows(new), _rows(base)
     unit = "x" if normalize else ""
     lines, failures, gated_rows = [], [], 0
@@ -104,24 +135,28 @@ def compare(new: dict, base: dict, *, backend: str, max_regress: float,
         if key not in new_rows:
             lines.append(f"  retired       {name} — baseline only")
             continue
-        nus = _metric(new_rows, key, normalize, metric)
-        bus = _metric(base_rows, key, normalize, metric)
-        if nus is None or bus is None:
-            continue
-        # a zero baseline can't ratio: infinitely worse unless the new
-        # value is zero too (then nothing changed)
-        ratio = nus / bus if bus else (1.0 if nus == 0 else float("inf"))
-        gated = (not backend) or (new_rows[key].get("backend") == backend)
-        gated_rows += gated
-        tag = f"{name:40s} {bus:10.3f}{unit} -> {nus:10.3f}{unit}  " \
-              f"({ratio:5.2f}x)"
-        regressed = (ratio < 1.0 - max_regress if higher_is_better
-                     else ratio > 1.0 + max_regress)
-        if gated and regressed:
-            failures.append(tag)
-            lines.append("  REGRESSION  " + tag)
-        else:
-            lines.append("  " + ("ok    " if gated else "info  ") + tag)
+        for mname, higher in metrics:
+            nus = _metric(new_rows, key, normalize, mname)
+            bus = _metric(base_rows, key, normalize, mname)
+            if nus is None or bus is None:
+                continue
+            # a zero baseline can't ratio: infinitely worse unless the new
+            # value is zero too (then nothing changed)
+            ratio = (nus / bus if bus
+                     else (1.0 if nus == 0 else float("inf")))
+            gated = (not backend) or \
+                (new_rows[key].get("backend") == backend)
+            gated_rows += gated
+            label = name if len(metrics) == 1 else f"{name} [{mname}]"
+            tag = f"{label:40s} {bus:10.3f}{unit} -> {nus:10.3f}{unit}  " \
+                  f"({ratio:5.2f}x)"
+            regressed = (ratio < 1.0 - max_regress if higher
+                         else ratio > 1.0 + max_regress)
+            if gated and regressed:
+                failures.append(tag)
+                lines.append("  REGRESSION  " + tag)
+            else:
+                lines.append("  " + ("ok    " if gated else "info  ") + tag)
     return lines, failures, gated_rows
 
 
@@ -137,12 +172,16 @@ def main(argv=None) -> int:
                     help="gate only rows recorded for this backend "
                          "(default pallas; '' gates every measured row)")
     ap.add_argument("--metric", default="us_per_call",
-                    help="which recorded value gates: us_per_call "
-                         "(default) or any derived column, e.g. "
-                         "speedup_vs_implicit for the TABLE 7 model gate")
+                    help="which recorded value(s) gate: us_per_call "
+                         "(default) or any derived column; comma-separate "
+                         "several, each optionally with its own direction "
+                         "(e.g. 'requests_per_s:higher,p99_ms:lower' for "
+                         "the TABLE 9 serving gate)")
     ap.add_argument("--higher-is-better", action="store_true",
-                    help="the metric improves upward (speedups): fail "
-                         "when it *drops* past --max-regress instead")
+                    help="default direction for metrics without a "
+                         ":higher/:lower suffix — the metric improves "
+                         "upward (speedups): fail when it *drops* past "
+                         "--max-regress instead")
     ap.add_argument("--max-regress", type=float, default=0.25,
                     help="max tolerated fractional metric regression "
                          "(default 0.25 = 25%%)")
@@ -172,15 +211,20 @@ def main(argv=None) -> int:
         print(f"bench_compare: {e}", file=sys.stderr)
         return 2
 
-    lines, failures, gated = compare(
-        new, base, backend=args.backend, max_regress=args.max_regress,
-        normalize=args.normalize, metric=args.metric,
-        higher_is_better=args.higher_is_better,
-        baseline_path=args.baseline)
-    direction = "-" if args.higher_is_better else "+"
+    try:
+        metrics = parse_metrics(args.metric, args.higher_is_better)
+        lines, failures, gated = compare(
+            new, base, backend=args.backend, max_regress=args.max_regress,
+            normalize=args.normalize, metric=args.metric,
+            higher_is_better=args.higher_is_better,
+            baseline_path=args.baseline)
+    except ValueError as e:
+        print(f"bench_compare: {e}", file=sys.stderr)
+        return 2
+    gate = ", ".join(f"{m} max {'-' if hi else '+'}"
+                     f"{args.max_regress:.0%}" for m, hi in metrics)
     print(f"bench_compare: {args.new} vs {args.baseline} "
-          f"(gate: backend={args.backend or '*'}, metric={args.metric}, "
-          f"max {direction}{args.max_regress:.0%}"
+          f"(gate: backend={args.backend or '*'}, {gate}"
           + (f", normalized to {args.normalize}" if args.normalize else "")
           + ")")
     print("\n".join(lines) or "  (no comparable rows)")

@@ -227,6 +227,19 @@ class CompiledPlan:
         return get_backend(backend or self.backend).run(
             self, feeds=feeds, seed=seed)
 
+    def batched(self, *, backend: Optional[str] = None,
+                donate: Optional[bool] = None):
+        """Wrap this frontend plan for batched serving: one vmapped
+        dispatch answers a whole batch of requests (operator leaves
+        shared, input leaves batched) — see ``repro.serve.BatchedPlan``.
+        """
+        if self.trace is None or self.trace.program is None:
+            raise ValueError("batched() needs a frontend-traced plan "
+                             "(Session.trace(workload=...) or "
+                             "Session.from_graph(program))")
+        from ..serve import BatchedPlan                  # lazy: pulls in jax
+        return BatchedPlan(self, backend=backend, donate=donate)
+
     # -- introspection --------------------------------------------------
     def report(self) -> Dict[str, Any]:
         """Headline co-design metrics (empty-ish for default plans)."""

@@ -191,7 +191,20 @@ def result_from_dict(d: Dict[str, Any]) -> CoDesignResult:
 # --------------------------------------------------------------------------
 
 class CodesignCache:
-    """One JSON file per key under ``root`` (atomic, best-effort writes)."""
+    """One JSON file per key under ``root`` (atomic, best-effort writes).
+
+    **Concurrency contract** (a serving process hits this from several
+    threads/processes at once): every writer serializes into its *own*
+    ``mkstemp`` temp file — unique per writer, no shared partial file —
+    and publishes it with a single atomic ``os.replace`` onto the final
+    path.  Readers only ever open the final path, so they see either a
+    previous complete entry or the new complete entry, never a torn
+    write.  Racing writers of the same key are last-writer-wins, which is
+    safe because the search is deterministic: both writers hold the same
+    bytes.  No file locks are needed; failures (read-only cache dir, disk
+    full, Windows replace-over-open) degrade to a miss/no-op — caching is
+    best-effort and the computed result always stands.
+    """
 
     def __init__(self, root: Optional[os.PathLike] = None):
         self.root = pathlib.Path(root) if root else default_cache_dir()

@@ -22,6 +22,7 @@ strategy, graph fingerprint): repeated benchmark runs skip the search.
 from __future__ import annotations
 
 import re
+import threading
 from typing import Optional, Sequence, Union
 
 from ..configs import get_config, list_archs
@@ -85,7 +86,13 @@ class Session:
         # env kill-switch is checked per codesign() call, not frozen here
         self.use_cache = use_cache
         self.cache = CodesignCache(cache_dir)
+        # trace memoization is thread-safe: the serving layer traces from
+        # worker threads while callers may trace concurrently.  The lock
+        # spans lookup+build+insert, so one (phase, shape) / (workload,
+        # params) cell is built exactly once and every thread sees the
+        # same TracedGraph (builds serialize; they are cheap vs codesign).
         self._trace_memo = {}
+        self._trace_lock = threading.Lock()
 
     # -- stage 1: trace -------------------------------------------------
     def trace(self, phase: Optional[str] = None, *,
@@ -141,35 +148,38 @@ class Session:
                 raise ValueError(f"{phase} traces take seq=, not kv_len=")
             seq = seq if seq is not None else defaults["seq"]
         memo_key = (phase, batch, seq, kv_len, layer_kind)
-        hit = self._trace_memo.get(memo_key)
-        if hit is not None:
-            return hit
-        if phase == "decode":
-            graph = decode_graph(self.cfg, batch, kv_len)
-        else:
-            graph = layer_graph(self.cfg, batch, seq,
-                                layer_kind=layer_kind)
-        traced = TracedGraph(arch=self.cfg.name, phase=phase, batch=batch,
-                             seq=seq, kv_len=kv_len, layer_kind=layer_kind,
-                             graph=graph, session=self)
-        self._trace_memo[memo_key] = traced
-        return traced
+        with self._trace_lock:
+            hit = self._trace_memo.get(memo_key)
+            if hit is not None:
+                return hit
+            if phase == "decode":
+                graph = decode_graph(self.cfg, batch, kv_len)
+            else:
+                graph = layer_graph(self.cfg, batch, seq,
+                                    layer_kind=layer_kind)
+            traced = TracedGraph(arch=self.cfg.name, phase=phase,
+                                 batch=batch, seq=seq, kv_len=kv_len,
+                                 layer_kind=layer_kind, graph=graph,
+                                 session=self)
+            self._trace_memo[memo_key] = traced
+            return traced
 
     def _trace_workload(self, workload: str, params: dict) -> TracedGraph:
         from ..frontends.hpc import build_workload    # lazy: optional path
         wl_params = tuple(sorted(params.items()))
         memo_key = ("hpc", workload, wl_params)
-        hit = self._trace_memo.get(memo_key)
-        if hit is not None:
-            return hit
-        program = build_workload(workload, **params)
-        traced = TracedGraph(arch=f"hpc:{workload}", phase="hpc", batch=1,
-                             seq=None, kv_len=None, layer_kind=None,
-                             graph=program.to_graph(), session=self,
-                             program=program, workload=workload,
-                             wl_params=wl_params)
-        self._trace_memo[memo_key] = traced
-        return traced
+        with self._trace_lock:
+            hit = self._trace_memo.get(memo_key)
+            if hit is not None:
+                return hit
+            program = build_workload(workload, **params)
+            traced = TracedGraph(arch=f"hpc:{workload}", phase="hpc",
+                                 batch=1, seq=None, kv_len=None,
+                                 layer_kind=None, graph=program.to_graph(),
+                                 session=self, program=program,
+                                 workload=workload, wl_params=wl_params)
+            self._trace_memo[memo_key] = traced
+            return traced
 
     @classmethod
     def from_graph(cls, obj, *, hw: HardwareModel = V5E,

@@ -20,6 +20,7 @@ entry, not a rewrite.  The contract every backend must meet:
 """
 from __future__ import annotations
 
+import threading
 import weakref
 from typing import Any, Callable, Dict, List, Optional, Sequence
 
@@ -35,30 +36,48 @@ class Executor:
     def __init__(self) -> None:
         # compiled-plan cache keyed by plan *identity* (plan equality
         # ignores the carried trace/program, so two distinct programs can
-        # compare equal); weakrefs keep dead plans from pinning entries
+        # compare equal); weakrefs keep dead plans from pinning entries.
+        # The lock serializes lookup+compile+insert, so two threads racing
+        # the same plan compile it once (a serving process hits this) —
+        # the weakref finalizer's dict.pop is atomic under the GIL and
+        # never takes the lock, so it cannot deadlock against a compile.
         self._compiled: Dict[int, tuple] = {}
+        self._compile_lock = threading.Lock()
 
     # -- backend contract ----------------------------------------------
     def compile(self, plan) -> CompiledFn:
         """Lower ``plan`` to a callable ``feeds -> {name: value}``."""
         raise NotImplementedError
 
+    def compile_pure(self, plan) -> CompiledFn:
+        """Like :meth:`compile`, but the returned callable must be **pure**
+        and jax-traceable (``feeds -> {name: tracer}`` with no Python side
+        effects per call), so it composes under ``jax.jit`` / ``jax.vmap``.
+        Backends whose compiled callable is already pure (reference) just
+        inherit this; backends with per-call driver state (dispatch
+        counters, donation) override it to expose the traced core
+        (``repro.serve.BatchedPlan`` batches through this hook)."""
+        return self.compile(plan)
+
     # -- shared driver --------------------------------------------------
     def run(self, plan, feeds: Optional[Feeds] = None, *,
             seed: int = 0) -> Dict[str, Any]:
-        """Compile (memoized) and execute ``plan`` on ``feeds``."""
+        """Compile (memoized, thread-safe) and execute ``plan``."""
         program = plan_program(plan)
-        entry = self._compiled.get(id(plan))
-        fn = entry[1] if entry is not None and entry[0]() is plan else None
-        if fn is None:
-            fn = self.compile(plan)
-            try:
-                ref = weakref.ref(
-                    plan, lambda _, k=id(plan): self._compiled.pop(k, None))
-            except TypeError:                    # not weakref-able
-                pass
-            else:
-                self._compiled[id(plan)] = (ref, fn)
+        with self._compile_lock:
+            entry = self._compiled.get(id(plan))
+            fn = (entry[1] if entry is not None and entry[0]() is plan
+                  else None)
+            if fn is None:
+                fn = self.compile(plan)
+                try:
+                    ref = weakref.ref(
+                        plan,
+                        lambda _, k=id(plan): self._compiled.pop(k, None))
+                except TypeError:                    # not weakref-able
+                    pass
+                else:
+                    self._compiled[id(plan)] = (ref, fn)
         if feeds is None:
             from ..frontends.reference import make_feeds
             feeds = make_feeds(program, seed)

@@ -678,6 +678,20 @@ class _SingleProgram:
         # liveness retires dead intermediates
         return tuple(env[o] for o in self.out_names)
 
+    # -- the pure core (serve.BatchedPlan batches through this) ---------
+    def pure(self, feeds: Dict[str, Any]) -> Dict[str, Any]:
+        """The traced program as a pure ``feeds -> {output: value}``
+        callable: no donation, no dispatch counting, no outer jit — safe
+        to compose under a caller's ``jax.jit`` / ``jax.vmap``
+        (:meth:`Executor.compile_pure`).  ``stats["traces"]`` still counts
+        Python body executions (a trace-time-only side effect), so batched
+        wrappers can assert they retrace only per (batch size, dtype)."""
+        for leaf in self.leaf_names:
+            if leaf not in feeds:
+                raise KeyError(f"feeds missing leaf {leaf!r}")
+        outs = self._traced(*[feeds[n] for n in self.leaf_names])
+        return dict(zip(self.out_names, outs))
+
     # -- the dispatch ---------------------------------------------------
     def __call__(self, feeds: Dict[str, Any]) -> Dict[str, Any]:
         args = []
@@ -708,6 +722,11 @@ class PallasExecutor(Executor):
 
     def compile(self, plan) -> _SingleProgram:
         return _SingleProgram(plan)
+
+    def compile_pure(self, plan):
+        # the single program's traced core, without the dispatch driver
+        # (donation, counters, its own jit): composable under vmap
+        return _SingleProgram(plan).pure
 
 
 class PerUnitPallasExecutor(Executor):

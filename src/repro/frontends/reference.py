@@ -18,7 +18,7 @@ lowered plan is validated against.
 from __future__ import annotations
 
 import hashlib
-from typing import Dict, Optional
+from typing import Dict, Iterable, Optional
 
 import numpy as np
 
@@ -66,7 +66,9 @@ def _init_leaf(node: ExprNode, seed: int,
 
 
 def make_feeds(program: Program, seed: int = 0, *,
-               dtype: Optional[np.dtype] = None) -> Dict[str, np.ndarray]:
+               dtype: Optional[np.dtype] = None,
+               only: Optional[Iterable[str]] = None
+               ) -> Dict[str, np.ndarray]:
     """Deterministic values for every leaf (inputs and operators).
 
     ``dtype`` sets the float width of the generated leaves (integer
@@ -76,9 +78,23 @@ def make_feeds(program: Program, seed: int = 0, *,
     fp64-modeled workloads at full width.  The random draws are identical
     across dtypes (same generator stream, cast at the end), so fp32 and
     fp64 feeds describe the same mathematical problem.
+
+    ``only`` restricts generation to a subset of leaf names — the serving
+    layer uses it to build a bucket's shared operator feeds once and then
+    only the cheap per-request input leaves per request.  Each leaf is
+    keyed by (seed, name), so a subset's values are identical to the same
+    leaves from a full ``make_feeds`` call.
     """
     dtype = np.dtype(dtype if dtype is not None else np.float32)
     if dtype.kind != "f":
         raise ValueError(f"make_feeds dtype must be a float dtype, "
                          f"got {dtype}")
-    return {nd.name: _init_leaf(nd, seed, dtype) for nd in program.leaves()}
+    leaves = program.leaves()
+    if only is not None:
+        want = set(only)
+        unknown = want - {nd.name for nd in leaves}
+        if unknown:
+            raise KeyError(f"make_feeds only= names are not leaves of "
+                           f"{program.name!r}: {sorted(unknown)}")
+        leaves = [nd for nd in leaves if nd.name in want]
+    return {nd.name: _init_leaf(nd, seed, dtype) for nd in leaves}

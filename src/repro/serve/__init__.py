@@ -1,0 +1,34 @@
+"""Solver-as-a-service: batched, cached, concurrent plan serving.
+
+The layers, bottom-up (``docs/serving.md`` for the full architecture):
+
+* :class:`BatchedPlan` — ``jax.vmap`` a plan's single-program executable
+  over a leading batch axis (operator leaves shared, input leaves
+  batched): one device dispatch answers a whole batch.
+* :class:`PlanRouter` — requests carry ``(workload, params, dtype,
+  density bucket, backend)``; the router canonicalizes that to a
+  :class:`BucketKey` and keeps a bounded LRU of compiled ``BatchedPlan``\\ s
+  over the codesign disk cache, so the hot path is zero search / zero
+  trace / zero compile.
+* :class:`Server` — an async request queue whose worker loop coalesces
+  same-bucket requests into one batch (``max_batch_size`` /
+  ``max_wait_us`` knobs) and resolves per-request futures with outputs
+  and residuals; ``Server.stats()`` surfaces per-bucket counters.
+
+Quickstart::
+
+    from repro.serve import Server, request
+
+    with Server(max_batch_size=16) as srv:
+        futs = [srv.submit(request("cg", n=256, iters=4, seed=s))
+                for s in range(32)]
+        results = [f.result() for f in futs]
+    print(results[0].residual, results[0].batch_size)
+"""
+from .batched import BatchedPlan
+from .router import (BucketKey, PlanRouter, SolveRequest, density_bucket,
+                     request)
+from .server import Server, SolveResult
+
+__all__ = ["BatchedPlan", "BucketKey", "PlanRouter", "Server",
+           "SolveRequest", "SolveResult", "density_bucket", "request"]

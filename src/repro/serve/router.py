@@ -1,0 +1,245 @@
+"""Request → bucket key → resident `BatchedPlan`: the serving hot path.
+
+Requests name a problem *family*, not a plan: ``(workload, params, dtype,
+density bucket, backend)``.  The router canonicalizes that into a
+:class:`BucketKey` — workload params resolved against the builder's
+defaults (so ``cg_sparse(n=256)`` and ``cg_sparse(n=256,
+pattern="laplacian5")`` share a bucket) and sparse ``density`` snapped to a
+decade bucket (:func:`density_bucket`), the heterogeneity-aware routing
+move: requests with nearby densities share one co-designed plan variant
+instead of fragmenting the cache per exact nnz count.
+
+A bounded LRU of compiled :class:`~repro.serve.batched.BatchedPlan`\\ s sits
+on top of the existing codesign *disk* cache: a hot bucket costs one dict
+lookup (zero search, zero trace, zero compile); a cold bucket pays trace →
+codesign (disk-cached across processes) → lower → vmap once, then stays
+resident until evicted.  All router state is guarded by one lock — worker
+threads and callers can route concurrently.
+"""
+from __future__ import annotations
+
+import dataclasses
+import inspect
+import math
+import threading
+from collections import OrderedDict
+from typing import Any, Dict, Mapping, Optional, Tuple
+
+import numpy as np
+
+from .batched import BatchedPlan
+
+__all__ = ["SolveRequest", "request", "BucketKey", "density_bucket",
+           "PlanRouter"]
+
+
+def density_bucket(density: float) -> float:
+    """Snap a sparse density to its decade bucket: ``10 ** round(log10)``.
+
+    ``0.0008``–``0.003`` (roughly) all route to ``1e-3``: one plan serves
+    the decade, and the bucket's canonical density sizes its operand.
+    """
+    density = float(density)
+    if not 0.0 < density <= 1.0:
+        raise ValueError(f"density must be in (0, 1], got {density}")
+    return min(1.0, 10.0 ** round(math.log10(density)))
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketKey:
+    """Canonical identity of one servable plan variant."""
+    workload: str
+    params: Tuple[Tuple[str, Any], ...]    # canonicalized, sorted
+    dtype: str                             # numpy name: "float32"
+    density: str          # "dense" | "d0.001" | "laplacian5" | "banded/b64"
+    backend: str
+
+    @property
+    def label(self) -> str:
+        """Compact stable string — the per-bucket stats key."""
+        params = ", ".join(f"{k}={v}" for k, v in self.params
+                           if v is not None)
+        return (f"{self.workload}({params})/{self.dtype}"
+                f"/{self.density}/{self.backend}")
+
+
+@dataclasses.dataclass(frozen=True)
+class SolveRequest:
+    """One user request: a problem family plus per-request inputs.
+
+    ``seed`` generates deterministic input-leaf feeds; ``feeds`` overlays
+    explicit values for (a subset of) the input leaves — the operator is
+    always the bucket's shared one, that is the point of bucketing.
+    """
+    workload: str
+    params: Tuple[Tuple[str, Any], ...] = ()
+    dtype: str = "float32"
+    backend: str = "reference"
+    seed: int = 0
+    feeds: Optional[Mapping[str, Any]] = dataclasses.field(
+        default=None, compare=False)
+
+
+def request(workload: str, *, dtype: str = "float32",
+            backend: str = "reference", seed: int = 0,
+            feeds: Optional[Mapping[str, Any]] = None,
+            **params) -> SolveRequest:
+    """Build a :class:`SolveRequest`; workload params go as kwargs::
+
+        request("cg", n=256, iters=4, seed=7)
+        request("cg_sparse", n=256, density=1e-3, dtype="float64")
+    """
+    dt = np.dtype(dtype)
+    if dt.kind != "f":
+        raise ValueError(f"request dtype must be a float dtype, got {dtype}")
+    return SolveRequest(workload=workload,
+                        params=tuple(sorted(params.items())),
+                        dtype=dt.name, backend=backend, seed=seed,
+                        feeds=feeds)
+
+
+class _PlanEntry:
+    """One resident bucket: the vmapped plan + its shared operator feeds."""
+
+    def __init__(self, key: BucketKey, bplan: BatchedPlan, np_dtype):
+        self.key = key
+        self.bplan = bplan
+        self.np_dtype = np_dtype
+        self.program = bplan.program
+        from ..frontends.reference import make_feeds
+        # the bucket's operator is fixed (seed 0): every request in the
+        # bucket solves against the same shared operand — generated once
+        self.shared_feeds = make_feeds(self.program, seed=0, dtype=np_dtype,
+                                       only=bplan.shared_leaves)
+        self.residual_output = _residual_output(self.program)
+
+
+def _residual_output(program) -> Optional[str]:
+    """The latest residual-vector output (``r<k>``), if the workload
+    exposes one — Krylov workloads output ``(x{k}, r{k})``."""
+    import re
+    cands = [(int(m.group(1)), o) for o in program.outputs
+             for m in [re.fullmatch(r"r(\d+)", o)] if m is not None]
+    return max(cands)[1] if cands else None
+
+
+class PlanRouter:
+    """Bounded LRU of compiled ``BatchedPlan``s, keyed by bucket."""
+
+    def __init__(self, session=None, *, max_plans: int = 8):
+        if session is None:
+            from ..api.session import Session
+            session = Session()
+        if max_plans < 1:
+            raise ValueError("max_plans must be >= 1")
+        self.session = session
+        self.max_plans = max_plans
+        self._lru: "OrderedDict[BucketKey, _PlanEntry]" = OrderedDict()
+        self._lock = threading.RLock()
+        self._hits: Dict[str, int] = {}
+        self._misses: Dict[str, int] = {}
+        self.evictions = 0
+
+    # -- canonicalization ----------------------------------------------
+    def bucket(self, req: SolveRequest) -> BucketKey:
+        """Canonical bucket key for a request (raises early on unknown
+        workloads/params — before anything is queued)."""
+        from ..frontends.hpc import WORKLOADS
+        if req.workload not in WORKLOADS:
+            raise KeyError(f"unknown HPC workload {req.workload!r}; "
+                           f"have {sorted(WORKLOADS)}")
+        sig = inspect.signature(WORKLOADS[req.workload])
+        try:
+            bound = sig.bind(**dict(req.params))
+        except TypeError as e:
+            raise TypeError(f"workload {req.workload!r}: {e}") from None
+        bound.apply_defaults()
+        params = dict(bound.arguments)
+        density = params.get("density")
+        if density is not None:
+            bucketed = density_bucket(density)
+            params["density"] = bucketed
+            dlabel = f"d{bucketed:g}"
+        elif "pattern" in params:
+            dlabel = str(params["pattern"])
+            if params.get("bandwidth") is not None:
+                dlabel += f"/b{params['bandwidth']}"
+        else:
+            dlabel = "dense"
+        dt = np.dtype(req.dtype)
+        if dt.kind != "f":
+            raise ValueError(f"request dtype must be a float dtype, "
+                             f"got {req.dtype}")
+        return BucketKey(workload=req.workload,
+                         params=tuple(sorted(params.items())),
+                         dtype=dt.name, density=dlabel,
+                         backend=req.backend)
+
+    # -- the cache ------------------------------------------------------
+    def plan_for(self, key: BucketKey) -> _PlanEntry:
+        """The bucket's resident entry — compiled on first use, then LRU.
+
+        The lock spans lookup+build+insert: two threads racing a cold
+        bucket build it once (compiles serialize — the codesign disk
+        cache and ``Session.trace`` memo make the loser's path cheap
+        anyway).
+        """
+        with self._lock:
+            entry = self._lru.get(key)
+            if entry is not None:
+                self._lru.move_to_end(key)
+                self._hits[key.label] = self._hits.get(key.label, 0) + 1
+                return entry
+            self._misses[key.label] = self._misses.get(key.label, 0) + 1
+            entry = self._build(key)
+            self._lru[key] = entry
+            while len(self._lru) > self.max_plans:
+                self._lru.popitem(last=False)
+                self.evictions += 1
+            return entry
+
+    def _build(self, key: BucketKey) -> _PlanEntry:
+        traced = self.session.trace(workload=key.workload,
+                                    **dict(key.params))
+        plan = traced.codesign().lower(backend=key.backend)
+        return _PlanEntry(key, BatchedPlan(plan), np.dtype(key.dtype))
+
+    def request_feeds(self, entry: _PlanEntry,
+                      req: SolveRequest) -> Dict[str, Any]:
+        """Per-request values for the batched (input) leaves only:
+        deterministic from ``req.seed``, overlaid with ``req.feeds``."""
+        from ..frontends.reference import make_feeds
+        feeds = make_feeds(entry.program, seed=req.seed,
+                           dtype=entry.np_dtype,
+                           only=entry.bplan.batched_leaves)
+        if req.feeds:
+            batched = set(entry.bplan.batched_leaves)
+            for name, val in req.feeds.items():
+                if name not in batched:
+                    raise KeyError(
+                        f"request feeds may only set input leaves "
+                        f"{sorted(batched)}; {name!r} is "
+                        + ("the bucket's shared operator"
+                           if name in entry.bplan.shared_leaves
+                           else "not a leaf"))
+                want = entry.program.nodes[name].shape
+                val = np.asarray(val)
+                if val.shape != tuple(want):
+                    raise ValueError(f"feed {name!r}: expected shape "
+                                     f"{tuple(want)}, got {val.shape}")
+                if val.dtype.kind == "f":
+                    val = val.astype(entry.np_dtype, copy=False)
+                feeds[name] = val
+        return feeds
+
+    def stats(self) -> Dict[str, Any]:
+        with self._lock:
+            labels = sorted(set(self._hits) | set(self._misses))
+            return {
+                "plans_cached": len(self._lru),
+                "max_plans": self.max_plans,
+                "evictions": self.evictions,
+                "buckets": {lb: {"cache_hits": self._hits.get(lb, 0),
+                                 "cache_misses": self._misses.get(lb, 0)}
+                            for lb in labels},
+            }

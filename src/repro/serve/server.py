@@ -1,0 +1,225 @@
+"""`Server`: an async request queue that coalesces solves into batches.
+
+Callers :meth:`~Server.submit` :class:`~repro.serve.router.SolveRequest`\\ s
+and get back ``concurrent.futures.Future``\\ s; one worker thread drains the
+queue, grouping same-bucket requests into a single
+:class:`~repro.serve.batched.BatchedPlan` dispatch.  Two knobs trade
+latency for throughput:
+
+* ``max_batch_size`` — a batch closes as soon as this many same-bucket
+  requests are queued;
+* ``max_wait_us`` — a batch also closes once its oldest request has waited
+  this long, so a trickle of traffic is not stalled fishing for batchmates.
+
+All JAX work happens on the one worker thread (routing, compiles and
+dispatches never race each other); ``submit`` only canonicalizes the
+bucket key — invalid requests raise in the caller, never poison the queue.
+Execution errors propagate through each affected request's future.
+
+``stats()`` is the observability surface: per-bucket request/batch
+counters, a batch-size histogram, plan-cache hits/misses, the vmapped
+executable's dispatch/trace counters, and current queue depth — the
+numbers CI's smoke job asserts one-dispatch-per-coalesced-batch with.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from collections import deque
+from concurrent.futures import Future
+from typing import Any, Dict, List, Optional, Tuple
+
+from .router import BucketKey, PlanRouter, SolveRequest
+
+__all__ = ["Server", "SolveResult"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SolveResult:
+    """One request's answer: the program outputs (unbatched), the residual
+    norm when the workload exposes a residual vector output, and how the
+    request was served."""
+    outputs: Dict[str, Any]
+    residual: Optional[float]
+    bucket: str
+    batch_size: int
+    latency_s: float
+
+
+class Server:
+    """Batched, cached, concurrent plan serving over a ``PlanRouter``."""
+
+    def __init__(self, router: Optional[PlanRouter] = None, *,
+                 max_batch_size: int = 16, max_wait_us: float = 2000.0,
+                 session=None, max_plans: int = 8, autostart: bool = True):
+        if max_batch_size < 1:
+            raise ValueError("max_batch_size must be >= 1")
+        if max_wait_us < 0:
+            raise ValueError("max_wait_us must be >= 0")
+        self.router = router if router is not None else \
+            PlanRouter(session=session, max_plans=max_plans)
+        self.max_batch_size = max_batch_size
+        self.max_wait_us = float(max_wait_us)
+        self._cv = threading.Condition()
+        self._pending: Dict[BucketKey,
+                            "deque[Tuple[SolveRequest, Future, float]]"] = {}
+        self._closing = False
+        self._requests: Dict[str, int] = {}
+        self._batches: Dict[str, int] = {}
+        self._hist: Dict[str, Dict[int, int]] = {}
+        self._exec_stats: Dict[str, Dict[str, int]] = {}
+        self._worker = threading.Thread(target=self._loop, daemon=True,
+                                        name="cello-serve-worker")
+        self._started = False
+        if autostart:
+            self.start()
+
+    # -- client surface -------------------------------------------------
+    def start(self) -> "Server":
+        """Start the worker (no-op when already running).  Construct with
+        ``autostart=False`` + submit + ``start()`` to make coalescing
+        deterministic — every queued request is visible before the first
+        batch closes."""
+        if not self._started:
+            self._started = True
+            self._worker.start()
+        return self
+
+    def submit(self, req: SolveRequest) -> "Future[SolveResult]":
+        """Enqueue one request; resolve/raise through the future."""
+        key = self.router.bucket(req)      # raises here, not on the worker
+        fut: "Future[SolveResult]" = Future()
+        with self._cv:
+            if self._closing:
+                raise RuntimeError("Server is closed")
+            self._pending.setdefault(key, deque()).append(
+                (req, fut, time.monotonic()))
+            lb = key.label
+            self._requests[lb] = self._requests.get(lb, 0) + 1
+            self._cv.notify_all()
+        return fut
+
+    def solve(self, req: SolveRequest) -> SolveResult:
+        """Submit and wait: the synchronous convenience."""
+        if not self._started:
+            raise RuntimeError("Server not started (autostart=False): "
+                               "call start() first")
+        return self.submit(req).result()
+
+    def stats(self) -> Dict[str, Any]:
+        """Merged router + queue + executable counters, per bucket."""
+        with self._cv:
+            queued = {k.label: len(d) for k, d in self._pending.items() if d}
+            requests = dict(self._requests)
+            batches = dict(self._batches)
+            hist = {lb: dict(h) for lb, h in self._hist.items()}
+            exec_stats = {lb: dict(s) for lb, s in self._exec_stats.items()}
+        rstats = self.router.stats()
+        labels = sorted(set(requests) | set(rstats["buckets"]) | set(queued))
+        buckets = {}
+        for lb in labels:
+            r = rstats["buckets"].get(lb, {})
+            e = exec_stats.get(lb, {})
+            buckets[lb] = {
+                "requests": requests.get(lb, 0),
+                "batches": batches.get(lb, 0),
+                "batch_sizes": hist.get(lb, {}),
+                "queued": queued.get(lb, 0),
+                "cache_hits": r.get("cache_hits", 0),
+                "cache_misses": r.get("cache_misses", 0),
+                "dispatches": e.get("dispatches", 0),
+                "traces": e.get("traces", 0),
+            }
+        return {
+            "requests": sum(requests.values()),
+            "batches": sum(batches.values()),
+            "queue_depth": sum(queued.values()),
+            "plans_cached": rstats["plans_cached"],
+            "plan_evictions": rstats["evictions"],
+            "buckets": buckets,
+        }
+
+    def close(self, *, flush: bool = True) -> None:
+        """Stop accepting requests.  ``flush=True`` (default) serves
+        everything already queued first; ``flush=False`` fails queued
+        futures with ``RuntimeError``."""
+        with self._cv:
+            self._closing = True
+            # a never-started server has no worker to flush the queue
+            if not flush or not self._started:
+                dropped = [item for d in self._pending.values()
+                           for item in d]
+                self._pending.clear()
+                for _, fut, _ in dropped:
+                    fut.set_exception(
+                        RuntimeError("Server closed before this request "
+                                     "was served"))
+            self._cv.notify_all()
+        if self._started:
+            self._worker.join()
+            self._started = False
+
+    def __enter__(self) -> "Server":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.close(flush=exc == (None, None, None))
+
+    # -- the worker loop -------------------------------------------------
+    def _loop(self) -> None:
+        max_wait_s = self.max_wait_us * 1e-6
+        while True:
+            with self._cv:
+                while not self._pending and not self._closing:
+                    self._cv.wait()
+                if not self._pending and self._closing:
+                    return
+                # serve the bucket whose head request has waited longest
+                key = min((k for k, d in self._pending.items() if d),
+                          key=lambda k: self._pending[k][0][2])
+                deadline = self._pending[key][0][2] + max_wait_s
+                while (len(self._pending[key]) < self.max_batch_size
+                       and not self._closing):
+                    remaining = deadline - time.monotonic()
+                    if remaining <= 0:
+                        break
+                    self._cv.wait(timeout=remaining)
+                d = self._pending[key]
+                batch = [d.popleft()
+                         for _ in range(min(self.max_batch_size, len(d)))]
+                if not d:
+                    del self._pending[key]
+            self._serve_batch(key, batch)
+
+    def _serve_batch(self, key: BucketKey,
+                     batch: List[Tuple[SolveRequest, Future, float]]
+                     ) -> None:
+        lb = key.label
+        try:
+            entry = self.router.plan_for(key)
+            per_request = [self.router.request_feeds(entry, req)
+                           for req, _, _ in batch]
+            # run_many returns host (numpy) outputs — already synced, so
+            # completion timestamps below are honest
+            outs = entry.bplan.run_many(per_request, entry.shared_feeds)
+        except BaseException as e:      # noqa: BLE001 — futures carry it
+            for _, fut, _ in batch:
+                if not fut.done():
+                    fut.set_exception(e)
+            return
+        done = time.monotonic()
+        with self._cv:
+            self._batches[lb] = self._batches.get(lb, 0) + 1
+            h = self._hist.setdefault(lb, {})
+            h[len(batch)] = h.get(len(batch), 0) + 1
+            self._exec_stats[lb] = dict(entry.bplan.stats)
+        rname = entry.residual_output
+        for (req, fut, t_submit), out in zip(batch, outs):
+            residual = None
+            if rname is not None:
+                import numpy as np
+                residual = float(np.linalg.norm(np.asarray(out[rname])))
+            fut.set_result(SolveResult(
+                outputs=out, residual=residual, bucket=lb,
+                batch_size=len(batch), latency_s=done - t_submit))
