@@ -7,6 +7,10 @@ full traceback is printed (CI logs must be debuggable) before the
 ``--json PATH`` additionally writes a machine-readable dump
 ``{table_title: [{name, us_per_call, backend, derived}, ...]}`` so the
 per-PR perf trajectory (``BENCH_*.json``) can be recorded and diffed.
+Two non-table keys ride along (``scripts/bench_compare.py`` skips them
+when diffing): ``meta`` — jax/jaxlib/python versions, platform, device
+backend, x64 flag, UTC timestamp — and ``obs`` — the run's
+``repro.obs`` metrics snapshot.
 ``--tables`` filters tables by case-insensitive substring (comma-separated),
 which is what the CI smoke job uses to run one cheap table.  ``--backend``
 threads an execution backend into the tables that run plans for real (the
@@ -47,6 +51,32 @@ def _tables():
         ("TABLE 9 — batched serving throughput vs sequential solves",
          bench_serve),
     ]
+
+
+def _meta(backend: str = None) -> Dict[str, Any]:
+    """Provenance block for ``--json`` dumps: enough to tell whether two
+    recorded trajectories are comparable (same jax/jaxlib, same device
+    class, same x64 mode).  Lives under the top-level ``meta`` key, which
+    ``scripts/bench_compare.py`` skips when diffing rows."""
+    import datetime
+    import platform
+    meta: Dict[str, Any] = {
+        "python": platform.python_version(),
+        "platform": platform.platform(),
+        "backend_flag": backend,
+        "timestamp": datetime.datetime.now(
+            datetime.timezone.utc).isoformat(),
+    }
+    try:
+        import jax
+        import jaxlib
+        meta["jax"] = jax.__version__
+        meta["jaxlib"] = getattr(jaxlib, "__version__", None)
+        meta["jax_backend"] = jax.default_backend()
+        meta["x64"] = bool(jax.config.jax_enable_x64)
+    except Exception:                                 # pragma: no cover
+        meta["jax"] = None
+    return meta
 
 
 def _maybe_number(cell: str) -> Any:
@@ -138,8 +168,15 @@ def main(argv=None) -> None:
         print(f"no table title matches {args.tables!r}", file=sys.stderr)
         sys.exit(2)
     if args.json:
+        out: Dict[str, Any] = dict(dump)
+        out["meta"] = _meta(args.backend)
+        try:
+            from repro import obs
+            out["obs"] = obs.snapshot()
+        except Exception:                             # pragma: no cover
+            pass
         with open(args.json, "w") as f:
-            json.dump(dump, f, indent=2, sort_keys=True)
+            json.dump(out, f, indent=2, sort_keys=True)
         print(f"\nwrote {args.json}")
     if failures:
         sys.exit(1)

@@ -47,6 +47,8 @@ DEFAULT_BASELINE = "benchmarks/baselines/BENCH_exec.json"
 def _rows(dump: dict) -> Dict[Tuple[str, str], dict]:
     out = {}
     for table, rows in dump.items():
+        if not isinstance(rows, list):
+            continue   # top-level "meta" / "obs" blocks are not row tables
         for rec in rows:
             out[(table, rec.get("name", "?"))] = rec
     return out

@@ -280,6 +280,8 @@ class CompiledPlan:
                     for name, ev in cd.baselines.items()},
                 "from_cache": cd.from_cache,
             })
+        from .. import obs
+        out["obs"] = obs.snapshot()
         return out
 
     def explain(self) -> str:

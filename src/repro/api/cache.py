@@ -22,12 +22,25 @@ import re
 import tempfile
 from typing import Any, Dict, Optional
 
+from .. import obs
 from ..core.buffer import BufferConfig, TrafficReport
 from ..core.costmodel import HardwareModel, Metrics
 from ..core.graph import OpGraph
 from ..core.schedule import CoDesignResult, EvaluatedSchedule, Schedule
 
 _FORMAT_VERSION = 1
+
+_CACHE_HITS = obs.registry().counter(
+    "codesign.cache.hits", "codesign disk-cache entries replayed")
+_CACHE_MISSES = obs.registry().counter(
+    "codesign.cache.misses",
+    "codesign disk-cache lookups that re-searched (absent/corrupt/stale)")
+_CACHE_READ_B = obs.registry().counter(
+    "codesign.cache.read_bytes", "bytes read on codesign cache hits",
+    unit="B")
+_CACHE_WRITE_B = obs.registry().counter(
+    "codesign.cache.write_bytes", "bytes published to the codesign cache",
+    unit="B")
 
 
 def default_cache_dir() -> pathlib.Path:
@@ -221,19 +234,26 @@ class CodesignCache:
         path = self._path(key)
         try:
             with open(path) as f:
-                return result_from_dict(json.load(f))
+                blob = f.read()
+            res = result_from_dict(json.loads(blob))
         except (OSError, ValueError, KeyError, TypeError):
+            _CACHE_MISSES.inc()
             return None    # miss, corrupt, or stale format: re-search
+        _CACHE_HITS.inc()
+        _CACHE_READ_B.inc(len(blob))
+        return res
 
     def put(self, key: str, res: CoDesignResult) -> None:
         tmp = None
         try:
+            blob = json.dumps(result_to_dict(res))
             self.root.mkdir(parents=True, exist_ok=True)
             fd, tmp = tempfile.mkstemp(dir=self.root, suffix=".tmp")
             with os.fdopen(fd, "w") as f:
-                json.dump(result_to_dict(res), f)
+                f.write(blob)
             os.replace(tmp, self._path(key))
             tmp = None
+            _CACHE_WRITE_B.inc(len(blob))
         except OSError:
             pass           # caching is best-effort; the search result stands
         finally:

@@ -23,8 +23,11 @@ from __future__ import annotations
 
 import re
 import threading
+import time
+from contextlib import contextmanager
 from typing import Optional, Sequence, Union
 
+from .. import obs
 from ..configs import get_config, list_archs
 from ..configs.base import ArchConfig
 from ..core.costmodel import HardwareModel, V5E
@@ -43,6 +46,25 @@ from .cache import (CodesignCache, algo_fingerprint, cache_disabled_by_env,
                     strategy_fingerprint)
 
 PHASES = ("train", "prefill", "decode")
+
+# observability: per-stage wall-clock always lands in the global registry;
+# spans additionally record when the tracer is enabled (CELLO_OBS)
+_STAGE_S = obs.registry().histogram(
+    "session.stage_s", "wall-clock per pipeline stage "
+    "(trace | analyze | codesign | lower)", unit="s")
+_STAGE_RUNS = obs.registry().counter(
+    "session.stage_runs", "pipeline stage executions")
+
+
+@contextmanager
+def _stage(stage: str, **meta):
+    """One pipeline-stage measurement: a span (tracing on) + a labeled
+    duration histogram (always)."""
+    t0 = time.perf_counter()
+    with obs.span(f"session.{stage}", **meta) as sp:
+        yield sp
+    _STAGE_S.observe(time.perf_counter() - t0, stage=stage)
+    _STAGE_RUNS.inc(stage=stage)
 
 # paper-table default shapes per phase (override per trace() call)
 _PHASE_DEFAULTS = {
@@ -112,6 +134,18 @@ class Session:
         or (workload, params): repeat calls return the same artifact, so
         treat the carried ``OpGraph`` as read-only.
         """
+        with _stage("trace", arch=self.cfg.name if self.cfg else None,
+                    phase=phase, workload=workload):
+            return self._trace(phase, batch=batch, seq=seq, kv_len=kv_len,
+                               layer_kind=layer_kind, workload=workload,
+                               **workload_params)
+
+    def _trace(self, phase: Optional[str] = None, *,
+               batch: Optional[int] = None,
+               seq: Optional[int] = None, kv_len: Optional[int] = None,
+               layer_kind: Optional[str] = None,
+               workload: Optional[str] = None,
+               **workload_params) -> TracedGraph:
         if workload is not None:
             if any(v is not None for v in (batch, seq, kv_len, layer_kind)):
                 raise ValueError("workload= traces take workload builder "
@@ -218,8 +252,9 @@ class Session:
     # -- stage 2: analyze -----------------------------------------------
     def analyze(self, traced: TracedGraph) -> AnalyzedGraph:
         """Reuse-distance/frequency analysis over the natural order."""
-        return AnalyzedGraph(trace=traced,
-                             analysis=_analyze(traced.graph))
+        with _stage("analyze", arch=traced.arch, phase=traced.phase):
+            return AnalyzedGraph(trace=traced,
+                                 analysis=_analyze(traced.graph))
 
     # -- stage 3: codesign ----------------------------------------------
     def codesign(self, staged: Union[TracedGraph, AnalyzedGraph], *,
@@ -230,12 +265,24 @@ class Session:
                  use_cache: Optional[bool] = None) -> CoDesigned:
         """The joint schedule × buffer search (disk-cached)."""
         traced = staged if isinstance(staged, TracedGraph) else staged.trace
-        natural_analysis = (staged.analysis
-                            if isinstance(staged, AnalyzedGraph) else None)
+        with _stage("codesign", arch=traced.arch,
+                    phase=traced.phase) as sp:
+            return self._codesign(
+                traced, sp,
+                natural_analysis=(staged.analysis
+                                  if isinstance(staged, AnalyzedGraph)
+                                  else None),
+                strategy=strategy, capacity_bytes=capacity_bytes,
+                max_orders=max_orders, splits=splits, use_cache=use_cache)
+
+    def _codesign(self, traced: TracedGraph, sp, *, natural_analysis,
+                  strategy, capacity_bytes, max_orders, splits,
+                  use_cache) -> CoDesigned:
         splits = list(splits)    # one-shot iterables: key + search see same
         capacity = capacity_bytes or self.capacity_bytes
         strategy_obj = get_strategy(strategy)
         strategy_name = strategy_obj.name
+        sp.annotate(strategy=strategy_name)
         cached = self.use_cache if use_cache is None else use_cache
         if cache_disabled_by_env():     # env kill-switch beats per-call opts
             cached = False
@@ -265,9 +312,11 @@ class Session:
                 frontend=frontend_fingerprint(traced.program))
             hit = self.cache.get(key)
             if hit is not None:
+                sp.annotate(cache="hit")
                 return CoDesigned(trace=traced, result=hit,
                                   strategy=strategy_name,
                                   capacity_bytes=capacity, from_cache=True)
+        sp.annotate(cache="miss" if cached else "off")
 
         # pass the resolved object so the strategy the cache checks is the
         # one the search actually runs (a class arg would re-instantiate)
@@ -293,17 +342,21 @@ class Session:
         still override it via ``run(backend=...)``.
         """
         traced = designed.trace
-        if traced.phase == "hpc":
-            if seq is not None:
-                raise ValueError("frontend (HPC) plans take no seq=: block "
-                                 "sizing comes from the expression shapes")
-            return self._lower_frontend(designed, backend=backend)
-        if seq is None:
-            seq = traced.seq if traced.seq is not None else \
-                (traced.kv_len or 4096)
-        plan = lower_codesign(self.cfg, designed.result, seq=seq, hw=self.hw)
-        return CompiledPlan(cfg=self.cfg, plan=plan, trace=traced,
-                            codesigned=designed, backend=backend)
+        with _stage("lower", arch=traced.arch, phase=traced.phase,
+                    backend=backend):
+            if traced.phase == "hpc":
+                if seq is not None:
+                    raise ValueError("frontend (HPC) plans take no seq=: "
+                                     "block sizing comes from the "
+                                     "expression shapes")
+                return self._lower_frontend(designed, backend=backend)
+            if seq is None:
+                seq = traced.seq if traced.seq is not None else \
+                    (traced.kv_len or 4096)
+            plan = lower_codesign(self.cfg, designed.result, seq=seq,
+                                  hw=self.hw)
+            return CompiledPlan(cfg=self.cfg, plan=plan, trace=traced,
+                                codesigned=designed, backend=backend)
 
     def _lower_frontend(self, designed: CoDesigned, *,
                         backend: str = "reference") -> CompiledPlan:

@@ -23,15 +23,23 @@ New orderings register with :func:`register_strategy`; new passes with
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import (Dict, Iterable, Iterator, List, Optional, Sequence,
                     Tuple, Type)
 
+from .. import obs
 from .buffer import BufferConfig, TrafficReport, sequential_groups, simulate
 from .costmodel import HardwareModel, Metrics, V5E, evaluate
 from .graph import OpGraph, TensorKind
 from .reuse import ReuseAnalysis, analyze
 
 DEFAULT_SPLITS = (0.0, 0.125, 0.25, 0.375, 0.5, 0.625, 0.75, 0.875, 1.0)
+
+_SEARCH_S = obs.registry().histogram(
+    "codesign.search_s", "joint schedule x buffer search wall-clock",
+    unit="s")
+_POINTS = obs.registry().counter(
+    "codesign.points", "design points streamed through the search pipeline")
 
 
 # --------------------------------------------------------------------------
@@ -301,6 +309,46 @@ def run_pipeline(ctx: SearchContext, passes: Sequence[Pass],
     return iter(points)
 
 
+class _TimedIter:
+    """Wraps one pass's generator, accumulating wall-clock spent inside
+    ``next()``.  The passes are lazy, so a pull on stage N runs every
+    upstream stage too: ``elapsed`` is *inclusive* time, and a stage's
+    exclusive self-time is ``elapsed[N] - elapsed[N-1]``."""
+
+    __slots__ = ("_it", "elapsed", "count")
+
+    def __init__(self, it: Iterable[SearchPoint]):
+        self._it = iter(it)
+        self.elapsed = 0.0
+        self.count = 0
+
+    def __iter__(self) -> "_TimedIter":
+        return self
+
+    def __next__(self) -> SearchPoint:
+        t0 = time.perf_counter()
+        try:
+            item = next(self._it)
+        except StopIteration:
+            self.elapsed += time.perf_counter() - t0
+            raise
+        self.elapsed += time.perf_counter() - t0
+        self.count += 1
+        return item
+
+
+def _timed_pipeline(ctx: SearchContext, passes: Sequence[Pass]):
+    """Like :func:`run_pipeline` with a :class:`_TimedIter` between stages,
+    so per-pass self-time is recoverable from the lazy stream."""
+    points: Iterable[SearchPoint] = iter([SearchPoint()])
+    timers: List[Tuple[str, _TimedIter]] = []
+    for p in passes:
+        timer = _TimedIter(p.run(ctx, points))
+        timers.append((p.name, timer))
+        points = timer
+    return points, timers
+
+
 # --------------------------------------------------------------------------
 # the co-design driver
 # --------------------------------------------------------------------------
@@ -346,31 +394,61 @@ def run_codesign(graph: OpGraph, *, capacity_bytes: Optional[int] = None,
     if natural_analysis is not None:
         ctx._analysis_cache[tuple(natural_analysis.order)] = natural_analysis
 
+    strat_name = get_strategy(strategy).name
+    tracer = obs.tracer()
+    passes = default_pipeline(strategy, splits)
     best: Optional[SearchPoint] = None
     split_sweep: Dict[float, Metrics] = {}
-    for pt in run_pipeline(ctx, default_pipeline(strategy, splits)):
-        cur = split_sweep.get(pt.split)
-        if cur is None or pt.metrics.time_s < cur.time_s:
-            split_sweep[pt.split] = pt.metrics
-        if (best is None
-                or (pt.metrics.time_s, pt.metrics.energy_j)
-                < (best.metrics.time_s, best.metrics.energy_j)):
-            best = pt
+    t_search = time.perf_counter()
+    with obs.span("codesign.search", strategy=strat_name,
+                  max_orders=max_orders, splits=len(splits)) as sp:
+        start = tracer.now()
+        timers: List[Tuple[str, _TimedIter]] = []
+        if tracer.enabled:
+            points, timers = _timed_pipeline(ctx, passes)
+        else:
+            points = run_pipeline(ctx, passes)
+        n_points = 0
+        for pt in points:
+            n_points += 1
+            cur = split_sweep.get(pt.split)
+            if cur is None or pt.metrics.time_s < cur.time_s:
+                split_sweep[pt.split] = pt.metrics
+            if (best is None
+                    or (pt.metrics.time_s, pt.metrics.energy_j)
+                    < (best.metrics.time_s, best.metrics.energy_j)):
+                best = pt
+        sp.annotate(points=n_points)
+        # per-pass self-time as synthetic consecutive child spans: the
+        # stages stream lazily, so real intervals interleave per point —
+        # aggregate self-time is the honest per-pass number.
+        cursor, prev = start, 0.0
+        for pass_name, timer in timers:
+            self_s = max(timer.elapsed - prev, 0.0)
+            tracer.record(f"codesign.pass.{pass_name}", cursor, self_s,
+                          points=timer.count)
+            cursor += self_s
+            prev = timer.elapsed
+    _SEARCH_S.observe(time.perf_counter() - t_search, strategy=strat_name)
+    _POINTS.inc(n_points, strategy=strat_name)
     if best is None:    # a custom strategy returned no candidate orders
         raise ValueError(f"search produced no candidates: strategy "
-                         f"{get_strategy(strategy).name!r} yielded no "
+                         f"{strat_name!r} yielded no "
                          "orders for this graph")
 
     nat = graph.topo_order()
-    baselines = {
-        # plain cache, op-by-op, no hints — the "implicit-only" accelerator
-        "seq-implicit": evaluate_point(ctx, nat, 0.0,
-                                       last_use_invalidate=False,
-                                       fuse=False, pin=False),
-        # scratchpad-only: pinning but no cache for the rest
-        "seq-explicit": evaluate_point(ctx, nat, 1.0, fuse=False, pin=True),
-        # fusion, all capacity explicit, no implicit region
-        "fused-only": evaluate_point(ctx, nat, 1.0, fuse=True, pin=True),
-    }
+    with obs.span("codesign.baselines"):
+        baselines = {
+            # plain cache, op-by-op, no hints — the "implicit-only"
+            # accelerator
+            "seq-implicit": evaluate_point(ctx, nat, 0.0,
+                                           last_use_invalidate=False,
+                                           fuse=False, pin=False),
+            # scratchpad-only: pinning but no cache for the rest
+            "seq-explicit": evaluate_point(ctx, nat, 1.0, fuse=False,
+                                           pin=True),
+            # fusion, all capacity explicit, no implicit region
+            "fused-only": evaluate_point(ctx, nat, 1.0, fuse=True, pin=True),
+        }
     return CoDesignResult(best=_to_evaluated(best), baselines=baselines,
                           split_sweep=split_sweep)

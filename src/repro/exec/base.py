@@ -21,11 +21,21 @@ entry, not a rewrite.  The contract every backend must meet:
 from __future__ import annotations
 
 import threading
+import time
 import weakref
 from typing import Any, Callable, Dict, List, Optional, Sequence
 
+from .. import obs
+
 Feeds = Dict[str, Any]
 CompiledFn = Callable[[Feeds], Dict[str, Any]]
+
+_COMPILE_S = obs.registry().histogram(
+    "exec.compile_s", "plan -> callable compile wall-clock (memoized: one "
+    "observation per distinct plan per executor)", unit="s")
+_RUN_S = obs.registry().histogram(
+    "exec.run_s", "compiled-callable dispatch wall-clock (submit-side; jax "
+    "dispatch is async, so device time may extend past this)", unit="s")
 
 
 class Executor:
@@ -69,7 +79,11 @@ class Executor:
             fn = (entry[1] if entry is not None and entry[0]() is plan
                   else None)
             if fn is None:
-                fn = self.compile(plan)
+                t0 = time.perf_counter()
+                with obs.span("exec.compile", backend=self.name):
+                    fn = self.compile(plan)
+                _COMPILE_S.observe(time.perf_counter() - t0,
+                                   backend=self.name)
                 try:
                     ref = weakref.ref(
                         plan,
@@ -81,7 +95,11 @@ class Executor:
         if feeds is None:
             from ..frontends.reference import make_feeds
             feeds = make_feeds(program, seed)
-        return fn(feeds)
+        t0 = time.perf_counter()
+        with obs.span("exec.dispatch", backend=self.name):
+            out = fn(feeds)
+        _RUN_S.observe(time.perf_counter() - t0, backend=self.name)
+        return out
 
     def __repr__(self) -> str:
         return f"{type(self).__name__}({self.name!r})"

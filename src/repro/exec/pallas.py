@@ -59,11 +59,25 @@ from __future__ import annotations
 import os
 from typing import Any, Callable, Dict, List, Optional, Sequence, Set, Tuple
 
+from .. import obs
 from ..core.lowering import (STREAM_EINSUMS, ExecPlan, GroupKernel,
                              StreamPass, flatten_units, plan_execution,
                              select_group_kernels)
 from .base import Executor, plan_groups, plan_program
 from .reference import csr_row_ids, eval_node
+
+_TRACES = obs.registry().counter(
+    "exec.traces", "jit trace-time Python body executions, per compiled "
+    "program (scope label)")
+_DISPATCHES = obs.registry().counter(
+    "exec.dispatches", "device dispatches, per compiled program "
+    "(scope label)")
+_DONATED_B = obs.registry().counter(
+    "exec.donated_bytes", "leaf feed bytes donated into the executable "
+    "(copies of caller-owned device buffers included)", unit="B")
+_UNITS = obs.registry().counter(
+    "exec.units", "execution units built at compile, by kind "
+    "(stream | block | jnp)")
 
 _BACKEND_PROBE: Optional[str] = None
 
@@ -608,7 +622,13 @@ class _SingleProgram:
         self.roll = roll
         self.leaf_names = [nd.name for nd in program.leaves()]
         self.out_names = list(program.outputs)
-        self.stats = {"traces": 0, "dispatches": 0}
+        # counters live on the global registry under this program's unique
+        # scope label, so per-program exactness survives sharing one
+        # registry definition across every compiled program
+        self._scope = obs.next_scope("pallas")
+        for i in (*pro, *tmpl, *epi):
+            _UNITS.inc(backend="pallas", kind=units[i].kind,
+                       scope=self._scope)
 
         if roll is not None:
             tmpl_ops = {o for i in tmpl for o in units[i].ops}
@@ -634,10 +654,21 @@ class _SingleProgram:
                   if self._donate else {})
         self._jit = jax.jit(self._traced, **kwargs)
 
+    @property
+    def stats(self) -> Dict[str, int]:
+        """This program's counters, read back from the obs registry
+        (``{"traces": ..., "dispatches": ...}``, dict-comparable)."""
+        return {
+            "traces": int(_TRACES.value(backend="pallas",
+                                        scope=self._scope)),
+            "dispatches": int(_DISPATCHES.value(backend="pallas",
+                                                scope=self._scope)),
+        }
+
     # -- the traced program --------------------------------------------
     def _traced(self, *leaf_vals):
         import jax.numpy as jnp
-        self.stats["traces"] += 1
+        _TRACES.inc(backend="pallas", scope=self._scope)
         float_dts = [v.dtype for v in leaf_vals
                      if jnp.issubdtype(v.dtype, jnp.floating)]
         # dtype resolved once per trace from the leaf avals; integer
@@ -695,6 +726,7 @@ class _SingleProgram:
     # -- the dispatch ---------------------------------------------------
     def __call__(self, feeds: Dict[str, Any]) -> Dict[str, Any]:
         args = []
+        donated = 0
         for leaf in self.leaf_names:
             if leaf not in feeds:
                 raise KeyError(f"feeds missing leaf {leaf!r}")
@@ -705,8 +737,11 @@ class _SingleProgram:
                 if isinstance(v, jax.Array):
                     # donation must never consume a caller-owned buffer
                     v = jnp.array(v, copy=True)
+                donated += int(getattr(v, "nbytes", 0) or 0)
             args.append(v)
-        self.stats["dispatches"] += 1
+        _DISPATCHES.inc(backend="pallas", scope=self._scope)
+        if donated:
+            _DONATED_B.inc(donated, backend="pallas", scope=self._scope)
         outs = self._jit(*args)
         return dict(zip(self.out_names, outs))
 
@@ -748,6 +783,9 @@ class PerUnitPallasExecutor(Executor):
         needed, consumers = _unit_needed(program, units)
         calls = [_build_call(program, units[ui], needed[ui])
                  for ui in range(len(units))]
+        scope = obs.next_scope("perunit")
+        for unit in units:
+            _UNITS.inc(backend=self.name, kind=unit.kind, scope=scope)
 
         outputs = set(program.outputs)
         last_use = {t: max(uis) for t, uis in consumers.items()}

@@ -31,10 +31,18 @@ from __future__ import annotations
 
 from typing import Any, Dict, List, Mapping, Optional, Sequence
 
+from .. import obs
 from ..exec import get_backend
 from ..exec.base import plan_program
 
 __all__ = ["BatchedPlan"]
+
+_BP_TRACES = obs.registry().counter(
+    "serve.batch_traces", "BatchedPlan jit retraces (one per distinct "
+    "(batch size, dtype)), per plan (scope label)")
+_BP_DISPATCHES = obs.registry().counter(
+    "serve.batch_dispatches", "BatchedPlan coalesced-batch device "
+    "dispatches, per plan (scope label)")
 
 
 class BatchedPlan:
@@ -66,13 +74,25 @@ class BatchedPlan:
             from ..exec.pallas import use_donation
             donate = use_donation()
         self.donate = bool(donate)
-        self.stats = {"traces": 0, "dispatches": 0}
+        # counters live on the obs registry under this plan's unique scope
+        # label; ``stats`` reads them back as the familiar dict
+        self._scope = obs.next_scope("batched")
         self._jit = None        # built lazily: importing jax is deferred
         self._jit_one = None
 
+    @property
+    def stats(self) -> Dict[str, int]:
+        """This plan's counters off the obs registry (dict-comparable)."""
+        return {
+            "traces": int(_BP_TRACES.value(backend=self.backend,
+                                           scope=self._scope)),
+            "dispatches": int(_BP_DISPATCHES.value(backend=self.backend,
+                                                   scope=self._scope)),
+        }
+
     # -- construction of the jitted executables -------------------------
     def _one(self, shared_vals, batched_vals):
-        self.stats["traces"] += 1
+        _BP_TRACES.inc(backend=self.backend, scope=self._scope)
         feeds = dict(zip(self.shared_leaves, shared_vals))
         feeds.update(zip(self.batched_leaves, batched_vals))
         return dict(self._single(feeds))
@@ -123,8 +143,10 @@ class BatchedPlan:
             if self.donate:
                 v = _own(v)
             batched_vals.append(v)
-        self.stats["dispatches"] += 1
-        return dict(self._jit(shared_vals, batched_vals))
+        _BP_DISPATCHES.inc(backend=self.backend, scope=self._scope)
+        with obs.span("serve.batch_dispatch", backend=self.backend,
+                      batch=batch):
+            return dict(self._jit(shared_vals, batched_vals))
 
     def run_many(self, requests: Sequence[Mapping[str, Any]],
                  shared: Mapping[str, Any], *,

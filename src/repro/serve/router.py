@@ -27,10 +27,22 @@ from typing import Any, Dict, Mapping, Optional, Tuple
 
 import numpy as np
 
+from .. import obs
 from .batched import BatchedPlan
 
 __all__ = ["SolveRequest", "request", "BucketKey", "density_bucket",
            "PlanRouter"]
+
+_PLAN_HITS = obs.registry().counter(
+    "serve.plan_cache.hits", "resident BatchedPlan LRU hits, per bucket "
+    "and router (scope label)")
+_PLAN_MISSES = obs.registry().counter(
+    "serve.plan_cache.misses", "resident-plan LRU misses (a cold bucket "
+    "pays trace -> codesign -> lower -> vmap)")
+_PLAN_EVICTIONS = obs.registry().counter(
+    "serve.plan_cache.evictions", "resident plans evicted by the LRU bound")
+_PLANS_RESIDENT = obs.registry().gauge(
+    "serve.plans_resident", "currently resident compiled plans")
 
 
 def density_bucket(density: float) -> float:
@@ -136,9 +148,13 @@ class PlanRouter:
         self.max_plans = max_plans
         self._lru: "OrderedDict[BucketKey, _PlanEntry]" = OrderedDict()
         self._lock = threading.RLock()
-        self._hits: Dict[str, int] = {}
-        self._misses: Dict[str, int] = {}
-        self.evictions = 0
+        # hit/miss/eviction counters live on the obs registry under this
+        # router's unique scope label; stats() reads them back
+        self._scope = obs.next_scope("router")
+
+    @property
+    def evictions(self) -> int:
+        return int(_PLAN_EVICTIONS.value(scope=self._scope))
 
     # -- canonicalization ----------------------------------------------
     def bucket(self, req: SolveRequest) -> BucketKey:
@@ -188,14 +204,16 @@ class PlanRouter:
             entry = self._lru.get(key)
             if entry is not None:
                 self._lru.move_to_end(key)
-                self._hits[key.label] = self._hits.get(key.label, 0) + 1
+                _PLAN_HITS.inc(bucket=key.label, scope=self._scope)
                 return entry
-            self._misses[key.label] = self._misses.get(key.label, 0) + 1
-            entry = self._build(key)
+            _PLAN_MISSES.inc(bucket=key.label, scope=self._scope)
+            with obs.span("serve.plan_build", bucket=key.label):
+                entry = self._build(key)
             self._lru[key] = entry
             while len(self._lru) > self.max_plans:
                 self._lru.popitem(last=False)
-                self.evictions += 1
+                _PLAN_EVICTIONS.inc(scope=self._scope)
+            _PLANS_RESIDENT.set(len(self._lru), scope=self._scope)
             return entry
 
     def _build(self, key: BucketKey) -> _PlanEntry:
@@ -233,13 +251,28 @@ class PlanRouter:
         return feeds
 
     def stats(self) -> Dict[str, Any]:
+        # one consistent read: the LRU size and the registry snapshot are
+        # taken under the router lock (every counter bump happens under it
+        # too, so no hit/miss can land between the two reads)
         with self._lock:
-            labels = sorted(set(self._hits) | set(self._misses))
-            return {
-                "plans_cached": len(self._lru),
-                "max_plans": self.max_plans,
-                "evictions": self.evictions,
-                "buckets": {lb: {"cache_hits": self._hits.get(lb, 0),
-                                 "cache_misses": self._misses.get(lb, 0)}
-                            for lb in labels},
-            }
+            plans_cached = len(self._lru)
+            snap = obs.snapshot(self._scope)
+
+        def per_bucket(name: str) -> Dict[str, int]:
+            return {c["labels"]["bucket"]: int(c["value"])
+                    for c in snap.get(name, {}).get("cells", [])}
+
+        hits = per_bucket("serve.plan_cache.hits")
+        misses = per_bucket("serve.plan_cache.misses")
+        evictions = sum(
+            int(c["value"]) for c in
+            snap.get("serve.plan_cache.evictions", {}).get("cells", []))
+        labels = sorted(set(hits) | set(misses))
+        return {
+            "plans_cached": plans_cached,
+            "max_plans": self.max_plans,
+            "evictions": evictions,
+            "buckets": {lb: {"cache_hits": hits.get(lb, 0),
+                             "cache_misses": misses.get(lb, 0)}
+                        for lb in labels},
+        }

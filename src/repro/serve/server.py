@@ -17,9 +17,15 @@ bucket key — invalid requests raise in the caller, never poison the queue.
 Execution errors propagate through each affected request's future.
 
 ``stats()`` is the observability surface: per-bucket request/batch
-counters, a batch-size histogram, plan-cache hits/misses, the vmapped
-executable's dispatch/trace counters, and current queue depth — the
-numbers CI's smoke job asserts one-dispatch-per-coalesced-batch with.
+counters, a batch-size histogram, queue-wait / end-to-end latency
+quantiles, plan-cache hits/misses, the vmapped executable's
+dispatch/trace counters, and current queue depth — the numbers CI's
+smoke job asserts one-dispatch-per-coalesced-batch with.  The counters
+live on the ``repro.obs`` registry (under this server's unique scope
+label) and the whole snapshot is taken while holding the server's
+condition variable, so it is consistent: at any instant
+``requests == queued + in_flight + errors + sum(size * count)`` over the
+batch-size histogram.
 """
 from __future__ import annotations
 
@@ -30,9 +36,33 @@ from collections import deque
 from concurrent.futures import Future
 from typing import Any, Dict, List, Optional, Tuple
 
+from .. import obs
 from .router import BucketKey, PlanRouter, SolveRequest
 
 __all__ = ["Server", "SolveResult"]
+
+_REQUESTS = obs.registry().counter(
+    "serve.requests", "requests accepted into the queue, per bucket and "
+    "server (scope label)")
+_BATCHES = obs.registry().counter(
+    "serve.batches", "coalesced batches served, per bucket")
+_BATCH_SIZE = obs.registry().counter(
+    "serve.batch_size", "batches by exact coalesced size (labels: bucket, "
+    "size) — a counter, not a histogram, so sizes stay exact")
+_ERRORS = obs.registry().counter(
+    "serve.errors", "requests failed through their futures, per bucket")
+_QUEUE_WAIT_S = obs.registry().histogram(
+    "serve.queue_wait_s", "submit -> batch-close wait, per request",
+    unit="s")
+_BATCH_BUILD_S = obs.registry().histogram(
+    "serve.batch_build_s", "plan routing + per-request feed build, per "
+    "batch", unit="s")
+_DISPATCH_S = obs.registry().histogram(
+    "serve.dispatch_s", "batched dispatch wall-clock, per batch (run_many "
+    "syncs outputs to host, so this covers device time)", unit="s")
+_E2E_S = obs.registry().histogram(
+    "serve.e2e_latency_s", "submit -> result end-to-end latency, per "
+    "request", unit="s")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -65,9 +95,11 @@ class Server:
         self._pending: Dict[BucketKey,
                             "deque[Tuple[SolveRequest, Future, float]]"] = {}
         self._closing = False
-        self._requests: Dict[str, int] = {}
-        self._batches: Dict[str, int] = {}
-        self._hist: Dict[str, Dict[int, int]] = {}
+        # counters/histograms live on the obs registry under this server's
+        # scope label; every bump happens while holding _cv, so stats()
+        # (which snapshots under _cv) is a consistent point-in-time view
+        self._scope = obs.next_scope("serve")
+        self._in_flight: Dict[str, int] = {}
         self._exec_stats: Dict[str, Dict[str, int]] = {}
         self._worker = threading.Thread(target=self._loop, daemon=True,
                                         name="cello-serve-worker")
@@ -95,8 +127,7 @@ class Server:
                 raise RuntimeError("Server is closed")
             self._pending.setdefault(key, deque()).append(
                 (req, fut, time.monotonic()))
-            lb = key.label
-            self._requests[lb] = self._requests.get(lb, 0) + 1
+            _REQUESTS.inc(bucket=key.label, scope=self._scope)
             self._cv.notify_all()
         return fut
 
@@ -108,14 +139,43 @@ class Server:
         return self.submit(req).result()
 
     def stats(self) -> Dict[str, Any]:
-        """Merged router + queue + executable counters, per bucket."""
+        """Merged router + queue + executable counters, per bucket.
+
+        **One locked snapshot**: queue depths, the obs-registry counters,
+        the router's counters, and the executable's counters are all read
+        while holding the server's condition variable — every write to any
+        of them also happens under it, so the numbers reconcile exactly:
+        ``requests == queued + in_flight + errors + Σ size·count`` over
+        ``batch_sizes``, at any instant.  Per-bucket ``latency`` /
+        ``queue_wait`` are streaming-histogram summaries (p50/p90/p99
+        within the documented ±5% relative error).
+        """
         with self._cv:
             queued = {k.label: len(d) for k, d in self._pending.items() if d}
-            requests = dict(self._requests)
-            batches = dict(self._batches)
-            hist = {lb: dict(h) for lb, h in self._hist.items()}
+            in_flight = {lb: n for lb, n in self._in_flight.items() if n}
             exec_stats = {lb: dict(s) for lb, s in self._exec_stats.items()}
-        rstats = self.router.stats()
+            snap = obs.snapshot(self._scope)
+            rstats = self.router.stats()
+
+        def cells(name: str):
+            return snap.get(name, {}).get("cells", [])
+
+        def per_bucket(name: str) -> Dict[str, Any]:
+            return {c["labels"]["bucket"]: c["value"] for c in cells(name)}
+
+        requests = {lb: int(v) for lb, v in
+                    per_bucket("serve.requests").items()}
+        batches = {lb: int(v) for lb, v in
+                   per_bucket("serve.batches").items()}
+        errors = {lb: int(v) for lb, v in
+                  per_bucket("serve.errors").items()}
+        hist: Dict[str, Dict[int, int]] = {}
+        for c in cells("serve.batch_size"):
+            lb = c["labels"]["bucket"]
+            hist.setdefault(lb, {})[int(c["labels"]["size"])] = \
+                int(c["value"])
+        latency = per_bucket("serve.e2e_latency_s")
+        queue_wait = per_bucket("serve.queue_wait_s")
         labels = sorted(set(requests) | set(rstats["buckets"]) | set(queued))
         buckets = {}
         for lb in labels:
@@ -126,15 +186,21 @@ class Server:
                 "batches": batches.get(lb, 0),
                 "batch_sizes": hist.get(lb, {}),
                 "queued": queued.get(lb, 0),
+                "in_flight": in_flight.get(lb, 0),
+                "errors": errors.get(lb, 0),
                 "cache_hits": r.get("cache_hits", 0),
                 "cache_misses": r.get("cache_misses", 0),
                 "dispatches": e.get("dispatches", 0),
                 "traces": e.get("traces", 0),
+                "latency": latency.get(lb),
+                "queue_wait": queue_wait.get(lb),
             }
         return {
             "requests": sum(requests.values()),
             "batches": sum(batches.values()),
             "queue_depth": sum(queued.values()),
+            "in_flight": sum(in_flight.values()),
+            "errors": sum(errors.values()),
             "plans_cached": rstats["plans_cached"],
             "plan_evictions": rstats["evictions"],
             "buckets": buckets,
@@ -190,30 +256,54 @@ class Server:
                          for _ in range(min(self.max_batch_size, len(d)))]
                 if not d:
                     del self._pending[key]
-            self._serve_batch(key, batch)
+                # queued -> in_flight atomically with the pop, so stats()
+                # never sees these requests in neither state
+                lb = key.label
+                self._in_flight[lb] = self._in_flight.get(lb, 0) \
+                    + len(batch)
+            self._serve_batch(key, batch, time.monotonic())
 
     def _serve_batch(self, key: BucketKey,
-                     batch: List[Tuple[SolveRequest, Future, float]]
-                     ) -> None:
+                     batch: List[Tuple[SolveRequest, Future, float]],
+                     t_close: float) -> None:
         lb = key.label
-        try:
-            entry = self.router.plan_for(key)
-            per_request = [self.router.request_feeds(entry, req)
-                           for req, _, _ in batch]
-            # run_many returns host (numpy) outputs — already synced, so
-            # completion timestamps below are honest
-            outs = entry.bplan.run_many(per_request, entry.shared_feeds)
-        except BaseException as e:      # noqa: BLE001 — futures carry it
-            for _, fut, _ in batch:
-                if not fut.done():
-                    fut.set_exception(e)
-            return
-        done = time.monotonic()
-        with self._cv:
-            self._batches[lb] = self._batches.get(lb, 0) + 1
-            h = self._hist.setdefault(lb, {})
-            h[len(batch)] = h.get(len(batch), 0) + 1
-            self._exec_stats[lb] = dict(entry.bplan.stats)
+        n = len(batch)
+        with obs.span("serve.batch", bucket=lb, size=n):
+            try:
+                t0 = time.perf_counter()
+                with obs.span("serve.batch_build", bucket=lb):
+                    entry = self.router.plan_for(key)
+                    per_request = [self.router.request_feeds(entry, req)
+                                   for req, _, _ in batch]
+                _BATCH_BUILD_S.observe(time.perf_counter() - t0,
+                                       bucket=lb, scope=self._scope)
+                t0 = time.perf_counter()
+                with obs.span("serve.dispatch", bucket=lb, size=n):
+                    # run_many returns host (numpy) outputs — already
+                    # synced, so completion timestamps below are honest
+                    outs = entry.bplan.run_many(per_request,
+                                                entry.shared_feeds)
+                _DISPATCH_S.observe(time.perf_counter() - t0,
+                                    bucket=lb, scope=self._scope)
+            except BaseException as e:  # noqa: BLE001 — futures carry it
+                with self._cv:
+                    self._in_flight[lb] = self._in_flight.get(lb, 0) - n
+                    _ERRORS.inc(n, bucket=lb, scope=self._scope)
+                for _, fut, _ in batch:
+                    if not fut.done():
+                        fut.set_exception(e)
+                return
+            done = time.monotonic()
+            with self._cv:
+                self._in_flight[lb] = self._in_flight.get(lb, 0) - n
+                _BATCHES.inc(bucket=lb, scope=self._scope)
+                _BATCH_SIZE.inc(bucket=lb, size=n, scope=self._scope)
+                for _, _, t_submit in batch:
+                    _QUEUE_WAIT_S.observe(t_close - t_submit,
+                                          bucket=lb, scope=self._scope)
+                    _E2E_S.observe(done - t_submit,
+                                   bucket=lb, scope=self._scope)
+                self._exec_stats[lb] = dict(entry.bplan.stats)
         rname = entry.residual_output
         for (req, fut, t_submit), out in zip(batch, outs):
             residual = None
@@ -222,4 +312,4 @@ class Server:
                 residual = float(np.linalg.norm(np.asarray(out[rname])))
             fut.set_result(SolveResult(
                 outputs=out, residual=residual, bucket=lb,
-                batch_size=len(batch), latency_s=done - t_submit))
+                batch_size=n, latency_s=done - t_submit))

@@ -442,6 +442,97 @@ class TestConcurrency:
 
 
 # ---------------------------------------------------------------------------
+# observability: stats() snapshot consistency under concurrent submitters
+# ---------------------------------------------------------------------------
+
+class TestServerObservability:
+    def test_concurrent_submit_totals_reconcile(self, tmp_path):
+        # many client threads race the worker; the documented invariant —
+        # requests == queued + in_flight + errors + Σ size·count — must
+        # hold for every stats() snapshot, including ones taken mid-flight
+        srv = Server(session=Session(cache_dir=tmp_path),
+                     max_batch_size=8, max_wait_us=2000.0)
+        n_threads, per = 4, 10
+        futs, flock = [], threading.Lock()
+
+        def client(t):
+            for i in range(per):
+                f = srv.submit(request("cg", n=64, iters=2,
+                                       seed=t * per + i))
+                with flock:
+                    futs.append(f)
+
+        def reconciles(st):
+            served = sum(size * cnt
+                         for b in st["buckets"].values()
+                         for size, cnt in b["batch_sizes"].items())
+            return (st["requests"] == st["queue_depth"] + st["in_flight"]
+                    + st["errors"] + served), served
+
+        threads = [threading.Thread(target=client, args=(t,))
+                   for t in range(n_threads)]
+        for th in threads:
+            th.start()
+        for _ in range(10):
+            ok, _ = reconciles(srv.stats())
+            assert ok
+            time.sleep(0.002)
+        for th in threads:
+            th.join()
+        results = [f.result(timeout=300) for f in futs]
+        srv.close()
+        st = srv.stats()
+        total = n_threads * per
+        assert st["requests"] == total
+        assert st["errors"] == 0
+        assert st["queue_depth"] == 0 and st["in_flight"] == 0
+        ok, served = reconciles(st)
+        assert ok and served == total
+        (bucket,) = st["buckets"].values()
+        assert st["batches"] == sum(bucket["batch_sizes"].values())
+        assert len(results) == total
+        assert all(np.isfinite(r.residual) for r in results)
+
+    def test_errors_counted_in_reconciliation(self, tmp_path):
+        srv = Server(session=Session(cache_dir=tmp_path), autostart=False)
+        bad = srv.submit(request("cg", n=64, iters=2,
+                                 feeds={"b": np.ones(3)}))   # bad shape
+        srv.start()
+        with pytest.raises(ValueError):
+            bad.result(timeout=300)
+        srv.close()
+        st = srv.stats()
+        assert st["requests"] == 1 and st["errors"] == 1
+        served = sum(size * cnt for b in st["buckets"].values()
+                     for size, cnt in b["batch_sizes"].items())
+        assert served == 0
+        assert st["requests"] == st["queue_depth"] + st["in_flight"] \
+            + st["errors"] + served
+
+    def test_latency_quantiles_match_streaming_histogram(self, tmp_path):
+        # acceptance: stats() p50/p99 come from the streaming histogram
+        # and must sit within the documented ±5% (HIST_REL_ERROR) of the
+        # nearest-rank sample quantile of the latencies the clients saw
+        from repro.obs import HIST_REL_ERROR
+        srv = Server(session=Session(cache_dir=tmp_path),
+                     max_batch_size=4)
+        lat = [srv.solve(request("cg", n=64, iters=2, seed=s)).latency_s
+               for s in range(12)]
+        srv.close()
+        (bucket,) = srv.stats()["buckets"].values()
+        summ = bucket["latency"]
+        assert summ["count"] == 12
+        assert summ["sum"] == pytest.approx(sum(lat))
+        assert summ["min"] == pytest.approx(min(lat))
+        assert summ["max"] == pytest.approx(max(lat))
+        for q, p in (("p50", 50), ("p99", 99)):
+            exact = float(np.percentile(lat, p, method="inverted_cdf"))
+            assert abs(summ[q] - exact) / exact <= HIST_REL_ERROR + 1e-9
+        wait = bucket["queue_wait"]
+        assert wait["count"] == 12 and wait["max"] <= summ["max"]
+
+
+# ---------------------------------------------------------------------------
 # bench_compare: per-metric direction in one invocation
 # ---------------------------------------------------------------------------
 
