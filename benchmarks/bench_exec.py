@@ -52,22 +52,31 @@ def run(backend: Optional[str] = None,
 
     from repro.frontends import make_feeds
 
-    from .workloads import hpc_exec_workloads, workload_density
+    from .workloads import (exec_crossover_points, hpc_exec_workloads,
+                            workload_density)
 
     reps = int(repeats) if repeats else REPS
     backends = [backend] if backend else list(BACKENDS)
     rows = ["workload,us_per_call,backend,predicted_speedup_vs_implicit,"
             "groups,pallas_groups,jnp_groups,exec_units,rolled_iters,"
-            "max_rel_err_vs_reference,density"]
-    for name, build in hpc_exec_workloads():
+            "max_rel_err_vs_reference,density,capacity_kib,overbook"]
+    points = [(name, build, 0.0) for name, build in hpc_exec_workloads()]
+    points += exec_crossover_points()
+    for name, build, overbook in points:
+        # the crossover A/B rows compare overbook=0 vs 0.25 wall-clock at
+        # one capacity; reference rides along as the normalizer, but the
+        # per-unit driver adds nothing to that comparison
+        xover = name.startswith("xover/")
+        bes = [be for be in backends
+               if not (xover and be == "pallas-perunit")]
         traced = build()
-        designed = traced.codesign()
+        designed = traced.codesign(overbook=overbook)
         feeds = make_feeds(traced.program, seed=0)
         baseline = None
-        if any(be != "reference" for be in backends):
+        if any(be != "reference" for be in bes):
             # parity column needs the oracle, whatever backend is measured
             baseline = designed.lower(backend="reference").run(feeds)
-        for be in backends:
+        for be in bes:
             plan = designed.lower(backend=be)
             out = jax.block_until_ready(plan.run(feeds))   # warmup: traces
             times = []
@@ -90,7 +99,8 @@ def run(backend: Optional[str] = None,
                 f"{sum(k != 'jnp' for k in kinds)},"
                 f"{sum(k == 'jnp' for k in kinds)},"
                 f"{units},{rolled},{err:.2e},"
-                f"{workload_density(traced.program):.6f}")
+                f"{workload_density(traced.program):.6f},"
+                f"{traced.session.capacity_bytes >> 10},{overbook}")
     return rows
 
 

@@ -29,7 +29,8 @@ from typing import List, Optional
 
 from repro.core.search import SearchContext, evaluate_point
 
-from .workloads import hpc_workloads, workload_density
+from .workloads import (hpc_crossover_points, hpc_workloads,
+                        workload_density)
 
 
 def run(backend: Optional[str] = None,
@@ -37,11 +38,14 @@ def run(backend: Optional[str] = None,
     reps = int(repeats) if repeats else 1
     rows = ["workload,us_per_call,cached,best_split,speedup_vs_implicit,"
             "speedup_vs_explicit,speedup_vs_fused_nopin,hbm_reduction,"
-            "density,pinned" + (",backend,run_us" if backend else "")]
-    for name, build in hpc_workloads():
+            "density,capacity_kib,overbook,pinned"
+            + (",backend,run_us" if backend else "")]
+    points = [(name, build, 0.0) for name, build in hpc_workloads()]
+    points += hpc_crossover_points()
+    for name, build, overbook in points:
         traced = build()
         t0 = time.perf_counter()
-        res = traced.codesign()
+        res = traced.codesign(overbook=overbook)
         us = (time.perf_counter() - t0) * 1e6
         m = res.best.metrics
         si = res.speedup("seq-implicit")
@@ -55,12 +59,19 @@ def run(backend: Optional[str] = None,
         hbm = (res.baselines["seq-implicit"].metrics.hbm_bytes
                / max(1, m.hbm_bytes))
         pins = res.best.schedule.pins
-        pinned = "+".join(sorted(pins)) if pins else "(none)"
+        partial = dict(getattr(pins, "partial", None) or {})
+        # prefix-pinned members render with their resident fraction,
+        # so the crossover rows say *how much* of the operand pinned
+        pinned = "+".join(
+            f"{t}({partial[t].frac:.2f})" if t in partial else t
+            for t in sorted(pins)) if pins else "(none)"
         density = workload_density(traced.program)
         row = (f"{name},{us:.0f},{int(res.from_cache)},"
                f"{res.best.schedule.config.explicit_frac},"
                f"{si:.3f},{se:.3f},{sf:.3f},{hbm:.2f},"
-               f"{density:.6f},{pinned}")
+               f"{density:.6f},"
+               f"{traced.session.capacity_bytes >> 10},"
+               f"{overbook},{pinned}")
         if backend:
             import jax
 

@@ -99,6 +99,66 @@ def hpc_exec_workloads():
     return _hpc_builds(HPC_EXEC_SET)
 
 
+#: overbooked-pin crossover sweep (TABLE 7): the cg solve across the
+#: density axis (dense -> lap5 -> d=0.001 -> d=0.01) at explicit
+#: capacities chosen just *below* each operand's CSR footprint, where
+#: all-or-nothing pinning (overbook=0) must stream the operand while
+#: overbook=0.25 may pin an indptr-aligned hot row prefix.  Each point
+#: runs at overbook 0 and 0.25; the gap is the recovered middle ground —
+#: and a zero gap is the cost model *rejecting* overbooking because the
+#: streamed tail dominates (lap5 / d=0.001, whose rows hold only 4-5
+#: entries).  CSR footprints at n=4096: lap5 253 KiB, d=0.001 208 KiB,
+#: d=0.01 1984 KiB.
+HPC_CROSSOVER_SET = [
+    ("xover/cg/c208k", "cg", dict(n=4096, iters=4), 208 << 10),
+    ("xover/cg_sparse/lap5/c208k", "cg_sparse",
+     dict(n=4096, iters=4), 208 << 10),
+    ("xover/cg_sparse/lap5/c244k", "cg_sparse",
+     dict(n=4096, iters=4), 244 << 10),
+    ("xover/cg_sparse/d0.001/c176k", "cg_sparse",
+     dict(n=4096, iters=4, pattern="random", density=0.001), 176 << 10),
+    ("xover/cg_sparse/d0.001/c204k", "cg_sparse",
+     dict(n=4096, iters=4, pattern="random", density=0.001), 204 << 10),
+    ("xover/cg_sparse/d0.01/c1792k", "cg_sparse",
+     dict(n=4096, iters=4, pattern="random", density=0.01), 1792 << 10),
+    ("xover/cg_sparse/d0.01/c1920k", "cg_sparse",
+     dict(n=4096, iters=4, pattern="random", density=0.01), 1920 << 10),
+]
+
+#: measured A/B crossover point (TABLE 8): same workload and capacity,
+#: overbook 0 vs 0.25, run for real on each backend — the wall-clock gap
+#: is the prefix-resident padded per-tile kernel (O(per-tile entries) per
+#: grid step) vs the whole-operand masked scan (O(nnz) per step).
+#: (n=2048 d=0.01: CSR 512 KiB; at 480 KiB the prefix pin keeps ~82% of
+#: rows resident and measures ~2x on the interpret-mode dispatch path.)
+EXEC_CROSSOVER_SET = [
+    ("xover/cg_sparse/d0.01/c480k", "cg_sparse",
+     dict(n=2048, iters=4, pattern="random", density=0.01), 480 << 10),
+]
+
+
+def _crossover_points(triples):
+    out = []
+    for label, wl, params, cap in triples:
+        sess = Session(capacity_bytes=cap)
+        for ob in (0.0, 0.25):
+            out.append((f"{label}/ob{int(ob * 100)}",
+                        lambda s=sess, w=wl, p=params:
+                        s.trace(workload=w, **p),
+                        ob))
+    return out
+
+
+def hpc_crossover_points():
+    """``(name, build, overbook)`` triples over ``HPC_CROSSOVER_SET``."""
+    return _crossover_points(HPC_CROSSOVER_SET)
+
+
+def exec_crossover_points():
+    """``(name, build, overbook)`` triples over ``EXEC_CROSSOVER_SET``."""
+    return _crossover_points(EXEC_CROSSOVER_SET)
+
+
 def _hpc_builds(triples):
     out = []
     for label, wl, params in triples:

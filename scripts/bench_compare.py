@@ -111,6 +111,30 @@ def parse_metrics(metric: str, higher_is_better: bool = False
     return out
 
 
+#: derived columns worth echoing when a gate trips: the operating-point
+#: parameters (capacity / density / overbook / split) that tell WHICH
+#: crossover cell moved, without re-running the bench
+_PARAM_KEYS = ("capacity_kib", "capacity_mib", "capacity_bytes", "density",
+               "overbook", "best_split", "pattern", "bandwidth")
+
+
+def _row_detail(new_rec: dict, base_rec: dict, mname: str,
+                raw_n, raw_b) -> str:
+    """Failure forensics for one regressed row: the raw (un-normalized)
+    metric value on both sides plus the row's recorded operating-point
+    parameters."""
+    parts = []
+    if isinstance(raw_n, (int, float)) and isinstance(raw_b, (int, float)):
+        parts.append(f"{mname}: baseline={raw_b:g} current={raw_n:g}")
+    nd, bd = new_rec.get("derived", {}), base_rec.get("derived", {})
+    for k in _PARAM_KEYS:
+        if k in nd:
+            v, bv = nd[k], bd.get(k)
+            parts.append(f"{k}={v}" if bv in (None, v)
+                         else f"{k}={v} (baseline {bv})")
+    return "; ".join(parts)
+
+
 def compare(new: dict, base: dict, *, backend: str, max_regress: float,
             normalize: str = "", metric: str = "us_per_call",
             higher_is_better: bool = False,
@@ -155,6 +179,11 @@ def compare(new: dict, base: dict, *, backend: str, max_regress: float,
             regressed = (ratio < 1.0 - max_regress if higher
                          else ratio > 1.0 + max_regress)
             if gated and regressed:
+                detail = _row_detail(new_rows[key], base_rows[key], mname,
+                                     _metric(new_rows, key, "", mname),
+                                     _metric(base_rows, key, "", mname))
+                if detail:
+                    tag += f"\n                [{detail}]"
                 failures.append(tag)
                 lines.append("  REGRESSION  " + tag)
             else:

@@ -266,6 +266,7 @@ class CompiledPlan:
             out.update({
                 "strategy": cd.strategy,
                 "capacity_bytes": cd.capacity_bytes,
+                "overbook": getattr(cd.result, "overbook", 0.0),
                 "explicit_frac": cd.best.schedule.config.explicit_frac,
                 "time_s": m.time_s,
                 "energy_j": m.energy_j,
@@ -314,6 +315,29 @@ class CompiledPlan:
                 f"{cd.best.metrics.hbm_bytes / 1e6:,.1f} MB "
                 f"(AI {cd.best.metrics.ai:,.1f} FLOP/B)",
             ]
+            ob = getattr(cd.result, "overbook", 0.0)
+            if ob:
+                lines.append(f"  pin overbook      : {ob:.3f} of the "
+                             "explicit region (prefix pins allowed)")
+            if self.trace is not None:
+                from ..core.schedule import sparse_operand_groups
+                partial = dict(getattr(s.pins, "partial", None) or {})
+                terms = []
+                for grp in sparse_operand_groups(self.trace.graph):
+                    base = grp[0].rsplit(".", 1)[0]
+                    pp = next((partial[m] for m in grp if m in partial),
+                              None)
+                    if pp is not None:
+                        terms.append(
+                            f"{base} pinned=prefix(rows={pp.rows}/"
+                            f"{pp.total_rows}, frac={pp.frac:.2f})")
+                    elif all(m in s.pins for m in grp):
+                        terms.append(f"{base} pinned=full")
+                    else:
+                        terms.append(f"{base} pinned=streamed")
+                if terms:
+                    lines.append("  sparse operands   : "
+                                 + ", ".join(terms))
         else:
             lines.append("  (default plan — no search was run)")
         if self.cfg is None:

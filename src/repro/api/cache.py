@@ -26,7 +26,8 @@ from .. import obs
 from ..core.buffer import BufferConfig, TrafficReport
 from ..core.costmodel import HardwareModel, Metrics
 from ..core.graph import OpGraph
-from ..core.schedule import CoDesignResult, EvaluatedSchedule, Schedule
+from ..core.schedule import (CoDesignResult, EvaluatedSchedule, PartialPin,
+                             PinSet, Schedule)
 
 _FORMAT_VERSION = 1
 
@@ -59,7 +60,8 @@ def graph_fingerprint(graph: OpGraph) -> str:
     """Content hash over tensors + ops (shapes, dtypes, kinds, FLOPs)."""
     h = hashlib.sha256()
     for t in graph.tensors.values():
-        h.update(repr((t.name, t.shape, t.dtype_bytes, t.kind.value)).encode())
+        h.update(repr((t.name, t.shape, t.dtype_bytes, t.kind.value,
+                       t.meta)).encode())
     for o in graph.topo_order():
         op = graph.ops[o]
         h.update(repr((op.name, op.spec, op.inputs, op.output, op.flops,
@@ -144,19 +146,27 @@ def algo_fingerprint() -> str:
 # --------------------------------------------------------------------------
 
 def _sched_to(s: Schedule) -> Dict[str, Any]:
-    return {
+    out = {
         "order": list(s.order),
         "groups": [list(g) for g in s.groups],
         "pins": {t: list(ab) for t, ab in s.pins.items()},
         "config": dataclasses.asdict(s.config),
     }
+    partial = getattr(s.pins, "partial", None)
+    if partial:
+        out["partial"] = {t: dataclasses.asdict(pp)
+                          for t, pp in partial.items()}
+    return out
 
 
 def _sched_from(d: Dict[str, Any]) -> Schedule:
+    pins = PinSet({t: tuple(ab) for t, ab in d["pins"].items()})
+    for t, pp in d.get("partial", {}).items():
+        pins.partial[t] = PartialPin(**pp)
     return Schedule(
         order=list(d["order"]),
         groups=[list(g) for g in d["groups"]],
-        pins={t: tuple(ab) for t, ab in d["pins"].items()},
+        pins=pins,
         config=BufferConfig(**d["config"]),
     )
 
@@ -185,6 +195,7 @@ def result_to_dict(res: CoDesignResult) -> Dict[str, Any]:
         # float keys serialized by repr so they round-trip exactly
         "split_sweep": {repr(k): dataclasses.asdict(v)
                         for k, v in res.split_sweep.items()},
+        "overbook": res.overbook,
     }
 
 
@@ -196,6 +207,7 @@ def result_from_dict(d: Dict[str, Any]) -> CoDesignResult:
         baselines={k: _ev_from(v) for k, v in d["baselines"].items()},
         split_sweep={float(k): Metrics(**v)
                      for k, v in d["split_sweep"].items()},
+        overbook=d.get("overbook", 0.0),
     )
 
 

@@ -262,8 +262,15 @@ class Session:
                  capacity_bytes: Optional[int] = None,
                  max_orders: int = 16,
                  splits: Sequence[float] = DEFAULT_SPLITS,
+                 overbook: float = 0.0,
                  use_cache: Optional[bool] = None) -> CoDesigned:
-        """The joint schedule × buffer search (disk-cached)."""
+        """The joint schedule × buffer search (disk-cached).
+
+        ``overbook`` lets a sparse operand's pin exceed the explicit
+        region by that fraction of its capacity: an indptr-aligned row
+        prefix pins while the spill tail streams per pass.  ``0.0``
+        (default) keeps the historical all-or-nothing pins bit-for-bit.
+        """
         traced = staged if isinstance(staged, TracedGraph) else staged.trace
         with _stage("codesign", arch=traced.arch,
                     phase=traced.phase) as sp:
@@ -273,10 +280,11 @@ class Session:
                                   if isinstance(staged, AnalyzedGraph)
                                   else None),
                 strategy=strategy, capacity_bytes=capacity_bytes,
-                max_orders=max_orders, splits=splits, use_cache=use_cache)
+                max_orders=max_orders, splits=splits, overbook=overbook,
+                use_cache=use_cache)
 
     def _codesign(self, traced: TracedGraph, sp, *, natural_analysis,
-                  strategy, capacity_bytes, max_orders, splits,
+                  strategy, capacity_bytes, max_orders, splits, overbook,
                   use_cache) -> CoDesigned:
         splits = list(splits)    # one-shot iterables: key + search see same
         capacity = capacity_bytes or self.capacity_bytes
@@ -306,7 +314,8 @@ class Session:
                 layer_kind=traced.layer_kind, hw=hw_fingerprint(self.hw),
                 capacity=capacity, strategy=strategy_name,
                 strategy_src=strategy_src, max_orders=max_orders,
-                splits=list(splits), graph=graph_fingerprint(traced.graph),
+                splits=list(splits), overbook=overbook,
+                graph=graph_fingerprint(traced.graph),
                 # frontend-built graphs fold in the expression DAG + the
                 # frontend lowering code (None for registry traces)
                 frontend=frontend_fingerprint(traced.program))
@@ -323,6 +332,7 @@ class Session:
         result = run_codesign(traced.graph, capacity_bytes=capacity,
                               hw=self.hw, max_orders=max_orders,
                               strategy=strategy_obj, splits=splits,
+                              overbook=overbook,
                               natural_analysis=natural_analysis)
         if cached:
             self.cache.put(key, result)
@@ -367,24 +377,31 @@ class Session:
         (`plan.run(backend=...)`)."""
         traced = designed.trace
         sched = designed.result.best.schedule
+        partial = dict(getattr(sched.pins, "partial", None) or {})
         kernels = select_group_kernels(traced.graph, sched.groups,
-                                       sched.config.explicit_bytes)
+                                       sched.config.explicit_bytes,
+                                       partial=partial)
         # density-aware pin outcome: a CSR operand pins as one unit when
-        # its nnz footprint fits — surface the decision in explain()
+        # its nnz footprint fits, or as an overbooked row prefix — surface
+        # the decision in explain()
         sparse_note = ""
         sparse_grps = sparse_operand_groups(traced.graph)
         if sparse_grps:
+            prefix = sum(any(m in partial for m in g) for g in sparse_grps)
             pinned = sum(all(m in sched.pins for m in g)
+                         and not any(m in partial for m in g)
                          for g in sparse_grps)
             sparse_note = (f" sparse-operands={len(sparse_grps)} "
                            f"pinned-by-nnz-footprint={pinned}")
+            if prefix:
+                sparse_note += f" prefix-pinned={prefix}"
         # execution-level plan: residency-fused dispatch units + the rolled
         # iteration segment (when the frontend recorded bodies and the
         # scheduled units repeat them) — surfaced by explain()/report() and
         # consumed by the single-program pallas executable
         exec_plan = plan_execution(traced.graph, kernels,
                                    sched.config.explicit_bytes,
-                                   program=traced.program)
+                                   program=traced.program, partial=partial)
         plan = CelloPlan(
             arch=traced.arch,
             use_flash_attention=False, q_block=0, kv_block=0,

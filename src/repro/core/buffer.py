@@ -157,8 +157,23 @@ def simulate(graph: OpGraph,
         residency plan.  Validated against the explicit region's capacity.
       last_use: tensor -> last group index that reads it (enables the
         last-use-invalidation hint when ``config.last_use_invalidate``).
+
+    When ``pins`` is a :class:`~repro.core.schedule.PinSet` carrying
+    ``partial`` residency records (overbooked sparse operands), only the
+    resident prefix occupies the explicit region: it fills once and hits
+    on-chip afterwards, while the streamed tail is charged as direct HBM
+    traffic on **every** pass that reads the tensor — which is exactly
+    what lets the cost model (EvaluatePass) reject overbooking whenever
+    the per-pass tail traffic dominates the prefix's captured reuse.
     """
+    partial = dict(getattr(pins, "partial", None) or {})
     pins = dict(pins or {})
+
+    def resident_bytes(t: str) -> int:
+        pp = partial.get(t)
+        return pp.resident_bytes if pp is not None \
+            else graph.tensors[t].bytes
+
     rep = TrafficReport()
     lru = _ImplicitLRU(config.implicit_bytes, config.chunk_bytes, rep)
 
@@ -167,8 +182,8 @@ def simulate(graph: OpGraph,
     if pins:
         timeline = [0] * (n_steps + 1)
         for t, (a, b) in pins.items():
-            timeline[a] += graph.tensors[t].bytes
-            timeline[min(b, n_steps - 1) + 1] -= graph.tensors[t].bytes
+            timeline[a] += resident_bytes(t)
+            timeline[min(b, n_steps - 1) + 1] -= resident_bytes(t)
         live, peak = 0, 0
         for d in timeline:
             live += d
@@ -213,12 +228,19 @@ def simulate(graph: OpGraph,
             nbytes = graph.tensors[t].bytes
             pin = pins.get(t)
             if pin and pin[0] <= gi <= pin[1]:
+                res = resident_bytes(t)
+                tail = nbytes - res
                 if t in filled:
-                    rep.onchip += nbytes          # explicit hit
+                    rep.onchip += res             # explicit hit (prefix)
                 else:
-                    rep.hbm_read += nbytes        # first fill
-                    rep.charge(t, nbytes)
+                    rep.hbm_read += res           # first fill (prefix)
+                    rep.charge(t, res)
                     filled.add(t)
+                if tail > 0:
+                    # overbooked spill tail: streamed straight from HBM on
+                    # every pass (never cached — it would thrash the LRU)
+                    rep.hbm_read += tail
+                    rep.charge(t, tail)
             else:
                 lru.access(t, nbytes, write=False)
             if config.last_use_invalidate and last_use.get(t) == gi:

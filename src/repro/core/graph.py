@@ -29,11 +29,18 @@ class TensorKind(enum.Enum):
 
 @dataclasses.dataclass(frozen=True)
 class TensorSpec:
-    """A named dense tensor in the op DAG."""
+    """A named dense tensor in the op DAG.
+
+    ``meta`` carries optional frontend annotations as a hashable
+    ``((key, value), ...)`` tuple — e.g. the CSR pattern parameters of a
+    sparse operand's sub-leaves, which let the pin search compute exact
+    indptr-aligned row prefixes without re-deriving the pattern.
+    """
     name: str
     shape: Tuple[int, ...]
     dtype_bytes: int = 2            # bf16 default
     kind: TensorKind = TensorKind.INTERMEDIATE
+    meta: Tuple[Tuple[str, object], ...] = ()
 
     @property
     def elements(self) -> int:
@@ -42,6 +49,12 @@ class TensorSpec:
     @property
     def bytes(self) -> int:
         return self.elements * self.dtype_bytes
+
+    def meta_get(self, key: str, default=None):
+        for k, v in self.meta:
+            if k == key:
+                return v
+        return default
 
 
 _EINSUM_RE = re.compile(r"^([a-zA-Z,\.]+)->([a-zA-Z]*)$")
@@ -114,10 +127,12 @@ class OpGraph:
 
     # -- construction -----------------------------------------------------
     def tensor(self, name: str, shape: Sequence[int], *, dtype_bytes: int = 2,
-               kind: TensorKind = TensorKind.INTERMEDIATE) -> TensorSpec:
+               kind: TensorKind = TensorKind.INTERMEDIATE,
+               meta: Sequence[Tuple[str, object]] = ()) -> TensorSpec:
         if name in self.tensors:
             raise ValueError(f"duplicate tensor {name!r}")
-        t = TensorSpec(name, tuple(int(s) for s in shape), dtype_bytes, kind)
+        t = TensorSpec(name, tuple(int(s) for s in shape), dtype_bytes, kind,
+                       tuple(meta))
         self.tensors[name] = t
         return t
 
@@ -274,9 +289,10 @@ class GraphBuilder:
                                  kind=TensorKind.INPUT).name
 
     def weight(self, name: str, shape: Sequence[int], *,
-               dtype_bytes: int = 2) -> str:
+               dtype_bytes: int = 2,
+               meta: Sequence[Tuple[str, object]] = ()) -> str:
         return self.graph.tensor(name, shape, dtype_bytes=dtype_bytes,
-                                 kind=TensorKind.WEIGHT).name
+                                 kind=TensorKind.WEIGHT, meta=meta).name
 
     def weights(self, prefix: str, names: Sequence[str],
                 shape: Sequence[int], *, dtype_bytes: int = 2) -> List[str]:

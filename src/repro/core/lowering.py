@@ -279,10 +279,13 @@ def decode_graph(cfg: ArchConfig, batch: int, kv_len: int) -> OpGraph:
 #                fully materialize before it can be a resident operand).
 #   ``spmv-stream`` — a stream group whose passes include CSR SpMV ops:
 #                the same 1-D row-tile grid, but the sparse operand's
-#                indptr/indices/data triple AND the gathered x stay fully
+#                indptr/indices/data triple AND the gathered x stay
 #                resident in VMEM across every tile (rows are ragged and
-#                column access is data-dependent, so nothing of the
-#                operand can stream); the output vector streams row tiles.
+#                column access is data-dependent); the output vector
+#                streams row tiles.  With an overbooked (partial) pin the
+#                residency is *fractional*: a :class:`ResidentSlice`
+#                records the indptr-aligned row prefix held resident
+#                while tail tiles stream their CSR slices per grid step.
 #   ``block``  — one `pl.pallas_call` with whole arrays as single blocks:
 #                stencil sweeps need halo rows, so they cannot row-stream
 #                without overlap; the explicit region holds the full grid.
@@ -300,6 +303,29 @@ _TILE_ROW_CANDIDATES = (1024, 512, 256, 128, 64, 32, 16, 8, 4, 2, 1)
 
 
 @dataclasses.dataclass(frozen=True)
+class ResidentSlice:
+    """Fractional residency of one spmv operand triple inside a pass.
+
+    Rows ``[0, rows)`` of the CSR operand (the ``entries`` first
+    indices/data entries) are held in VMEM across every tile; the
+    remaining ``total_rows - rows`` rows stream their CSR slices through
+    the grid per step.  Produced from an overbooked pin's
+    :class:`~repro.core.schedule.PartialPin` records."""
+    tensors: Tuple[str, ...]        # the triple members covered (in order)
+    rows: int                       # resident (indptr-aligned) row prefix
+    total_rows: int
+    entries: int                    # nnz entries inside the resident prefix
+    total_entries: int
+
+    @property
+    def frac(self) -> float:
+        return self.rows / max(1, self.total_rows)
+
+    def describe(self) -> str:
+        return f"prefix({self.rows}/{self.total_rows}r)"
+
+
+@dataclasses.dataclass(frozen=True)
 class StreamPass:
     """One tile-streaming pallas pass over a slice of a fusion group."""
     ops: Tuple[str, ...]
@@ -307,6 +333,9 @@ class StreamPass:
     tile_rows: int                  # rows per grid step (divides ``rows``)
     resident: Tuple[str, ...]       # operands held in VMEM across all tiles
     reductions: Tuple[str, ...]     # rank-0 accumulators in this pass
+    # fractional residency of spmv operands (overbooked pins): members of
+    # ``resident`` named here hold only their row prefix in VMEM
+    slices: Tuple[ResidentSlice, ...] = ()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -324,7 +353,8 @@ class GroupKernel:
                 res = f" res={'+'.join(p.resident)}" if p.resident else ""
                 red = f" acc={'+'.join(p.reductions)}" if p.reductions \
                     else ""
-                bits.append(f"{p.rows}r/{p.tile_rows}t{res}{red}")
+                part = "".join(f" {sl.describe()}" for sl in p.slices)
+                bits.append(f"{p.rows}r/{p.tile_rows}t{res}{red}{part}")
             tag = " | ".join(bits)
             n = len(self.passes)
             label = ("pallas-spmv" if self.kind == "spmv-stream"
@@ -353,14 +383,20 @@ def _pick_tile_rows(rows: int, per_row_bytes: int, resident_bytes: int,
                 if t <= rows and rows % t == 0)
 
 
-def select_group_kernels(graph: OpGraph, groups, explicit_bytes: int
-                         ) -> Tuple[GroupKernel, ...]:
+def select_group_kernels(graph: OpGraph, groups, explicit_bytes: int,
+                         partial=None) -> Tuple[GroupKernel, ...]:
     """Pick a kernel shape for every fusion group of a frontend plan.
 
     Pure graph-level classification (shapes + op specs); the expression
     semantics needed to *execute* each shape live in ``repro.exec``.
+
+    ``partial`` maps tensor names to
+    :class:`~repro.core.schedule.PartialPin` records (an overbooked pin
+    set's ``.partial``): spmv operands named there carry a
+    :class:`ResidentSlice` on their pass instead of the whole-operand
+    residency assumption.
     """
-    return tuple(_select_one(graph, list(g), explicit_bytes)
+    return tuple(_select_one(graph, list(g), explicit_bytes, partial)
                  for g in groups)
 
 
@@ -416,7 +452,8 @@ def _segment_group(graph: OpGraph, group) -> list:
     return segments
 
 
-def _select_one(graph: OpGraph, group, explicit_bytes: int) -> GroupKernel:
+def _select_one(graph: OpGraph, group, explicit_bytes: int,
+                partial=None) -> GroupKernel:
     ops = [graph.ops[o] for o in group]
     gops = tuple(group)
 
@@ -437,7 +474,7 @@ def _select_one(graph: OpGraph, group, explicit_bytes: int) -> GroupKernel:
 
     passes = []
     for seg in _segment_group(graph, group):
-        sp = _classify_pass(graph, seg, explicit_bytes)
+        sp = _classify_pass(graph, seg, explicit_bytes, partial)
         if isinstance(sp, str):                    # rejection reason
             return GroupKernel(gops, "jnp", reason=sp)
         passes.append(sp)
@@ -446,14 +483,16 @@ def _select_one(graph: OpGraph, group, explicit_bytes: int) -> GroupKernel:
     return GroupKernel(gops, kind, passes=tuple(passes))
 
 
-def _classify_pass(graph: OpGraph, seg, explicit_bytes: int):
+def _classify_pass(graph: OpGraph, seg, explicit_bytes: int, partial=None):
     """One segment -> :class:`StreamPass`, or a rejection-reason string."""
+    partial = partial or {}
     ops = [graph.ops[o] for o in seg]
     produced = {op.output for op in ops}
     rows = None
     per_row = 0
     resident = []
     reductions = []
+    slices = []
     streamed_seen = set()
 
     def _stream(tname) -> bool:
@@ -488,8 +527,10 @@ def _classify_pass(graph: OpGraph, seg, explicit_bytes: int):
                 resident.append(op.inputs[rhs])
         elif op.spec == "spmv":
             # CSR SpMV: the output vector streams row tiles; the operand
-            # triple and the gathered x are held whole (resident) — rows
-            # are ragged and column access is data-dependent
+            # triple and the gathered x are held resident — rows are
+            # ragged and column access is data-dependent.  An overbooked
+            # pin relaxes this to a resident row *prefix* (ResidentSlice)
+            # with tail tiles streaming their CSR slices per grid step.
             if any(t in produced for t in op.inputs):
                 return f"{op.name}: spmv operand produced in-pass"
             if not _stream(op.output):
@@ -497,6 +538,15 @@ def _classify_pass(graph: OpGraph, seg, explicit_bytes: int):
             for t in op.inputs:
                 if t not in resident:
                     resident.append(t)
+            part = tuple(t for t in op.inputs if t in partial)
+            if part:
+                pp = partial[part[0]]
+                sl = ResidentSlice(tensors=part, rows=pp.rows,
+                                   total_rows=pp.total_rows,
+                                   entries=pp.entries,
+                                   total_entries=pp.total_entries)
+                if sl not in slices:
+                    slices.append(sl)
         elif op.spec == "reduce":
             if any(len(graph.tensors[t].shape) != 1 for t in op.inputs):
                 return f"{op.name}: non-vector reduction"
@@ -519,11 +569,14 @@ def _classify_pass(graph: OpGraph, seg, explicit_bytes: int):
     if rows is None:                # nothing streams: scalar-only group
         return "scalar-only group"
 
-    res_bytes = sum(graph.tensors[t].bytes for t in resident)
+    part_names = {t for sl in slices for t in sl.tensors}
+    res_bytes = sum(partial[t].resident_bytes if t in part_names
+                    else graph.tensors[t].bytes for t in resident)
     tile = _pick_tile_rows(rows, per_row, res_bytes,
                            max(explicit_bytes, 1 << 20))
     return StreamPass(ops=tuple(seg), rows=rows, tile_rows=tile,
-                      resident=tuple(resident), reductions=tuple(reductions))
+                      resident=tuple(resident), reductions=tuple(reductions),
+                      slices=tuple(slices))
 
 
 # ---------------------------------------------------------------------------
@@ -564,6 +617,8 @@ class ExecUnit:
             extra = f" {self.sp.rows}r/{self.sp.tile_rows}t"
             if self.sp.resident:
                 extra += f" res={'+'.join(self.sp.resident)}"
+            for sl in self.sp.slices:
+                extra += f" {sl.describe()}"
         if self.fused > 1:
             extra += f" (fused x{self.fused})"
         return f"{self.kind}[{'+'.join(self.ops)}]{extra}"
@@ -634,8 +689,8 @@ def _merge_candidate(graph: OpGraph, unit: ExecUnit) -> bool:
                for o in unit.ops)
 
 
-def fuse_units(graph: OpGraph, units, explicit_bytes: int
-               ) -> Tuple[ExecUnit, ...]:
+def fuse_units(graph: OpGraph, units, explicit_bytes: int,
+               partial=None) -> Tuple[ExecUnit, ...]:
     """The cross-pass residency planner: greedily merge adjacent units into
     one streaming pass wherever re-segmentation proves no value has to
     materialize at the old boundary.  Merged units stream each operand once
@@ -649,7 +704,7 @@ def fuse_units(graph: OpGraph, units, explicit_bytes: int
             ops = list(prev.ops) + list(unit.ops)
             segs = _segment_group(graph, ops)
             if len(segs) == 1:
-                sp = _classify_pass(graph, segs[0], explicit_bytes)
+                sp = _classify_pass(graph, segs[0], explicit_bytes, partial)
                 if isinstance(sp, StreamPass):
                     fused[-1] = ExecUnit(tuple(ops), "stream", sp,
                                          prev.groups + unit.groups,
@@ -851,13 +906,15 @@ class ExecPlan:
 
 
 def plan_execution(graph: OpGraph, kernels, explicit_bytes: int,
-                   program=None) -> ExecPlan:
+                   program=None, partial=None) -> ExecPlan:
     """Units → residency fusion → rolled-loop detection, in that order.
     ``program`` (the frontend expression DAG) is optional; without it the
-    plan is straight-line."""
+    plan is straight-line.  ``partial`` carries the overbooked pin set's
+    per-tensor :class:`~repro.core.schedule.PartialPin` records so merged
+    passes keep their :class:`ResidentSlice` annotations."""
     units = flatten_units(kernels)
     n_pre = len(units)
-    fused = fuse_units(graph, units, explicit_bytes)
+    fused = fuse_units(graph, units, explicit_bytes, partial)
     roll = detect_rolled_loop(program, fused)
     return ExecPlan(units=fused, roll=roll, spans=resident_spans(fused),
                     n_prefuse=n_pre)

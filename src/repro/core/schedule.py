@@ -31,6 +31,36 @@ from .reuse import ReuseAnalysis
 _MIN_TILE_ROWS = 8          # TPU sublane granularity
 
 
+@dataclasses.dataclass(frozen=True)
+class PartialPin:
+    """Resident row-prefix of one member tensor of an overbooked sparse
+    operand: rows ``[0, rows)`` of the operand stay in the explicit
+    region, the remaining ``total_rows - rows`` stream per pass."""
+    rows: int                # resident (indptr-aligned) row prefix
+    total_rows: int
+    entries: int             # nnz entries inside the resident prefix
+    total_entries: int
+    resident_bytes: int      # this member's resident prefix bytes
+    total_bytes: int         # this member's full bytes
+
+    @property
+    def frac(self) -> float:
+        return self.rows / max(1, self.total_rows)
+
+
+class PinSet(dict):
+    """Pin spans (``{tensor: (first_group, last_group)}``) plus optional
+    per-tensor partial-residency info for overbooked sparse operands.
+
+    Behaves exactly like the plain dict it always was — every consumer
+    that only cares about spans keeps working; partial-aware layers read
+    ``getattr(pins, "partial", {})``."""
+
+    def __init__(self, *args, **kwargs):
+        super().__init__(*args, **kwargs)
+        self.partial: Dict[str, PartialPin] = {}
+
+
 @dataclasses.dataclass
 class Schedule:
     order: List[str]
@@ -55,6 +85,8 @@ class CoDesignResult:
     best: EvaluatedSchedule
     baselines: Dict[str, EvaluatedSchedule]
     split_sweep: Dict[float, Metrics]
+    #: the overbook fraction the search ran with (0.0 = all-or-nothing)
+    overbook: float = 0.0
 
     def speedup(self, baseline: str = "seq-implicit") -> float:
         return self.best.metrics.speedup_over(self.baselines[baseline].metrics)
@@ -193,9 +225,82 @@ def sparse_operand_groups(graph: OpGraph) -> List[Tuple[str, ...]]:
     return groups
 
 
+def _operand_cum_entries(graph: OpGraph, grp: Sequence[str]) -> List[int]:
+    """Cumulative nnz per row prefix of a CSR triple: ``cum[r]`` = stored
+    entries in rows ``[0, r)``.  Exact when the frontend recorded the
+    pattern metadata on the sub-leaves; uniform apportionment otherwise.
+    """
+    by_role = {graph.tensors[t].meta_get("role"): graph.tensors[t]
+               for t in grp}
+    ip = by_role.get("indptr", graph.tensors[grp[0]])
+    ix = by_role.get("indices", graph.tensors[grp[1]])
+    n = int(ip.shape[0]) - 1
+    total = int(ix.shape[0])
+    pattern = ip.meta_get("pattern")
+    if pattern is not None:
+        try:
+            from ..frontends.sparse import row_counts
+            kw = {k: ip.meta_get(k) for k in ("density", "bandwidth")
+                  if ip.meta_get(k) is not None}
+            counts = row_counts(pattern, n, **kw)
+            cum = [0]
+            for c in counts:
+                cum.append(cum[-1] + int(c))
+            if cum[-1] == total:
+                return cum
+        except (ImportError, ValueError):
+            pass
+    # no (usable) pattern metadata: apportion entries uniformly over rows
+    return [total * r // n for r in range(n + 1)]
+
+
+def _prefix_plan(graph: OpGraph, grp: Sequence[str], explicit_bytes: int,
+                 fits) -> "Dict[str, PartialPin] | None":
+    """Largest indptr-aligned row prefix of the triple that fits both the
+    capacity and the pin timeline (``fits(nbytes)``), as per-member
+    :class:`PartialPin` records — or None when not even one row fits.
+
+    The full ``indptr`` stays resident (tail tiles need row offsets too,
+    and it is O(n) small); ``indices``/``data`` keep their first
+    ``cum[r]`` entries resident and stream the tail per pass.
+    """
+    roles = ("indptr", "indices", "data")
+    by_role = dict(zip(roles, (graph.tensors[t] for t in grp)))
+    for t in grp:                       # metadata roles win over position
+        spec = graph.tensors[t]
+        if spec.meta_get("role") in roles:
+            by_role[spec.meta_get("role")] = spec
+    ip, ix, dv = by_role["indptr"], by_role["indices"], by_role["data"]
+    cum = _operand_cum_entries(graph, grp)
+    n = len(cum) - 1
+    per_entry = ix.dtype_bytes + dv.dtype_bytes
+
+    def prefix_bytes(r: int) -> int:
+        return ip.bytes + cum[r] * per_entry
+
+    # prefix_bytes is monotone in r and fits() monotone in nbytes, so the
+    # largest feasible prefix binary-searches
+    lo, hi, best = 1, n - 1, 0
+    while lo <= hi:
+        mid = (lo + hi) // 2
+        b = prefix_bytes(mid)
+        if b <= explicit_bytes and fits(b):
+            best, lo = mid, mid + 1
+        else:
+            hi = mid - 1
+    if best < 1 or cum[best] < 1:
+        return None
+    r, e = best, cum[best]
+    return {
+        ip.name: PartialPin(r, n, e, cum[n], ip.bytes, ip.bytes),
+        ix.name: PartialPin(r, n, e, cum[n], e * ix.dtype_bytes, ix.bytes),
+        dv.name: PartialPin(r, n, e, cum[n], e * dv.dtype_bytes, dv.bytes),
+    }
+
+
 def choose_pins(graph: OpGraph, groups: Sequence[Sequence[str]],
-                analysis: ReuseAnalysis, explicit_bytes: int
-                ) -> Dict[str, Tuple[int, int]]:
+                analysis: ReuseAnalysis, explicit_bytes: int,
+                overbook: float = 0.0) -> Dict[str, Tuple[int, int]]:
     """Greedy pinning under a liveness-aware capacity timeline.
 
     Two candidate orderings are tried and the statically-better pin set is
@@ -206,10 +311,18 @@ def choose_pins(graph: OpGraph, groups: Sequence[Sequence[str]],
     first blocks the exact fit).  Ties keep the density set.
 
     Sparse operands pin *density-aware*: the CSR sub-leaf triple of one
-    operand (:func:`sparse_operand_groups`) is an all-or-nothing unit
-    whose combined **nnz footprint** is what must fit — so a sparse ``A``
-    pins whenever its stored bytes fit capacity, even when its dense
-    ``n²`` silhouette never would, and never pins partially.
+    operand (:func:`sparse_operand_groups`) is a pin unit whose combined
+    **nnz footprint** is what must fit — so a sparse ``A`` pins whenever
+    its stored bytes fit capacity, even when its dense ``n²`` silhouette
+    never would.
+
+    With ``overbook > 0`` the unit is no longer all-or-nothing: a triple
+    whose footprint exceeds the explicit region by at most that fraction
+    (``total <= explicit_bytes * (1 + overbook)``) pins the largest
+    indptr-aligned **row prefix** that truly fits, and the spill tail
+    streams per pass (recorded in the returned :class:`PinSet`'s
+    ``partial`` map).  ``overbook=0`` reproduces the all-or-nothing
+    behavior bit-for-bit.
     """
     gi = _group_index(groups)
     member_of: Dict[str, Tuple[str, ...]] = {}
@@ -251,7 +364,7 @@ def choose_pins(graph: OpGraph, groups: Sequence[Sequence[str]],
             timeline[min(last, n - 1) + 1] -= nbytes
             pins[name] = (first, last)
 
-        pins: Dict[str, Tuple[int, int]] = {}
+        pins: PinSet = PinSet()
         saved = 0
         decided: Dict[Tuple[str, ...], bool] = {}
         for cand in candidates:
@@ -259,8 +372,9 @@ def choose_pins(graph: OpGraph, groups: Sequence[Sequence[str]],
                 continue
             grp = member_of.get(cand.name)
             if grp is not None:
-                # density-aware, all-or-nothing: the operand's combined
-                # nnz footprint must fit over the union of member spans
+                # density-aware: the operand's combined nnz footprint must
+                # fit over the union of member spans (all-or-nothing at
+                # overbook=0; a row prefix inside the overbook window)
                 if grp in decided:
                     continue
                 members = [analysis.tensors[m] for m in grp]
@@ -269,11 +383,26 @@ def choose_pins(graph: OpGraph, groups: Sequence[Sequence[str]],
                 gf = min(a for a, _ in spans)
                 gl = max(b for _, b in spans)
                 ok = total <= explicit_bytes and fits(gf, gl, total)
-                decided[grp] = ok
                 if ok:
+                    decided[grp] = True
                     for m, (a, b) in zip(members, spans):
                         commit(m.name, a, b, graph.tensors[m.name].bytes)
                         saved += m.traffic_if_missed()
+                    continue
+                window = explicit_bytes + int(explicit_bytes * overbook)
+                plan = (_prefix_plan(graph, grp, explicit_bytes,
+                                     lambda nb: fits(gf, gl, nb))
+                        if overbook > 0 and total <= window else None)
+                decided[grp] = plan is not None
+                if plan is not None:
+                    for m, (a, b) in zip(members, spans):
+                        pp = plan[m.name]
+                        commit(m.name, a, b, pp.resident_bytes)
+                        pins.partial[m.name] = pp
+                        # the resident prefix captures that fraction of
+                        # the operand's would-be-missed traffic
+                        saved += int(m.traffic_if_missed()
+                                     * pp.resident_bytes / pp.total_bytes)
                 continue
             spec = graph.tensors[cand.name]
             if spec.bytes > explicit_bytes:

@@ -40,6 +40,12 @@ _SEARCH_S = obs.registry().histogram(
     unit="s")
 _POINTS = obs.registry().counter(
     "codesign.points", "design points streamed through the search pipeline")
+_PINS = obs.registry().counter(
+    "codesign.pins", "sparse-operand pin decisions of winning schedules, "
+    "by outcome label: full | prefix | streamed")
+_OVERBOOK_FRAC = obs.registry().histogram(
+    "codesign.overbook_frac", "resident row fraction of prefix-pinned "
+    "sparse operands in winning schedules")
 
 
 # --------------------------------------------------------------------------
@@ -71,6 +77,10 @@ class SearchContext:
     capacity_bytes: int = 0
     max_orders: int = 16
     splits: Sequence[float] = DEFAULT_SPLITS
+    # allow sparse pins to exceed the explicit region by this fraction of
+    # its capacity, pinning an indptr-aligned row prefix and streaming the
+    # spill tail (0.0 = all-or-nothing pins, the pre-overbook behaviour)
+    overbook: float = 0.0
     # analyze(graph, order) is pure in (graph, order): cache it per order so
     # the split sweep doesn't recompute the same reuse analysis nine times.
     _analysis_cache: Dict[Tuple[str, ...], ReuseAnalysis] = \
@@ -277,7 +287,19 @@ class PinPass(Pass):
             if pt.pin and pt.config.explicit_bytes > 0:
                 analysis = ctx.analysis_for(pt.order)
                 pins = choose_pins(ctx.graph, pt.groups, analysis,
-                                   pt.config.explicit_bytes)
+                                   pt.config.explicit_bytes,
+                                   overbook=ctx.overbook)
+                if getattr(pins, "partial", None):
+                    # Overbooking is speculative: yield the conservative
+                    # all-or-nothing pin set FIRST so the strict-< best
+                    # comparison keeps it on ties — EvaluatePass rejects
+                    # the overbooked point whenever its per-pass streamed
+                    # tail traffic dominates the prefix's captured reuse.
+                    conservative = choose_pins(ctx.graph, pt.groups,
+                                               analysis,
+                                               pt.config.explicit_bytes)
+                    yield dataclasses.replace(pt, analysis=analysis,
+                                              pins=conservative)
             else:
                 analysis, pins = None, {}
             yield dataclasses.replace(pt, analysis=analysis, pins=pins)
@@ -353,6 +375,29 @@ def _timed_pipeline(ctx: SearchContext, passes: Sequence[Pass]):
 # the co-design driver
 # --------------------------------------------------------------------------
 
+def _pin_outcomes(graph: OpGraph, pins) -> List[Tuple[str, str, float]]:
+    """Classify each sparse CSR triple under a pin set.
+
+    Returns ``(operand, outcome, resident_frac)`` rows where outcome is
+    ``full`` (whole triple pinned), ``prefix`` (overbooked: row prefix
+    resident, tail streamed) or ``streamed`` (nothing pinned).
+    """
+    from .schedule import sparse_operand_groups    # late: import cycle
+    partial = dict(getattr(pins, "partial", None) or {})
+    spans = dict(pins or {})
+    out: List[Tuple[str, str, float]] = []
+    for grp in sparse_operand_groups(graph):
+        base = grp[0].rsplit(".", 1)[0]
+        pp = next((partial[m] for m in grp if m in partial), None)
+        if pp is not None:
+            out.append((base, "prefix", pp.frac))
+        elif all(m in spans for m in grp):
+            out.append((base, "full", 1.0))
+        else:
+            out.append((base, "streamed", 0.0))
+    return out
+
+
 def _to_evaluated(pt: SearchPoint):
     from .schedule import EvaluatedSchedule, Schedule
     return EvaluatedSchedule(
@@ -375,6 +420,7 @@ def run_codesign(graph: OpGraph, *, capacity_bytes: Optional[int] = None,
                  hw: HardwareModel = V5E, max_orders: int = 16,
                  strategy="default",
                  splits: Sequence[float] = DEFAULT_SPLITS,
+                 overbook: float = 0.0,
                  natural_analysis: Optional[ReuseAnalysis] = None):
     """Joint schedule × buffer-split search. Returns best + baselines.
 
@@ -382,15 +428,26 @@ def run_codesign(graph: OpGraph, *, capacity_bytes: Optional[int] = None,
     the removed 0.2-era ``co_design``).  ``natural_analysis`` (from a
     prior analyze() stage) pre-seeds the per-order analysis cache — analyze
     is pure in (graph, order), so seeding cannot change results.
+
+    ``overbook`` lets sparse pins exceed the explicit region by that
+    fraction of its capacity: the operand's indptr-aligned row prefix is
+    pinned and the spill tail streamed per pass.  Both the conservative
+    and the overbooked pin sets compete in the search, so overbooking is
+    only kept when the cost model says the prefix's reuse beats the tail's
+    streamed traffic.  ``overbook=0`` is bit-identical to the historical
+    all-or-nothing search.
     """
     from .schedule import CoDesignResult
     graph.validate()
+    if overbook < 0:
+        raise ValueError(f"overbook must be >= 0, got {overbook}")
     splits = list(splits)    # normalize once: a one-shot iterable must not
     if not splits:           # be consumed by the guard before the sweep
         raise ValueError("splits must be a non-empty sequence of fractions")
     ctx = SearchContext(graph=graph, hw=hw,
                         capacity_bytes=capacity_bytes or hw.vmem_bytes,
-                        max_orders=max_orders, splits=splits)
+                        max_orders=max_orders, splits=splits,
+                        overbook=overbook)
     if natural_analysis is not None:
         ctx._analysis_cache[tuple(natural_analysis.order)] = natural_analysis
 
@@ -419,14 +476,24 @@ def run_codesign(graph: OpGraph, *, capacity_bytes: Optional[int] = None,
                     < (best.metrics.time_s, best.metrics.energy_j)):
                 best = pt
         sp.annotate(points=n_points)
+        outcomes = (_pin_outcomes(graph, best.pins)
+                    if best is not None else [])
         # per-pass self-time as synthetic consecutive child spans: the
         # stages stream lazily, so real intervals interleave per point —
         # aggregate self-time is the honest per-pass number.
         cursor, prev = start, 0.0
         for pass_name, timer in timers:
             self_s = max(timer.elapsed - prev, 0.0)
+            meta = {}
+            if pass_name == "pin" and outcomes:
+                # annotate the pin span with the winning pin set:
+                # "A=prefix(0.77)+x=full" style, one term per operand
+                meta["pins"] = "+".join(
+                    f"{name}={kind}" if kind != "prefix"
+                    else f"{name}=prefix({frac:.2f})"
+                    for name, kind, frac in outcomes)
             tracer.record(f"codesign.pass.{pass_name}", cursor, self_s,
-                          points=timer.count)
+                          points=timer.count, **meta)
             cursor += self_s
             prev = timer.elapsed
     _SEARCH_S.observe(time.perf_counter() - t_search, strategy=strat_name)
@@ -435,6 +502,10 @@ def run_codesign(graph: OpGraph, *, capacity_bytes: Optional[int] = None,
         raise ValueError(f"search produced no candidates: strategy "
                          f"{strat_name!r} yielded no "
                          "orders for this graph")
+    for _name, kind, frac in outcomes:
+        _PINS.inc(outcome=kind)
+        if kind == "prefix":
+            _OVERBOOK_FRAC.observe(frac)
 
     nat = graph.topo_order()
     with obs.span("codesign.baselines"):
@@ -451,4 +522,4 @@ def run_codesign(graph: OpGraph, *, capacity_bytes: Optional[int] = None,
             "fused-only": evaluate_point(ctx, nat, 1.0, fuse=True, pin=True),
         }
     return CoDesignResult(best=_to_evaluated(best), baselines=baselines,
-                          split_sweep=split_sweep)
+                          split_sweep=split_sweep, overbook=overbook)

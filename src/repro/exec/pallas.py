@@ -21,6 +21,12 @@ kernels, no per-call ``result_type``/``asarray`` conversion.  The pieces:
   plus the gathered ``x`` — is VMEM-resident across every tile (constant
   index maps): rows are ragged and column access is data-dependent, so
   only the output vector streams.
+* Prefix-sliced SpMV operands (overbooked pins — the pass carries a
+  ``core.lowering.ResidentSlice``) instead use a padded per-tile CSR
+  layout: the resident row-prefix blocks are held in VMEM across every
+  grid step via constant index maps, while each spill-tail tile streams
+  only its own ``(1, M)`` entry slice through the grid — per-step work is
+  ``O(M)`` instead of a masked scan over all ``nnz`` entries.
 * ``block`` units hold whole arrays as single blocks (stencil halos).
 * ``jnp`` units — irregular gathers, >2-operand einsums — inline the
   reference rules straight into the trace.
@@ -181,6 +187,19 @@ class _StreamCall:
         # an operand share one array
         self.derived: Dict[str, Tuple[str, int]] = {}
         self._spmv_rows: Dict[str, str] = {}
+        # fractional residency (overbooked pins): prefix-sliced operands
+        # are re-arranged into padded per-tile CSR blocks — resident
+        # prefix blocks plus streamed spill-tail blocks (``_arrange``)
+        self.arranged: Dict[str, Callable] = {}
+        self.tail_in: List[str] = []
+        self.tail_off: Dict[str, int] = {}
+        self.extra_in: List[str] = []
+        self._sliced: Dict[str, Dict[str, Any]] = {}
+        self._arr_cache: Dict[str, Optional[Dict[str, Any]]] = {}
+        slice_of = {}
+        for sl in getattr(sp, "slices", ()) or ():
+            for t in sl.tensors:
+                slice_of[t] = sl
 
         def _want(name: str, bucket: List[str]):
             if name not in produced and name not in bucket:
@@ -189,6 +208,23 @@ class _StreamCall:
         for nd in self.nodes:
             cls = self.classes[nd.name]
             if cls == "tiled" and nd.op == "spmv":
+                sl = slice_of.get(nd.inputs[0])
+                am = self._arrange(program, nd, sl) if sl is not None \
+                    else None
+                if am is not None:
+                    self._sliced[nd.name] = am
+                    _want(nd.inputs[3], res_in)   # gathered x: resident
+                    for t in nd.inputs[:3]:
+                        # raw CSR leaves feed the arrangement but never
+                        # enter the kernel themselves
+                        if t not in self.extra_in:
+                            self.extra_in.append(t)
+                    for n in am["pre"]:
+                        _want(n, res_in)
+                    for n in am["tail"]:
+                        if n not in self.tail_in:
+                            self.tail_in.append(n)
+                    continue
                 for t in nd.inputs:         # CSR triple + x: all resident
                     _want(t, res_in)
                 indptr, indices = nd.inputs[0], nd.inputs[1]
@@ -211,6 +247,12 @@ class _StreamCall:
                 for t in nd.inputs:
                     _want(t, scalar_in)
 
+        # sliced operands' raw CSR leaves were replaced by arranged
+        # blocks; only the arrangement (host side) reads them — keeping
+        # the full arrays kernel-resident would defeat the split
+        for t in self.extra_in:
+            if t in res_in:
+                res_in.remove(t)
         self.stream_in, self.res_in, self.scalar_in = \
             stream_in, res_in, scalar_in
         # reductions always need an output block to accumulate into;
@@ -228,13 +270,109 @@ class _StreamCall:
 
     @property
     def in_names(self) -> List[str]:
-        """External inputs only (derived row-id arrays are internal)."""
-        return [n for n in self.stream_in + self.res_in + self.scalar_in
-                if n not in self.derived]
+        """External inputs only (derived row-id and arranged per-tile
+        arrays are internal; ``extra_in`` raw CSR leaves feed the
+        arrangement without entering the kernel)."""
+        names = [n for n in self.stream_in + self.tail_in + self.res_in
+                 + self.scalar_in
+                 if n not in self.derived and n not in self.arranged]
+        for n in self.extra_in:
+            if n not in names:
+                names.append(n)
+        return names
+
+    # -- fractional residency (overbooked pins) -------------------------
+    def _arrange(self, program, nd, sl) -> Optional[Dict[str, Any]]:
+        """Padded per-tile CSR layout for a prefix-sliced spmv operand.
+
+        Tile boundaries are row boundaries, so tile ``t`` owns the entry
+        range ``cum[t*tr] .. cum[(t+1)*tr]`` — rows never split across
+        tiles and per-row summation order matches the reference rule.
+        The gather/mask matrices are *static* (numpy, from the operand's
+        build-time ``row_counts`` pattern meta), so arranging at dispatch
+        is two fixed-shape gathers; the searchsorted row-id pass of the
+        whole-resident kernel disappears entirely.  Returns ``None`` when
+        the static pattern meta is unavailable or inconsistent — the op
+        then falls back to the whole-resident kernel (correct, unsplit).
+        """
+        import numpy as np
+        ipn, ixn, dvn, _x = nd.inputs
+        if ipn in self._arr_cache:
+            return self._arr_cache[ipn]
+        self._arr_cache[ipn] = None          # default for early bail-outs
+        tr, n = self.sp.tile_rows, self.sp.rows
+        nnz = self.shapes[ixn][0]
+        leaf = program.nodes.get(ipn)
+        pattern = leaf.param("pattern") if leaf is not None else None
+        if n % tr or nnz <= 0 or pattern is None:
+            return None
+        from ..frontends.sparse import row_counts
+        try:
+            counts = row_counts(pattern, n, density=leaf.param("density"),
+                                bandwidth=leaf.param("bandwidth"))
+        except (TypeError, ValueError):
+            return None
+        cum = np.concatenate(([0], np.cumsum(counts)))
+        if int(cum[-1]) != nnz:
+            return None
+        n_tiles = n // tr
+        bounds = cum[::tr]                   # row-aligned tile starts
+        tcnt = bounds[1:] - bounds[:-1]
+        budget = -(-max(int(tcnt.max()), 1) // 8) * 8   # lanes % 8 == 0
+        pos = bounds[:-1, None] + np.arange(budget)[None, :]
+        valid = np.arange(budget)[None, :] < tcnt[:, None]
+        gat = np.minimum(pos, nnz - 1).astype(np.int32)
+        rows = np.searchsorted(cum, np.minimum(pos, nnz - 1),
+                               side="right") - 1
+        trow = np.where(valid, rows - (np.arange(n_tiles) * tr)[:, None],
+                        0).astype(np.int32)
+        # whole tiles covered by the resident row prefix; the boundary
+        # tile (partially resident) and everything after it stream
+        p = min(sl.rows // tr, n_tiles - 1)
+
+        def _vals(src, g, v, to_compute_dtype):
+            def build(env, dt, src=src, g=g, v=v,
+                      cast=to_compute_dtype):
+                import jax.numpy as jnp
+                a = jnp.asarray(env[src])
+                if cast:
+                    a = jnp.asarray(a, dt)
+                return jnp.where(jnp.asarray(v), a[jnp.asarray(g)],
+                                 jnp.zeros((), a.dtype))
+            return build
+
+        def _const(r):
+            def build(env, dt, r=r):
+                import jax.numpy as jnp
+                return jnp.asarray(r)
+            return build
+
+        base = ipn[:-len(".indptr")] if ipn.endswith(".indptr") else ipn
+        am: Dict[str, Any] = {"p": p, "budget": budget,
+                              "n_tiles": n_tiles, "pre": (), "tail": ()}
+        if p > 0:
+            pre = (f"{base}@pd", f"{base}@pc", f"{base}@pr")
+            self.arranged[pre[0]] = _vals(dvn, gat[:p], valid[:p], True)
+            self.arranged[pre[1]] = _vals(ixn, gat[:p], valid[:p], False)
+            self.arranged[pre[2]] = _const(trow[:p])
+            for nm in pre:
+                self.shapes[nm] = (p, budget)
+            am["pre"] = pre
+        tail = (f"{base}@td", f"{base}@tc", f"{base}@tr")
+        self.arranged[tail[0]] = _vals(dvn, gat[p:], valid[p:], True)
+        self.arranged[tail[1]] = _vals(ixn, gat[p:], valid[p:], False)
+        self.arranged[tail[2]] = _const(trow[p:])
+        for nm in tail:
+            self.shapes[nm] = (n_tiles - p, budget)
+            self.tail_off[nm] = p
+        am["tail"] = tail
+        self._arr_cache[ipn] = am
+        return am
 
     # -- pallas plumbing ------------------------------------------------
     def _specs(self, dtype):
         import jax
+        import jax.numpy as jnp
         from jax.experimental import pallas as pl
         tr = self.sp.tile_rows
 
@@ -248,7 +386,18 @@ class _StreamCall:
             shape = shape or (1,)            # rank-0 passed as (1,)
             return pl.BlockSpec(shape, lambda i: (0,) * len(shape))
 
+        def tail_spec(shape, off):
+            # one padded spill-tail tile per step; prefix steps (i < off)
+            # clamp to block 0 — loaded but unread (the kernel's selects
+            # pick the resident prefix block instead)
+            return pl.BlockSpec(
+                (1,) + shape[1:],
+                lambda i, off=off: (jnp.maximum(i - off, 0),)
+                + (0,) * (len(shape) - 1))
+
         in_specs = ([stream_spec(self.shapes[n]) for n in self.stream_in]
+                    + [tail_spec(self.shapes[n], self.tail_off[n])
+                       for n in self.tail_in]
                     + [full_spec(self.shapes[n]) for n in self.res_in]
                     + [full_spec(()) for n in self.scalar_in])
         out_specs, out_shape = [], []
@@ -267,8 +416,8 @@ class _StreamCall:
         n_tiles = self.sp.rows // self.sp.tile_rows
         tile_rows = self.sp.tile_rows
         nodes, shapes, classes = self.nodes, self.shapes, self.classes
-        n_stream, n_res = len(self.stream_in), len(self.res_in)
-        n_scal = len(self.scalar_in)
+        n_stream, n_tail = len(self.stream_in), len(self.tail_in)
+        n_res, n_scal = len(self.res_in), len(self.scalar_in)
         scalar_outs = self.red_out + self.sca_out
         stream_out_set = set(self.stream_out)
         sca_out_set = set(self.sca_out)
@@ -279,12 +428,16 @@ class _StreamCall:
             i = pl.program_id(0)
             last = n_tiles - 1
             sref = dict(zip(self.stream_in, refs[:n_stream]))
-            rref = dict(zip(self.res_in, refs[n_stream:n_stream + n_res]))
+            tref = dict(zip(self.tail_in,
+                            refs[n_stream:n_stream + n_tail]))
+            rref = dict(zip(self.res_in,
+                            refs[n_stream + n_tail:
+                                 n_stream + n_tail + n_res]))
             cref = dict(zip(self.scalar_in,
-                            refs[n_stream + n_res:
-                                 n_stream + n_res + n_scal]))
+                            refs[n_stream + n_tail + n_res:
+                                 n_stream + n_tail + n_res + n_scal]))
             oref = dict(zip(scalar_outs + self.stream_out,
-                            refs[n_stream + n_res + n_scal:]))
+                            refs[n_stream + n_tail + n_res + n_scal:]))
             tiles: Dict[str, Any] = {}
             scal: Dict[str, Any] = {}
 
@@ -307,7 +460,11 @@ class _StreamCall:
                     scal[nd.name] = eval_node(
                         nd, [scv(t) for t in nd.inputs])
                 elif cls == "tiled":
-                    if nd.op == "spmv":
+                    if nd.op == "spmv" and nd.name in self._sliced:
+                        val = _spmv_sliced_tile(
+                            self._sliced[nd.name], tref, rref,
+                            rref[nd.inputs[3]][...], i, tile_rows, dtype)
+                    elif nd.op == "spmv":
                         val = _spmv_row_tile(
                             rref[self._spmv_rows[nd.name]][...],
                             rref[nd.inputs[1]][...],
@@ -369,6 +526,9 @@ class _StreamCall:
             call = self._built[dtype] = self._build(dtype)
 
         def arr(n):
+            b = self.arranged.get(n)
+            if b is not None:       # padded per-tile CSR blocks
+                return b(env, dtype)
             d = self.derived.get(n)
             if d is not None:       # per-entry CSR row ids, from indptr
                 indptr, nnz = d
@@ -379,6 +539,7 @@ class _StreamCall:
             return jnp.asarray(v, dtype)
 
         args = ([arr(n) for n in self.stream_in]
+                + [arr(n) for n in self.tail_in]
                 + [arr(n) for n in self.res_in]
                 + [jnp.reshape(jnp.asarray(env[n], dtype), (1,))
                    for n in self.scalar_in])
@@ -415,6 +576,34 @@ def _spmv_row_tile(row_of, indices, data, x, row0, tile_rows, dtype):
     return jax.ops.segment_sum(
         jnp.where(in_tile, contrib, jnp.zeros((), dtype)),
         jnp.clip(local, 0, tile_rows - 1), num_segments=tile_rows)
+
+
+def _spmv_sliced_tile(am, tref, rref, x, i, tile_rows, dtype):
+    """CSR SpMV tile for a prefix-sliced (overbooked-pin) operand.
+
+    Entries live in a padded per-tile layout ``(tiles, budget)``: the
+    resident row-prefix blocks sit in VMEM across every grid step
+    (constant index maps, dynamically indexed by the step id) while
+    spill-tail blocks stream one ``(1, budget)`` slice per step.  Tile
+    boundaries are row boundaries, so per-row summation order matches
+    the reference rule; padding carries ``data == 0`` and contributes
+    nothing.  Per-step work is ``O(budget)`` — the whole-resident
+    kernel's masked scan over all ``nnz`` entries never happens here.
+    """
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import pallas as pl
+    td, tc, tw = (tref[n][...][0] for n in am["tail"])
+    if am["pre"]:
+        j = jnp.minimum(i, am["p"] - 1)
+        pd, pc, pw = (pl.load(r_, (pl.dslice(j, 1), slice(None)))[0]
+                      for r_ in (rref[n] for n in am["pre"]))
+        use_pre = i < am["p"]
+        td = jnp.where(use_pre, pd, td)
+        tc = jnp.where(use_pre, pc, tc)
+        tw = jnp.where(use_pre, pw, tw)
+    contrib = (td * jnp.take(x, tc, axis=0)).astype(dtype)
+    return jax.ops.segment_sum(contrib, tw, num_segments=tile_rows)
 
 
 def _accumulate(ref, part, i):

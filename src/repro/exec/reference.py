@@ -4,7 +4,11 @@ This is the bit-exact oracle every other backend is validated against.  It
 executes one op at a time at full-tensor granularity — the per-op rules in
 :func:`eval_node` define the semantics of every expression op, and because
 ops are pure, replaying a co-designed schedule order through the same rules
-must match natural-order evaluation bit-for-bit.
+must match natural-order evaluation bit-for-bit.  Buffer residency is a
+planning/execution concept that never reaches these rules: overbooked
+prefix pins (``core.lowering.ResidentSlice``) change how the pallas
+backend lays out a CSR operand, not what an spmv computes, so this
+backend stays the unchanged oracle for prefix-pinned plans too.
 
 Relocated from ``frontends/reference.py`` (which keeps the deterministic
 feed generator); ``repro.frontends`` re-exports :func:`evaluate` /

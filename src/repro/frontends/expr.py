@@ -498,7 +498,10 @@ class Program:
                 if nd.op == "input":
                     b.input(nname, nd.shape, dtype_bytes=nd.dtype_bytes)
                 elif nd.op == "operator":
-                    b.weight(nname, nd.shape, dtype_bytes=nd.dtype_bytes)
+                    # carry the leaf's params (CSR pattern metadata etc.)
+                    # so the pin search can reason about row structure
+                    b.weight(nname, nd.shape, dtype_bytes=nd.dtype_bytes,
+                             meta=nd.params)
                 else:
                     kind = (TensorKind.OUTPUT if nname in out_set
                             else TensorKind.INTERMEDIATE)

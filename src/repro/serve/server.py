@@ -11,6 +11,10 @@ latency for throughput:
 * ``max_wait_us`` — a batch also closes once its oldest request has waited
   this long, so a trickle of traffic is not stalled fishing for batchmates.
 
+``policy`` picks which bucket the worker drains next: ``oldest`` (default,
+longest-waiting head request) or ``round_robin`` (least-recently-served
+non-empty bucket — no bucket starves under sustained hot-bucket load).
+
 All JAX work happens on the one worker thread (routing, compiles and
 dispatches never race each other); ``submit`` only canonicalizes the
 bucket key — invalid requests raise in the caller, never poison the queue.
@@ -80,13 +84,27 @@ class SolveResult:
 class Server:
     """Batched, cached, concurrent plan serving over a ``PlanRouter``."""
 
+    #: bucket-scheduling policies: ``oldest`` serves the bucket whose head
+    #: request has waited longest (latency-greedy, can starve a cold
+    #: bucket under sustained hot-bucket load within one wait window);
+    #: ``round_robin`` serves the least-recently-served non-empty bucket,
+    #: so every bucket makes progress regardless of arrival rates.
+    POLICIES = ("oldest", "round_robin")
+
     def __init__(self, router: Optional[PlanRouter] = None, *,
                  max_batch_size: int = 16, max_wait_us: float = 2000.0,
-                 session=None, max_plans: int = 8, autostart: bool = True):
+                 session=None, max_plans: int = 8, autostart: bool = True,
+                 policy: str = "oldest"):
         if max_batch_size < 1:
             raise ValueError("max_batch_size must be >= 1")
         if max_wait_us < 0:
             raise ValueError("max_wait_us must be >= 0")
+        if policy not in self.POLICIES:
+            raise ValueError(f"unknown policy {policy!r}; "
+                             f"have {self.POLICIES}")
+        self.policy = policy
+        self._last_served: Dict[BucketKey, int] = {}
+        self._serve_seq = 0
         self.router = router if router is not None else \
             PlanRouter(session=session, max_plans=max_plans)
         self.max_batch_size = max_batch_size
@@ -241,9 +259,19 @@ class Server:
                     self._cv.wait()
                 if not self._pending and self._closing:
                     return
-                # serve the bucket whose head request has waited longest
-                key = min((k for k, d in self._pending.items() if d),
-                          key=lambda k: self._pending[k][0][2])
+                live = [k for k, d in self._pending.items() if d]
+                if self.policy == "round_robin":
+                    # least-recently-served non-empty bucket (never-served
+                    # sorts first); ties break oldest-head-first so the
+                    # first pass through fresh buckets is still fair
+                    key = min(live, key=lambda k: (
+                        self._last_served.get(k, -1),
+                        self._pending[k][0][2]))
+                else:
+                    # serve the bucket whose head request waited longest
+                    key = min(live, key=lambda k: self._pending[k][0][2])
+                self._serve_seq += 1
+                self._last_served[key] = self._serve_seq
                 deadline = self._pending[key][0][2] + max_wait_s
                 while (len(self._pending[key]) < self.max_batch_size
                        and not self._closing):

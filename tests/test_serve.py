@@ -323,6 +323,49 @@ class TestServer:
         (bucket,) = srv.stats()["buckets"].values()
         assert bucket["batches"] == 1
 
+    def test_round_robin_no_starvation(self, tmp_path):
+        """Two hot buckets + one cold bucket all make progress: under
+        ``policy="round_robin"`` the cold bucket is served within the
+        first scheduling cycle instead of waiting out both hot backlogs
+        (which is what ``oldest`` does when the hot requests were queued
+        first)."""
+        srv = Server(session=Session(cache_dir=tmp_path),
+                     max_batch_size=2, max_wait_us=0, autostart=False,
+                     policy="round_robin")
+        order, lock = [], threading.Lock()
+
+        def tag(label):
+            def cb(_f, label=label):
+                with lock:
+                    order.append(label)
+            return cb
+
+        futs = []
+        for s in range(6):                             # hot bucket 1
+            f = srv.submit(request("cg", n=64, iters=2, seed=s))
+            f.add_done_callback(tag("h1"))
+            futs.append(f)
+        for s in range(6):                             # hot bucket 2
+            f = srv.submit(request("cg", n=128, iters=2, seed=s))
+            f.add_done_callback(tag("h2"))
+            futs.append(f)
+        cold = srv.submit(request("cg_sparse", n=64, iters=2, seed=0))
+        cold.add_done_callback(tag("cold"))
+        futs.append(cold)
+        srv.start()
+        results = [f.result(timeout=300) for f in futs]
+        srv.close()
+        assert all(np.isfinite(r.residual) for r in results)
+        # one full cycle = one batch (2 requests) per hot bucket, then the
+        # cold one; under "oldest" the cold request would complete last
+        assert order.index("cold") <= 4, order
+        assert {"h1", "h2", "cold"} <= set(order[:5]), order
+
+    def test_policy_validation(self, tmp_path):
+        with pytest.raises(ValueError, match="unknown policy"):
+            Server(session=Session(cache_dir=tmp_path),
+                   autostart=False, policy="fifo")
+
     def test_execution_error_propagates_to_futures(self, tmp_path):
         srv = Server(session=Session(cache_dir=tmp_path), autostart=False)
         fut = srv.submit(request("cg", n=64, iters=2,
@@ -586,6 +629,26 @@ class TestBenchCompareMultiMetric:
 
         _, failures, _ = bc.compare(_dump(500.0, 9.0), base, **spec)
         assert len(failures) == 2                   # both gates fire
+
+    def test_failure_detail_carries_values_and_params(self):
+        """A tripped gate names the operating point: raw baseline vs
+        current values plus the row's capacity/density-class params."""
+        bc = _bench_compare()
+        base = _dump(1000.0, 5.0)
+        new = _dump(500.0, 5.0)
+        for d in (base, new):
+            d["TABLE 9"][0]["derived"].update(
+                {"density": 0.01, "capacity_kib": 1792, "overbook": 0.25})
+        base["TABLE 9"][0]["derived"]["overbook"] = 0.0
+        _, failures, _ = bc.compare(
+            new, base, backend="", max_regress=0.25,
+            metric="requests_per_s", higher_is_better=True)
+        assert len(failures) == 1
+        assert "baseline=1000" in failures[0]
+        assert "current=500" in failures[0]
+        assert "density=0.01" in failures[0]
+        assert "capacity_kib=1792" in failures[0]
+        assert "overbook=0.25 (baseline 0.0)" in failures[0]
 
     def test_single_metric_unchanged(self):
         bc = _bench_compare()

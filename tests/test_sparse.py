@@ -346,3 +346,74 @@ class TestDensityAwarePins:
         splan = sparse.analyze().codesign().lower()
         spins = splan.codesigned.best.schedule.pins
         assert {"A.indptr", "A.indices", "A.data"} <= set(spins)
+
+
+# ---------------------------------------------------------------------------
+# overbooked pins: fractional residency
+# ---------------------------------------------------------------------------
+
+class TestOverbookedPins:
+    def test_prefix_boundary(self):
+        """The fractional boundary: at the overbook window edge an
+        indptr-aligned row prefix pins; one byte below it the operand
+        streams entirely."""
+        g, csr_bytes = _two_spmv_graph()
+        an = analyze(g)
+        groups = [[o] for o in g.topo_order()]
+        edge = -(-csr_bytes * 4 // 5)        # ceil(csr_bytes / 1.25)
+        pins = choose_pins(g, groups, an, edge, overbook=0.25)
+        assert {"A.indptr", "A.indices", "A.data"} <= set(pins)
+        pp = pins.partial["A.data"]
+        assert 0 < pp.rows < pp.total_rows
+        assert pp.resident_bytes <= edge
+        counts = row_counts("banded", 64, bandwidth=2)
+        # prefix cut sits on an indptr row boundary, never mid-row
+        assert pp.entries == int(counts[: pp.rows].sum())
+        pins = choose_pins(g, groups, an, edge - 1, overbook=0.25)
+        assert not ({"A.indptr", "A.indices", "A.data"} & set(pins))
+        assert not pins.partial
+
+    def test_full_fit_never_prefixes(self):
+        g, csr_bytes = _two_spmv_graph()
+        pins = choose_pins(g, [[o] for o in g.topo_order()], analyze(g),
+                           csr_bytes, overbook=0.25)
+        assert {"A.indptr", "A.indices", "A.data"} <= set(pins)
+        assert not pins.partial
+
+    def test_overbook_zero_reproduces_all_or_nothing(self):
+        """``overbook=0`` must be bit-for-bit the pre-overbook rule."""
+        g, csr_bytes = _two_spmv_graph()
+        an = analyze(g)
+        groups = [[o] for o in g.topo_order()]
+        for budget in (csr_bytes, csr_bytes - 1,
+                       -(-csr_bytes * 4 // 5)):
+            base = choose_pins(g, groups, an, budget)
+            zero = choose_pins(g, groups, an, budget, overbook=0.0)
+            assert dict(zero) == dict(base)
+            assert not zero.partial and not base.partial
+
+    def test_session_prefix_pin_end_to_end(self, tmp_path):
+        """A winning prefix pin reaches explain(), the lowered kernels,
+        and the pallas backend — which stays parity-correct."""
+        sess = Session(cache_dir=tmp_path)
+        traced = sess.trace(workload="cg_sparse", n=64, iters=3,
+                            pattern="banded", bandwidth=2)
+        plan = traced.analyze().codesign(capacity_bytes=4500,
+                                         overbook=0.25).lower()
+        text = plan.explain()
+        assert "pinned=prefix(rows=" in text
+        assert "pin overbook" in text
+        assert any("prefix(" in gk.describe()
+                   for gk in plan.group_kernels)
+        feeds = make_feeds(traced.program, seed=3)
+        want = evaluate(traced.program, feeds)
+        ref = plan.run(feeds, backend="reference")
+        for k in want:                    # residency never touches numerics
+            np.testing.assert_array_equal(np.asarray(ref[k]),
+                                          np.asarray(want[k]), err_msg=k)
+        pal = plan.run(feeds, backend="pallas")
+        for k in want:
+            np.testing.assert_allclose(np.asarray(pal[k]),
+                                       np.asarray(want[k]),
+                                       rtol=RTOL32, atol=ATOL32,
+                                       err_msg=k)
