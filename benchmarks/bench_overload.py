@@ -1,0 +1,22 @@
+"""Table 10 — serving under sustained overload, per admission policy.
+
+Thin registry shim: the implementation lives next to the rest of the
+serving bench in :mod:`benchmarks.bench_serve` (``run_overload``), which
+shares its router warmup and shape constants.  The scenario pins dispatch
+time with the fault-injection harness so ``served_frac`` is deterministic
+by construction — see that docstring for the row semantics and the gate
+(``served_frac:higher`` in the robustness-smoke CI job).
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+from . import bench_serve
+
+
+def run(backend: Optional[str] = None) -> List[str]:
+    return bench_serve.run_overload(backend=backend)
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

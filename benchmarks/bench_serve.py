@@ -44,6 +44,17 @@ MAX_WAIT_US = 2000.0
 OPEN_RATES = (500, 2000)     # open-loop arrival rates, requests/sec
 N_OPEN = 48                  # requests per open-loop row
 
+# TABLE 10 (run_overload): sustained overload per admission policy.  The
+# dispatch is pinned to a fixed duration with the fault-injection
+# harness, so capacity — and therefore served_frac at a given overload
+# factor — is set by construction, not by runner speed.
+OVERLOAD_POLICIES = ("reject", "shed_oldest", "block")
+OVERLOAD_N = 256             # offered requests per policy row
+OVERLOAD_QUEUE = 16          # admission bound (max_queue)
+OVERLOAD_FACTOR = 4          # offered rate = factor x capacity
+OVERLOAD_SLOW_S = 0.03       # injected per-dispatch floor
+OVERLOAD_DEADLINE_S = 0.25   # per-request deadline
+
 
 def _percentiles(lat_s: List[float]) -> Tuple[float, float, float]:
     """(mean_us, p50_ms, p99_ms) of a latency sample."""
@@ -168,5 +179,88 @@ def run(backend: Optional[str] = None) -> List[str]:
     return rows
 
 
+def run_overload(backend: Optional[str] = None) -> List[str]:
+    """TABLE 10 — open-loop arrivals at ``OVERLOAD_FACTOR`` x capacity,
+    one row per admission policy.
+
+    Dispatch duration is pinned at ``OVERLOAD_SLOW_S`` via
+    ``repro.testing.faults`` (site ``serve.dispatch``), so capacity is
+    ``MAX_BATCH / OVERLOAD_SLOW_S`` requests/sec *by construction* and
+    ``served_frac`` is a deterministic function of the admission policy
+    rather than of runner speed — which is what makes it gateable:
+
+    * ``reject`` / ``shed_oldest`` — the queue bound sheds ~3/4 of the
+      offered load (factor 4): ``served_frac`` ~ 1/factor, every refused
+      request fails fast and typed, ``overload_p99_ms`` stays bounded by
+      queue depth x dispatch time.
+    * ``block`` — admission backpressure throttles the client to
+      capacity: ``served_frac`` ~ 1.0 at the cost of submit-side
+      waiting (bounded by the per-request deadline).
+    """
+    from repro.serve import (DeadlineExceeded, Overloaded, PlanRouter,
+                             Server, request)
+    from repro.testing import faults
+
+    be = backend or "reference"
+    router = PlanRouter()
+    label, wl, params = SERVE_SET[0]
+    capacity = MAX_BATCH / OVERLOAD_SLOW_S
+    offered = OVERLOAD_FACTOR * capacity
+    interval = 1.0 / offered
+    rows = ["name,us_per_call,backend,offered_rps,served_frac,shed_rate,"
+            "deadline_miss_rate,overload_p99_ms"]
+
+    # warm every padded batch size the worker can form (jit retraces per
+    # size; the injected floor, not tracing, must set the dispatch time)
+    req0 = request(wl, backend=be, seed=0, **params)
+    entry = router.plan_for(router.bucket(req0))
+    one = router.request_feeds(entry, req0)
+    b = 1
+    while b <= MAX_BATCH:
+        entry.bplan.run_many([one] * b, entry.shared_feeds)
+        b *= 2
+
+    for policy in OVERLOAD_POLICIES:
+        srv = Server(router, max_batch_size=MAX_BATCH,
+                     max_wait_us=MAX_WAIT_US, max_queue=OVERLOAD_QUEUE,
+                     overload=policy)
+        futs: List = []
+        shed = missed = 0
+        with faults.inject("serve.dispatch", kind="slow",
+                           delay_s=OVERLOAD_SLOW_S):
+            t0 = time.perf_counter()
+            for s in range(OVERLOAD_N):
+                target = t0 + s * interval
+                delay = target - time.perf_counter()
+                if delay > 0:
+                    time.sleep(delay)
+                try:
+                    futs.append(srv.submit(
+                        request(wl, backend=be, seed=s % 17, **params),
+                        deadline_s=OVERLOAD_DEADLINE_S))
+                except Overloaded:            # reject: refused at submit
+                    shed += 1
+                except DeadlineExceeded:      # block: admission expired
+                    missed += 1
+            served_lat: List[float] = []
+            for f in futs:
+                try:
+                    served_lat.append(f.result(timeout=600).latency_s)
+                except Overloaded:            # shed_oldest: failed queued
+                    shed += 1
+                except DeadlineExceeded:      # expired in queue
+                    missed += 1
+        srv.close()
+        mean_us, _, p99 = (_percentiles(served_lat) if served_lat
+                           else (0.0, 0.0, 0.0))
+        rows.append(
+            f"hpc/{label}/overload@{policy},{mean_us:.0f},{be},"
+            f"{offered:.0f},{len(served_lat) / OVERLOAD_N:.3f},"
+            f"{shed / OVERLOAD_N:.3f},{missed / OVERLOAD_N:.3f},"
+            f"{p99:.3f}")
+    return rows
+
+
 if __name__ == "__main__":
     print("\n".join(run()))
+    print("\n".join(run_overload()))

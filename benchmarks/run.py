@@ -34,7 +34,7 @@ from typing import Any, Dict, List
 def _tables():
     from . import (bench_speedup, bench_energy, bench_capacity, bench_split,
                    bench_kernels, bench_roofline, bench_hpc, bench_exec,
-                   bench_serve)
+                   bench_serve, bench_overload)
     return [
         ("TABLE 1 — CELLO speedup vs baselines", bench_speedup),
         ("TABLE 2 — energy vs baselines", bench_energy),
@@ -50,6 +50,11 @@ def _tables():
          bench_exec),
         ("TABLE 9 — batched serving throughput vs sequential solves",
          bench_serve),
+        # shares the BENCH_serve.json dump with TABLE 9: its rows use
+        # disjoint metric names (served_frac/shed_rate/... vs
+        # requests_per_s/p50_ms/p99_ms) so each gate skips the other's
+        ("TABLE 10 — serving under overload per admission policy",
+         bench_overload),
     ]
 
 

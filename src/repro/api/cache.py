@@ -16,6 +16,7 @@ import functools
 import hashlib
 import inspect
 import json
+import logging
 import os
 import pathlib
 import re
@@ -23,6 +24,7 @@ import tempfile
 from typing import Any, Dict, Optional
 
 from .. import obs
+from ..testing import faults
 from ..core.buffer import BufferConfig, TrafficReport
 from ..core.costmodel import HardwareModel, Metrics
 from ..core.graph import OpGraph
@@ -36,6 +38,10 @@ _CACHE_HITS = obs.registry().counter(
 _CACHE_MISSES = obs.registry().counter(
     "codesign.cache.misses",
     "codesign disk-cache lookups that re-searched (absent/corrupt/stale)")
+_CACHE_CORRUPT = obs.registry().counter(
+    "codesign.cache.corrupt",
+    "codesign disk-cache entries found corrupt/truncated/stale-format "
+    "(logged, deleted, re-derived — also counted in misses)")
 _CACHE_READ_B = obs.registry().counter(
     "codesign.cache.read_bytes", "bytes read on codesign cache hits",
     unit="B")
@@ -247,10 +253,28 @@ class CodesignCache:
         try:
             with open(path) as f:
                 blob = f.read()
-            res = result_from_dict(json.loads(blob))
-        except (OSError, ValueError, KeyError, TypeError):
+        except OSError:
             _CACHE_MISSES.inc()
-            return None    # miss, corrupt, or stale format: re-search
+            return None    # absent (or unreadable): plain miss, re-search
+        # fault-injection site (docs/robustness.md): codesign.cache —
+        # a corrupt rule truncates the entry as if the disk had
+        blob = faults.corrupt_text("codesign.cache", blob)
+        try:
+            res = result_from_dict(json.loads(blob))
+        except (ValueError, KeyError, TypeError):
+            # corrupt / truncated / stale-format entry: count it, drop the
+            # bad file so the re-derived result can be re-published, and
+            # re-search — never raise out of a cache read
+            _CACHE_CORRUPT.inc()
+            _CACHE_MISSES.inc()
+            logging.getLogger(__name__).warning(
+                "codesign cache entry %s is corrupt or stale; deleting "
+                "and re-deriving", path.name)
+            try:
+                os.unlink(path)
+            except OSError:
+                pass
+            return None
         _CACHE_HITS.inc()
         _CACHE_READ_B.inc(len(blob))
         return res

@@ -26,6 +26,7 @@ import weakref
 from typing import Any, Callable, Dict, List, Optional, Sequence
 
 from .. import obs
+from ..testing import faults
 
 Feeds = Dict[str, Any]
 CompiledFn = Callable[[Feeds], Dict[str, Any]]
@@ -81,6 +82,9 @@ class Executor:
             if fn is None:
                 t0 = time.perf_counter()
                 with obs.span("exec.compile", backend=self.name):
+                    # fault-injection site (docs/robustness.md):
+                    # exec.compile@<backend>
+                    faults.check("exec.compile", backend=self.name)
                     fn = self.compile(plan)
                 _COMPILE_S.observe(time.perf_counter() - t0,
                                    backend=self.name)
@@ -97,6 +101,8 @@ class Executor:
             feeds = make_feeds(program, seed)
         t0 = time.perf_counter()
         with obs.span("exec.dispatch", backend=self.name):
+            # fault-injection site: exec.dispatch@<backend>
+            faults.check("exec.dispatch", backend=self.name)
             out = fn(feeds)
         _RUN_S.observe(time.perf_counter() - t0, backend=self.name)
         return out

@@ -66,6 +66,7 @@ import os
 from typing import Any, Callable, Dict, List, Optional, Sequence, Set, Tuple
 
 from .. import obs
+from ..testing import faults
 from ..core.lowering import (STREAM_EINSUMS, ExecPlan, GroupKernel,
                              StreamPass, flatten_units, plan_execution,
                              select_group_kernels)
@@ -945,9 +946,14 @@ class PallasExecutor(Executor):
     name = "pallas"
 
     def compile(self, plan) -> _SingleProgram:
+        # fault-injection site (docs/robustness.md): exec.compile@pallas —
+        # here as well as in the memoized run() driver, because
+        # serve.BatchedPlan compiles through compile/compile_pure directly
+        faults.check("exec.compile", backend=self.name)
         return _SingleProgram(plan)
 
     def compile_pure(self, plan):
+        faults.check("exec.compile", backend=self.name)
         # the single program's traced core, without the dispatch driver
         # (donation, counters, its own jit): composable under vmap
         return _SingleProgram(plan).pure

@@ -18,6 +18,7 @@ from __future__ import annotations
 
 from typing import Any, Dict, List, Optional, Sequence
 
+from ..testing import faults
 from .base import Executor, plan_order, plan_program
 
 
@@ -137,6 +138,8 @@ class ReferenceExecutor(Executor):
     name = "reference"
 
     def compile(self, plan):
+        # fault-injection site (docs/robustness.md): exec.compile@reference
+        faults.check("exec.compile", backend=self.name)
         program = plan_program(plan)
         order = plan_order(plan)
 

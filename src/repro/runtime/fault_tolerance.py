@@ -72,11 +72,17 @@ class StragglerDetector:
         self._durations: List[float] = []
         self._strikes: Dict[int, int] = {}
 
+    #: minimum prior samples before a measurement can be judged — small
+    #: enough that an obvious straggler in the first handful of steps is
+    #: flagged (a 5-sample warm-up used to mask it), large enough that a
+    #: 1-sample "median" doesn't flag normal jitter
+    MIN_HISTORY = 3
+
     def record(self, duration_s: float, host: Optional[int] = None) -> bool:
         """Returns True if this measurement is a straggler event."""
         hist = self._durations[-self.window:]
         self._durations.append(duration_s)
-        if len(hist) < 5:
+        if len(hist) < self.MIN_HISTORY:
             return False
         med = sorted(hist)[len(hist) // 2]
         is_straggler = duration_s > self.threshold * med

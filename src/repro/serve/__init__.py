@@ -15,6 +15,12 @@ The layers, bottom-up (``docs/serving.md`` for the full architecture):
   ``max_wait_us`` knobs) and resolves per-request futures with outputs
   and residuals; ``Server.stats()`` surfaces per-bucket counters.
 
+On top of that sits the failure-handling layer (``docs/serving.md``
+"Failure handling" + ``docs/robustness.md``): per-request deadlines,
+bounded-queue admission control (:class:`Overloaded`), retry + backend
+fallback behind per-bucket circuit breakers (:class:`CircuitBreaker`),
+and worker supervision with ``Server.health()``.
+
 Quickstart::
 
     from repro.serve import Server, request
@@ -24,11 +30,30 @@ Quickstart::
                 for s in range(32)]
         results = [f.result() for f in futs]
     print(results[0].residual, results[0].batch_size)
+
+Robustness quickstart::
+
+    from repro.serve import Overloaded, RetryPolicy, Server, request
+
+    srv = Server(max_queue=64, overload="reject",
+                 retry=RetryPolicy(max_retries=2), fallback="reference",
+                 breaker_failures=3)
+    try:
+        res = srv.solve(request("cg", n=256, backend="pallas"),
+                        deadline_s=0.5)
+    except Overloaded:
+        ...                       # typed, raised in the caller, no hang
+    print(srv.health()["status"], srv.stats()["fallbacks"])
 """
 from .batched import BatchedPlan
+from .errors import (CircuitOpen, DeadlineExceeded, Overloaded, ServeError,
+                     ServerClosed, WorkerCrashed)
+from .resilience import CircuitBreaker, RetryPolicy
 from .router import (BucketKey, PlanRouter, SolveRequest, density_bucket,
                      request)
 from .server import Server, SolveResult
 
-__all__ = ["BatchedPlan", "BucketKey", "PlanRouter", "Server",
-           "SolveRequest", "SolveResult", "density_bucket", "request"]
+__all__ = ["BatchedPlan", "BucketKey", "CircuitBreaker", "CircuitOpen",
+           "DeadlineExceeded", "Overloaded", "PlanRouter", "RetryPolicy",
+           "ServeError", "Server", "ServerClosed", "SolveRequest",
+           "SolveResult", "WorkerCrashed", "density_bucket", "request"]

@@ -34,6 +34,7 @@ from typing import Any, Dict, List, Mapping, Optional, Sequence
 from .. import obs
 from ..exec import get_backend
 from ..exec.base import plan_program
+from ..testing import faults
 
 __all__ = ["BatchedPlan"]
 
@@ -146,6 +147,10 @@ class BatchedPlan:
         _BP_DISPATCHES.inc(backend=self.backend, scope=self._scope)
         with obs.span("serve.batch_dispatch", backend=self.backend,
                       batch=batch):
+            # fault-injection site (docs/robustness.md):
+            # serve.dispatch@<backend> — fail or slow the coalesced
+            # dispatch itself
+            faults.check("serve.dispatch", backend=self.backend)
             return dict(self._jit(shared_vals, batched_vals))
 
     def run_many(self, requests: Sequence[Mapping[str, Any]],

@@ -1,0 +1,11 @@
+"""Test-support machinery that ships with the library.
+
+``repro.testing.faults`` is the deterministic fault-injection harness:
+production code calls :func:`~repro.testing.faults.check` /
+:func:`~repro.testing.faults.corrupt_text` at named sites, and tests (or
+the ``CELLO_FAULTS`` environment variable) arm rules that fail, delay,
+or corrupt exactly the calls they name.  See ``docs/robustness.md``.
+"""
+from . import faults
+
+__all__ = ["faults"]

@@ -1,0 +1,139 @@
+"""Direct coverage for ``repro.runtime.fault_tolerance`` (seed-era code
+that previously had none): heartbeat timeout edges, straggler
+strike/reset/evict (including the fixed cold-start window), and
+``run_with_restarts`` exhaustion semantics."""
+import pytest
+
+from repro.runtime.fault_tolerance import (ElasticScaler, HeartbeatMonitor,
+                                           StragglerDetector,
+                                           run_with_restarts)
+
+
+class _Clock:
+    def __init__(self, t=0.0):
+        self.t = t
+
+    def __call__(self):
+        return self.t
+
+
+class TestHeartbeatMonitor:
+    def test_exactly_at_timeout_is_alive(self):
+        clk = _Clock()
+        mon = HeartbeatMonitor([0, 1], timeout_s=10.0, clock=clk)
+        clk.t = 10.0                      # now - last == timeout: not dead
+        assert mon.dead_hosts() == []
+        clk.t = 10.0 + 1e-9               # strictly past: dead
+        assert mon.dead_hosts() == [0, 1]
+
+    def test_beat_resets_only_that_host(self):
+        clk = _Clock()
+        mon = HeartbeatMonitor([0, 1, 2], timeout_s=5.0, clock=clk)
+        clk.t = 4.0
+        mon.beat(1)
+        clk.t = 6.0
+        assert mon.dead_hosts() == [0, 2]
+
+    def test_remove_forgets_host(self):
+        clk = _Clock()
+        mon = HeartbeatMonitor([0, 1], timeout_s=1.0, clock=clk)
+        clk.t = 2.0
+        mon.remove(0)
+        assert mon.dead_hosts() == [1]
+        mon.remove(7)                     # unknown host: no-op
+
+
+class TestStragglerDetector:
+    def test_cold_start_flags_early_straggler(self):
+        # regression: a 5-sample warm-up used to mask an obvious straggler
+        # in the first handful of steps
+        det = StragglerDetector(threshold=2.0)
+        for _ in range(det.MIN_HISTORY):
+            assert not det.record(1.0)    # building history: never judged
+        assert det.record(10.0)           # 10x the median: flagged
+
+    def test_normal_jitter_not_flagged(self):
+        det = StragglerDetector(threshold=2.0)
+        for d in (1.0, 1.1, 0.9, 1.05, 1.0, 1.1):
+            assert not det.record(d)
+
+    def test_strikes_accumulate_and_reset(self):
+        det = StragglerDetector(threshold=2.0, patience=3)
+        for _ in range(10):
+            det.record(1.0, host=0)
+        det.record(5.0, host=0)
+        det.record(5.0, host=0)
+        assert not det.should_evict(0)    # 2 strikes < patience
+        det.record(1.0, host=0)           # normal step resets the count
+        det.record(5.0, host=0)
+        assert not det.should_evict(0)
+
+    def test_evict_after_patience_strikes(self):
+        det = StragglerDetector(threshold=2.0, patience=3)
+        for _ in range(10):
+            det.record(1.0, host=3)
+        for _ in range(3):
+            det.record(6.0, host=3)
+        assert det.should_evict(3)
+        assert not det.should_evict(4)    # other hosts unaffected
+
+    def test_median_window(self):
+        det = StragglerDetector(window=4)
+        assert det.median_step_s is None
+        for d in (1.0, 1.0, 1.0, 9.0, 9.0, 9.0, 9.0):
+            det.record(d)
+        assert det.median_step_s == 9.0   # old fast steps rolled out
+
+
+class TestRunWithRestarts:
+    def test_clean_run_counts(self):
+        steps = []
+        out = run_with_restarts(steps.append, lambda s: s, 5)
+        assert out == {"completed": 5, "restarts": 0}
+        assert steps == [0, 1, 2, 3, 4]
+
+    def test_restores_and_resumes(self):
+        failed = {2: True}
+        log = []
+
+        def step(s):
+            log.append(s)
+            if failed.pop(s, False):
+                raise RuntimeError("step died")
+
+        out = run_with_restarts(step, lambda s: s - 1, 4, max_restarts=2)
+        assert out["restarts"] == 1
+        assert log == [0, 1, 2, 1, 2, 3]  # resumed from restore_fn's step
+
+    def test_exhaustion_reraises(self):
+        def step(_s):
+            raise RuntimeError("always dies")
+
+        with pytest.raises(RuntimeError, match="always dies"):
+            run_with_restarts(step, lambda s: s, 3, max_restarts=2)
+
+    def test_unlisted_failure_type_propagates_immediately(self):
+        calls = []
+
+        def step(s):
+            calls.append(s)
+            raise ValueError("not a failure_types member")
+
+        with pytest.raises(ValueError):
+            run_with_restarts(step, lambda s: s, 3, max_restarts=5,
+                              failure_types=(RuntimeError,))
+        assert calls == [0]               # no restart consumed
+
+
+class TestElasticScaler:
+    def test_multi_pod_keeps_model_axis(self):
+        plan = ElasticScaler(model_axis=16, pod_chips=256).plan(512, 7)
+        assert plan.mesh_shape == (2, 16, 16)
+        assert plan.n_devices == 512
+        assert plan.restore_step == 7
+
+    def test_sub_pod_shrinks_data_axis(self):
+        plan = ElasticScaler(model_axis=16, pod_chips=256).plan(
+            48, None, dropped_hosts=[3])
+        assert plan.mesh_shape == (3, 16)
+        assert plan.dropped_hosts == (3,)

@@ -1,0 +1,147 @@
+"""Unit tests for the deterministic fault-injection harness
+(``repro.testing.faults``): spec grammar, site/qualifier matching,
+deterministic fire counts, corrupt transforms, env configuration."""
+import time
+
+import pytest
+
+from repro.testing import faults
+from repro.testing.faults import InjectedFault
+
+
+@pytest.fixture(autouse=True)
+def _clean_rules():
+    faults.clear()
+    yield
+    faults.clear()
+
+
+class TestSpecParsing:
+    def test_minimal_clause(self):
+        (r,) = faults.parse_spec("exec.compile=fail")
+        assert (r.site, r.kind, r.qualifier, r.times, r.skip) == \
+            ("exec.compile", "fail", None, None, 0)
+
+    def test_full_grammar(self):
+        rules = faults.parse_spec(
+            "exec.compile@pallas=fail:x3, serve.dispatch=slow:0.05:x2,"
+            "codesign.cache=corrupt:x1:skip2")
+        a, b, c = rules
+        assert (a.site, a.qualifier, a.times) == \
+            ("exec.compile", "pallas", 3)
+        assert (b.kind, b.delay_s, b.times) == ("slow", 0.05, 2)
+        assert (c.kind, c.times, c.skip) == ("corrupt", 1, 2)
+
+    def test_empty_spec_is_no_rules(self):
+        assert faults.parse_spec("") == []
+        assert faults.parse_spec(" , ") == []
+
+    @pytest.mark.parametrize("bad", [
+        "exec.compile",               # no kind
+        "=fail",                      # no site
+        "site=explode",               # unknown kind
+        "site=fail:banana",           # unparseable option
+    ])
+    def test_bad_clauses_raise(self, bad):
+        with pytest.raises(ValueError):
+            faults.parse_spec(bad)
+
+
+class TestCheck:
+    def test_inactive_is_noop(self):
+        assert not faults.active()
+        faults.check("exec.compile", backend="pallas")   # no raise
+
+    def test_fail_exact_count(self):
+        with faults.inject("exec.compile", times=2) as rule:
+            for _ in range(2):
+                with pytest.raises(InjectedFault):
+                    faults.check("exec.compile")
+            faults.check("exec.compile")         # 3rd call unharmed
+            faults.check("exec.compile")
+            assert rule.fired == 2 and rule.seen == 4
+        assert not faults.active()               # context disarmed
+
+    def test_qualifier_must_match_a_context_value(self):
+        with faults.inject("exec.compile@pallas"):
+            faults.check("exec.compile", backend="reference")   # no match
+            with pytest.raises(InjectedFault):
+                faults.check("exec.compile", backend="pallas")
+
+    def test_skip_lets_first_calls_through(self):
+        with faults.inject("site", times=1, skip=2) as rule:
+            faults.check("site")
+            faults.check("site")
+            with pytest.raises(InjectedFault):
+                faults.check("site")
+            assert (rule.seen, rule.fired) == (3, 1)
+
+    def test_slow_sleeps(self):
+        with faults.inject("serve.dispatch", kind="slow", delay_s=0.05,
+                           times=1):
+            t0 = time.perf_counter()
+            faults.check("serve.dispatch", backend="reference")
+            assert time.perf_counter() - t0 >= 0.045
+            t0 = time.perf_counter()
+            faults.check("serve.dispatch", backend="reference")  # spent
+            assert time.perf_counter() - t0 < 0.04
+
+    def test_message_carries_site(self):
+        with faults.inject("exec.dispatch"):
+            with pytest.raises(InjectedFault, match="exec.dispatch"):
+                faults.check("exec.dispatch", backend="pallas")
+
+    def test_injected_counter_bumps(self):
+        from repro import obs
+        c = obs.registry().counter("faults.injected")
+        before = c.value(site="unit.test.site", kind="fail")
+        with faults.inject("unit.test.site", times=1):
+            with pytest.raises(InjectedFault):
+                faults.check("unit.test.site")
+        assert c.value(site="unit.test.site", kind="fail") == before + 1
+
+
+class TestCorrupt:
+    def test_corrupt_truncates_to_half(self):
+        blob = "x" * 100
+        with faults.inject("codesign.cache", kind="corrupt", times=1):
+            assert faults.corrupt_text("codesign.cache", blob) == "x" * 50
+            # count spent: passthrough afterwards
+            assert faults.corrupt_text("codesign.cache", blob) == blob
+
+    def test_corrupt_ignores_other_sites_and_kinds(self):
+        blob = b"payload"
+        with faults.inject("other.site", kind="corrupt"):
+            assert faults.corrupt_bytes("codesign.cache", blob) == blob
+        with faults.inject("codesign.cache", kind="fail"):
+            # fail rules never mangle payloads (and corrupt_* never raises)
+            assert faults.corrupt_bytes("codesign.cache", blob) == blob
+
+    def test_check_ignores_corrupt_rules(self):
+        with faults.inject("codesign.cache", kind="corrupt"):
+            faults.check("codesign.cache")       # no raise, no sleep
+
+
+class TestEnvConfig:
+    def test_configure_from_env_arms_and_replaces(self):
+        armed = faults.configure_from_env(
+            {faults.ENV_VAR: "a.site=fail:x1,b.site=slow:0.01"})
+        assert len(armed) == 2 and faults.active()
+        # re-configure replaces env rules rather than stacking them
+        armed2 = faults.configure_from_env({faults.ENV_VAR: "c.site=fail"})
+        assert len(armed2) == 1
+        assert [r.site for r in faults.rules()] == ["c.site"]
+
+    def test_env_rules_coexist_with_injected(self):
+        faults.configure_from_env({faults.ENV_VAR: "env.site=fail"})
+        with faults.inject("ctx.site"):
+            assert {r.site for r in faults.rules()} == \
+                {"env.site", "ctx.site"}
+            faults.configure_from_env({})        # drops env rules only
+            assert [r.site for r in faults.rules()] == ["ctx.site"]
+
+    def test_inject_spec_context(self):
+        with faults.inject_spec("x.site=fail:x1"):
+            with pytest.raises(InjectedFault):
+                faults.check("x.site")
+        assert not faults.active()

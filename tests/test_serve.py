@@ -26,8 +26,9 @@ from repro.api import Session
 from repro.api.cache import CodesignCache
 from repro.exec import Executor
 from repro.frontends import make_feeds
-from repro.serve import (BatchedPlan, PlanRouter, Server, density_bucket,
-                         request)
+from repro.serve import (BatchedPlan, PlanRouter, Server, ServerClosed,
+                         density_bucket, request)
+from repro.testing import faults
 
 # batched-vs-single reference tolerances (see module docstring)
 SERVE_RTOL, SERVE_ATOL = 1e-4, 1e-5
@@ -676,3 +677,57 @@ class TestBenchCompareMultiMetric:
         rc = bc.main([str(new), "--baseline", str(baseline),
                       "--backend", "", "--metric", "p99_ms:sideways"])
         assert rc == 2
+
+
+# ---------------------------------------------------------------------------
+# shutdown races (satellite: close() vs in-flight / queued / poisoned work)
+# ---------------------------------------------------------------------------
+
+class TestShutdownRaces:
+    @pytest.fixture(autouse=True)
+    def _clean_rules(self):
+        faults.clear()
+        yield
+        faults.clear()
+
+    def test_close_flush_waits_for_in_flight_batch(self, tmp_path):
+        srv = Server(session=Session(cache_dir=tmp_path), max_batch_size=2,
+                     max_wait_us=200)
+        srv.solve(request("cg", n=32, iters=2))       # warm the plan
+        with faults.inject("serve.dispatch", kind="slow", delay_s=0.3,
+                           times=1):
+            fut = srv.submit(request("cg", n=32, iters=2, seed=1))
+            time.sleep(0.05)                          # batch is in flight
+            srv.close(flush=True)                     # racing the dispatch
+        assert fut.result(timeout=1).batch_size == 1  # served, not dropped
+        with pytest.raises(ServerClosed):
+            srv.submit(request("cg", n=32, iters=2, seed=2))
+
+    def test_close_noflush_fails_queued_futures_typed(self, tmp_path):
+        srv = Server(session=Session(cache_dir=tmp_path), max_batch_size=4,
+                     max_wait_us=200, autostart=False)
+        futs = [srv.submit(request("cg", n=32, iters=2, seed=s))
+                for s in range(3)]
+        srv.close(flush=False)
+        for f in futs:
+            with pytest.raises(ServerClosed, match="closed"):
+                f.result(timeout=1)
+        st = srv.stats()
+        assert st["errors"] == 3 and st["queue_depth"] == 0
+
+    def test_poisoned_batch_does_not_poison_the_bucket(self, tmp_path):
+        srv = Server(session=Session(cache_dir=tmp_path), max_batch_size=2,
+                     max_wait_us=200, autostart=False)
+        futs = [srv.submit(request("cg", n=32, iters=2, seed=s))
+                for s in range(4)]                    # two batches of 2
+        with faults.inject("serve.dispatch", kind="fail", times=1):
+            srv.start()
+            for f in futs[:2]:                        # poisoned batch only
+                with pytest.raises(faults.InjectedFault):
+                    f.result(timeout=60)
+            for f in futs[2:]:                        # same bucket, served
+                assert f.result(timeout=60).batch_size == 2
+        st = srv.stats()
+        assert st["errors"] == 2
+        assert st["requests"] == 4
+        srv.close()
