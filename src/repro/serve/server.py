@@ -56,9 +56,16 @@ breaker transitions / worker restarts).  The counters live on the
 whole snapshot is taken while holding the server's condition variable,
 so it is consistent: at any instant
 ``requests == queued + in_flight + errors + sum(size * count)`` over the
-batch-size histogram (shed / expired / crashed requests count under
-``errors``; rejected requests were never admitted and are tallied
-separately).
+batch-size histogram (shed / expired / crashed / client-cancelled
+requests count under ``errors``; rejected requests were never admitted
+and are tallied separately).
+
+A client may ``cancel()`` its future while the request is still queued;
+the worker marks every future *running* when it pops the batch
+(``set_running_or_notify_cancel``), so a won cancel simply drops the
+request (counted under ``errors``) and a lost one can no longer race the
+result — no settle site ever raises ``InvalidStateError`` into the
+worker or an unrelated submitter.
 """
 from __future__ import annotations
 
@@ -67,7 +74,7 @@ import math
 import threading
 import time
 from collections import deque
-from concurrent.futures import Future
+from concurrent.futures import Future, InvalidStateError
 from typing import Any, Dict, List, Optional
 
 from .. import obs
@@ -320,19 +327,24 @@ class Server:
 
     def health(self) -> Dict[str, Any]:
         """Liveness summary: ``status`` is ``ok`` (serving, nothing
-        degraded), ``degraded`` (serving, but a breaker is not closed or
-        the worker has been restarted), or ``down`` (not serving: never
-        started, closed, or restarts exhausted)."""
+        degraded), ``degraded`` (serving, but a breaker is not closed,
+        the worker has been restarted, or a supervised restart is in
+        progress), or ``down`` (not serving: never started, closed, or
+        restarts exhausted)."""
         with self._cv:
             worker = self._worker
             alive = bool(worker is not None and worker.is_alive())
+            # a replacement registered by the supervisor but not yet
+            # running (ident is None): the server is restarting, not dead
+            restarting = bool(worker is not None and worker.ident is None)
             restarts = self._worker_restarts
             breakers = {lb: b.state for lb, b in self._breakers.items()}
             closing, down, started = self._closing, self._down, self._started
-        if down or closing or not started or not alive:
+        if down or closing or not started or not (alive or restarting):
             status = "down"
-        elif restarts > 0 or any(s != CircuitBreaker.CLOSED
-                                 for s in breakers.values()):
+        elif restarts > 0 or restarting \
+                or any(s != CircuitBreaker.CLOSED
+                       for s in breakers.values()):
             status = "degraded"
         else:
             status = "ok"
@@ -449,21 +461,30 @@ class Server:
                 self._pending.clear()
             self._cv.notify_all()
         for it in dropped:
-            if not it.fut.done():
-                it.fut.set_exception(ServerClosed(
-                    "Server closed before this request was served"))
+            self._settle_error(it.fut, ServerClosed(
+                "Server closed before this request was served"))
         # join the worker; the supervisor may have swapped in a restarted
         # thread, so re-read until the joined thread is still the current
-        # one (restarts stop once _closing is set)
+        # one (restarts stop once _closing is set).  The ident-is-None
+        # wait is bounded: a replacement that was registered but whose
+        # start() never ran (supervisor crashed between the two) would
+        # otherwise spin this loop forever
+        ident_wait_until = time.monotonic() + 1.0
         while self._started:
             with self._cv:
                 w = self._worker
             if w is None:
                 self._started = False
             elif w.ident is None:      # restart swapped in, not yet running
-                time.sleep(0.001)
+                if time.monotonic() > ident_wait_until:
+                    with self._cv:     # never started: nothing to join
+                        if self._worker is w:
+                            self._started = False
+                else:
+                    time.sleep(0.001)
             else:
                 w.join()
+                ident_wait_until = time.monotonic() + 1.0
                 with self._cv:
                     if self._worker is w:
                         self._started = False
@@ -509,6 +530,11 @@ class Server:
                               key=lambda k: self._pending[k][0].t_submit)
                 self._serve_seq += 1
                 self._last_served[key] = self._serve_seq
+                # the max_wait window is anchored to the oldest request at
+                # batch open, NOT the live head: if a deadline-bearing head
+                # expires mid-wait the window must not restart, or requests
+                # behind a chain of expiring heads wait >> max_wait
+                anchor = self._pending[key][0].t_submit
                 while (len(self._pending.get(key, ())) < self.max_batch_size
                        and not self._closing):
                     now = time.monotonic()
@@ -516,10 +542,10 @@ class Server:
                     d = self._pending.get(key)
                     if not d:
                         break
-                    # close when the oldest member hits max_wait OR any
+                    # close when the window anchor hits max_wait OR any
                     # member approaches its deadline (early, with margin,
                     # so it dispatches rather than expires)
-                    close_at = min(d[0].t_submit + max_wait_s,
+                    close_at = min(anchor + max_wait_s,
                                    min(it.close_by() for it in d))
                     remaining = close_at - now
                     if remaining <= 0:
@@ -543,9 +569,13 @@ class Server:
                     if now > it.deadline:
                         _EXPIRED.inc(bucket=lb, scope=self._scope)
                         _ERRORS.inc(bucket=lb, scope=self._scope)
-                        it.fut.set_exception(DeadlineExceeded(
+                        self._settle_error(it.fut, DeadlineExceeded(
                             f"deadline exceeded after "
                             f"{now - it.t_submit:.3f}s in queue ({lb})"))
+                    elif not it.fut.set_running_or_notify_cancel():
+                        # client cancelled while queued: the cancel IS the
+                        # settlement — drop the item, tally it as an error
+                        _ERRORS.inc(bucket=lb, scope=self._scope)
                     else:
                         kept.append(it)
                 batch = kept
@@ -564,6 +594,21 @@ class Server:
             faults.check("serve.worker", bucket=key.label)
             self._serve_batch(key, batch, time.monotonic())
 
+    @staticmethod
+    def _settle_error(fut: "Future[SolveResult]",
+                      exc: BaseException) -> bool:
+        """Deliver ``exc`` through ``fut`` unless the future already
+        settled — a client ``cancel()`` may win at any moment while the
+        future is still pending, and losing that race must never raise
+        into the worker (or a submitter).  Returns True when delivered."""
+        if fut.done():
+            return False
+        try:
+            fut.set_exception(exc)
+            return True
+        except InvalidStateError:      # lost the race with a client cancel
+            return False
+
     def _expire_locked(self, now: float) -> None:
         """Fail every queued request whose deadline has passed (strictly:
         ``now > deadline``) with a typed :class:`DeadlineExceeded`."""
@@ -578,7 +623,7 @@ class Server:
                 if now > it.deadline:
                     _EXPIRED.inc(bucket=lb, scope=self._scope)
                     _ERRORS.inc(bucket=lb, scope=self._scope)
-                    it.fut.set_exception(DeadlineExceeded(
+                    self._settle_error(it.fut, DeadlineExceeded(
                         f"deadline exceeded after "
                         f"{now - it.t_submit:.3f}s in queue ({lb})"))
                     changed = True
@@ -611,7 +656,9 @@ class Server:
         lb = key.label
         _SHED.inc(bucket=lb, scope=self._scope)
         _ERRORS.inc(bucket=lb, scope=self._scope)
-        it.fut.set_exception(Overloaded(
+        # guarded: a concurrent client cancel() on the shed future must
+        # not raise into this (unrelated) submitter's thread
+        self._settle_error(it.fut, Overloaded(
             f"shed from the queue head ({lb}) to admit a newer request"))
 
     # -- supervision -----------------------------------------------------
@@ -632,8 +679,12 @@ class Server:
                 if not cur.accounted:
                     self._in_flight[lb] = \
                         self._in_flight.get(lb, 0) - len(cur.items)
-                if undone:
-                    _ERRORS.inc(len(undone), bucket=lb, scope=self._scope)
+                    # once accounted, _serve_batch already tallied the
+                    # batch (batch_sizes or errors) — bumping errors again
+                    # here would double-count and break the stats invariant
+                    if undone:
+                        _ERRORS.inc(len(undone), bucket=lb,
+                                    scope=self._scope)
                 err = WorkerCrashed(
                     f"serve worker crashed mid-batch ({lb}): {exc!r}")
                 err.__cause__ = exc
@@ -656,11 +707,15 @@ class Server:
                         failed.append((it.fut, drop_err))
                 self._pending.clear()
             self._cv.notify_all()
-        for fut, e in failed:
-            if not fut.done():
-                fut.set_exception(e)
-        if restart is not None:
-            restart.start()
+        # settle, then start the replacement under try/finally: if a
+        # settle raised, a registered-but-never-started replacement would
+        # wedge close() and leave the server silently dead
+        try:
+            for fut, e in failed:
+                self._settle_error(fut, e)
+        finally:
+            if restart is not None:
+                restart.start()
 
     # -- batch execution -------------------------------------------------
     def _breaker_for(self, lb: str) -> Optional[CircuitBreaker]:
@@ -764,8 +819,7 @@ class Server:
                     if self._current is not None:
                         self._current.accounted = True
                 for it in batch:
-                    if not it.fut.done():
-                        it.fut.set_exception(primary_exc)
+                    self._settle_error(it.fut, primary_exc)
                 with self._cv:
                     self._current = None
                 return
@@ -791,9 +845,12 @@ class Server:
             if rname is not None:
                 import numpy as np
                 residual = float(np.linalg.norm(np.asarray(out[rname])))
-            it.fut.set_result(SolveResult(
-                outputs=out, residual=residual, bucket=lb,
-                batch_size=n, latency_s=done - it.t_submit,
-                backend=backend, degraded=fell_back))
+            try:
+                it.fut.set_result(SolveResult(
+                    outputs=out, residual=residual, bucket=lb,
+                    batch_size=n, latency_s=done - it.t_submit,
+                    backend=backend, degraded=fell_back))
+            except InvalidStateError:  # pragma: no cover — running futures
+                pass                   # cannot be cancelled; defensive only
         with self._cv:
             self._current = None

@@ -478,3 +478,62 @@ class TestCacheCorruption:
                 workload="cg", n=32, iters=2).codesign()
         assert not res.from_cache
         assert self._corrupt_count() == before + 1
+
+
+# ---------------------------------------------------------------------------
+# supervision internals (PR 9 review): crash accounting, the restart
+# window in health(), and close() boundedness
+# ---------------------------------------------------------------------------
+
+class TestSupervisionInternals:
+    def test_crash_after_accounting_does_not_double_count(self, tmp_path):
+        from concurrent.futures import Future
+
+        from repro.serve.server import _InFlightBatch, _Item
+        srv = Server(session=Session(cache_dir=tmp_path), autostart=False)
+        req = request("cg", n=32, iters=2)
+        key = srv.router.bucket(req)
+        fut = Future()
+        # simulate a crash landing AFTER _serve_batch settled the
+        # counters (accounted=True): the future still gets the typed
+        # error, but serve.errors must NOT be bumped a second time
+        srv._current = _InFlightBatch(key, [_Item(req, fut,
+                                                  time.monotonic())],
+                                      accounted=True)
+        srv._on_worker_crash(RuntimeError("boom"))
+        with pytest.raises(WorkerCrashed):
+            fut.result(timeout=1)
+        st = srv.stats()
+        assert st["errors"] == 0            # already accounted; no double
+        assert st["worker_restarts"] == 1
+        srv.close()
+
+    def test_health_degraded_not_down_during_restart_window(self, tmp_path):
+        import threading
+        srv = Server(session=Session(cache_dir=tmp_path))
+        assert srv.health()["status"] == "ok"
+        # the supervisor's window: the replacement thread is registered
+        # under the lock, start() has not run yet (ident is None) — a
+        # restarting server must read degraded, not down
+        with srv._cv:
+            real = srv._worker
+            srv._worker = threading.Thread(target=lambda: None, daemon=True)
+            srv._worker_restarts = 1
+        h = srv.health()
+        assert h["status"] == "degraded" and not h["worker_alive"]
+        with srv._cv:
+            srv._worker = real
+            srv._worker_restarts = 0
+        assert srv.health()["status"] == "ok"
+        srv.close()
+
+    def test_close_bounded_when_replacement_never_starts(self, tmp_path):
+        import threading
+        srv = Server(session=Session(cache_dir=tmp_path))
+        # a replacement that was registered but whose start() never ran:
+        # close() must give up on its ident instead of spinning forever
+        with srv._cv:
+            srv._worker = threading.Thread(target=lambda: None, daemon=True)
+        t0 = time.monotonic()
+        srv.close()
+        assert time.monotonic() - t0 < 5.0

@@ -26,8 +26,8 @@ from repro.api import Session
 from repro.api.cache import CodesignCache
 from repro.exec import Executor
 from repro.frontends import make_feeds
-from repro.serve import (BatchedPlan, PlanRouter, Server, ServerClosed,
-                         density_bucket, request)
+from repro.serve import (BatchedPlan, Overloaded, PlanRouter, Server,
+                         ServerClosed, density_bucket, request)
 from repro.testing import faults
 
 # batched-vs-single reference tolerances (see module docstring)
@@ -730,4 +730,67 @@ class TestShutdownRaces:
         st = srv.stats()
         assert st["errors"] == 2
         assert st["requests"] == 4
+        srv.close()
+
+
+# ---------------------------------------------------------------------------
+# client cancel() races (PR 9 review): no settle site may raise
+# InvalidStateError into the worker or an unrelated submitter
+# ---------------------------------------------------------------------------
+
+class TestClientCancelRaces:
+    def test_cancelled_future_does_not_crash_the_batch(self, tmp_path):
+        srv = Server(session=Session(cache_dir=tmp_path), max_batch_size=4,
+                     max_wait_us=200, autostart=False)
+        futs = [srv.submit(request("cg", n=32, iters=2, seed=s))
+                for s in range(3)]
+        assert futs[1].cancel()              # still queued: the cancel wins
+        srv.start()
+        # the other members of the batch are served normally — un-fixed,
+        # set_result on the cancelled future raised InvalidStateError,
+        # crashed the worker, and failed the whole batch WorkerCrashed
+        assert futs[0].result(timeout=60).batch_size == 2
+        assert futs[2].result(timeout=60).batch_size == 2
+        assert futs[1].cancelled()
+        h = srv.health()
+        assert h["status"] == "ok" and h["worker_restarts"] == 0
+        st = srv.stats()
+        assert st["requests"] == 3
+        assert st["errors"] == 1             # the cancelled request
+        srv.close()
+
+    def test_cancel_racing_shed_does_not_raise_in_submitter(self, tmp_path):
+        srv = Server(session=Session(cache_dir=tmp_path), max_batch_size=8,
+                     max_wait_us=50_000, autostart=False,
+                     max_queue=1, overload="shed_oldest")
+        f1 = srv.submit(request("cg", n=32, iters=2, seed=1))
+        assert f1.cancel()
+        # the queue is full, so this submit sheds the (already-cancelled)
+        # head — un-fixed, set_exception raised InvalidStateError here,
+        # in an unrelated submitter's thread
+        f2 = srv.submit(request("cg", n=32, iters=2, seed=2))
+        assert f1.cancelled()
+        srv.start()
+        assert f2.result(timeout=60).batch_size == 1
+        srv.close()
+
+    def test_shed_head_does_not_restart_the_wait_window(self, tmp_path):
+        # the coalescing window is anchored at batch open: losing the head
+        # mid-wait (shed here; an expiring deadline is the same path) must
+        # not re-open the max_wait window from the new head's t_submit
+        srv = Server(session=Session(cache_dir=tmp_path), max_batch_size=8,
+                     max_wait_us=500_000, max_queue=1,
+                     overload="shed_oldest")
+        srv.solve(request("cg", n=32, iters=2))           # warm the plan
+        t0 = time.monotonic()
+        f1 = srv.submit(request("cg", n=32, iters=2, seed=1))
+        time.sleep(0.25)               # worker is mid-wait on f1's batch
+        f2 = srv.submit(request("cg", n=32, iters=2, seed=2))  # sheds f1
+        with pytest.raises(Overloaded):
+            f1.result(timeout=1)
+        assert f2.result(timeout=60).batch_size == 1
+        closed_after = time.monotonic() - t0
+        # fixed: batch closes ~0.5s after open; un-fixed the window
+        # restarts from f2.t_submit and closes at ~0.75s
+        assert closed_after < 0.68, closed_after
         srv.close()
