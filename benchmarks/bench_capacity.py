@@ -5,6 +5,7 @@ from __future__ import annotations
 import time
 from typing import List
 
+from repro.api import CodesignConfig
 from repro.core.buffer import MiB
 
 from .workloads import workloads
@@ -25,7 +26,7 @@ def run() -> List[str]:
         t0 = time.perf_counter()
         cells, hits = [], 0
         for cap in CAPACITIES:
-            res = traced.codesign(capacity_bytes=cap)
+            res = traced.codesign(CodesignConfig(capacity_bytes=cap))
             hits += int(res.from_cache)
             cells.append(f"{res.best.metrics.hbm_bytes / 1e6:.1f}")
         us = (time.perf_counter() - t0) * 1e6

@@ -33,6 +33,8 @@ from typing import List, Optional
 
 import numpy as np
 
+from repro.api import CodesignConfig
+
 REPS = 3
 
 #: backends measured by default — the per-unit driver rides along so every
@@ -70,7 +72,7 @@ def run(backend: Optional[str] = None,
         bes = [be for be in backends
                if not (xover and be == "pallas-perunit")]
         traced = build()
-        designed = traced.codesign(overbook=overbook)
+        designed = traced.codesign(CodesignConfig(overbook=overbook))
         feeds = make_feeds(traced.program, seed=0)
         baseline = None
         if any(be != "reference" for be in bes):

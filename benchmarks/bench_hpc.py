@@ -27,6 +27,7 @@ import statistics
 import time
 from typing import List, Optional
 
+from repro.api import CodesignConfig
 from repro.core.search import SearchContext, evaluate_point
 
 from .workloads import (hpc_crossover_points, hpc_workloads,
@@ -45,7 +46,7 @@ def run(backend: Optional[str] = None,
     for name, build, overbook in points:
         traced = build()
         t0 = time.perf_counter()
-        res = traced.codesign(overbook=overbook)
+        res = traced.codesign(CodesignConfig(overbook=overbook))
         us = (time.perf_counter() - t0) * 1e6
         m = res.best.metrics
         si = res.speedup("seq-implicit")

@@ -92,10 +92,11 @@ def _burst(router, reqs) -> Tuple[float, List[float], Dict]:
     """Serve ``reqs`` as one paused-submit burst: every request is queued
     before the worker starts, so coalescing is deterministic —
     ``ceil(len(reqs)/MAX_BATCH)`` batches, one dispatch each."""
-    from repro.serve import Server
+    from repro.serve import ServeConfig, Server
 
-    srv = Server(router, max_batch_size=MAX_BATCH,
-                 max_wait_us=MAX_WAIT_US, autostart=False)
+    srv = Server(router, ServeConfig(max_batch_size=MAX_BATCH,
+                                     max_wait_us=MAX_WAIT_US,
+                                     autostart=False))
     futs = [srv.submit(r) for r in reqs]
     t0 = time.perf_counter()
     srv.start()
@@ -108,11 +109,11 @@ def _burst(router, reqs) -> Tuple[float, List[float], Dict]:
 def _open_loop(router, reqs, rate: float) -> Tuple[float, List[float]]:
     """Submit ``reqs`` on a fixed-interval clock (open loop: arrivals
     never wait for completions) and measure end-to-end latency."""
-    from repro.serve import Server
+    from repro.serve import ServeConfig, Server
 
     interval = 1.0 / rate
-    srv = Server(router, max_batch_size=MAX_BATCH,
-                 max_wait_us=MAX_WAIT_US)
+    srv = Server(router, ServeConfig(max_batch_size=MAX_BATCH,
+                                     max_wait_us=MAX_WAIT_US))
     t0 = time.perf_counter()
     futs = []
     for i, r in enumerate(reqs):
@@ -198,7 +199,7 @@ def run_overload(backend: Optional[str] = None) -> List[str]:
       waiting (bounded by the per-request deadline).
     """
     from repro.serve import (DeadlineExceeded, Overloaded, PlanRouter,
-                             Server, request)
+                             ServeConfig, Server, request)
     from repro.testing import faults
 
     be = backend or "reference"
@@ -221,9 +222,10 @@ def run_overload(backend: Optional[str] = None) -> List[str]:
         b *= 2
 
     for policy in OVERLOAD_POLICIES:
-        srv = Server(router, max_batch_size=MAX_BATCH,
-                     max_wait_us=MAX_WAIT_US, max_queue=OVERLOAD_QUEUE,
-                     overload=policy)
+        srv = Server(router, ServeConfig(max_batch_size=MAX_BATCH,
+                                         max_wait_us=MAX_WAIT_US,
+                                         max_queue=OVERLOAD_QUEUE,
+                                         overload=policy))
         futs: List = []
         shed = missed = 0
         with faults.inject("serve.dispatch", kind="slow",

@@ -34,7 +34,7 @@ from typing import Any, Dict, List
 def _tables():
     from . import (bench_speedup, bench_energy, bench_capacity, bench_split,
                    bench_kernels, bench_roofline, bench_hpc, bench_exec,
-                   bench_serve, bench_overload)
+                   bench_serve, bench_overload, bench_dist)
     return [
         ("TABLE 1 — CELLO speedup vs baselines", bench_speedup),
         ("TABLE 2 — energy vs baselines", bench_energy),
@@ -55,6 +55,8 @@ def _tables():
         # requests_per_s/p50_ms/p99_ms) so each gate skips the other's
         ("TABLE 10 — serving under overload per admission policy",
          bench_overload),
+        ("TABLE 11 — distributed co-design: per-shard pin crossover",
+         bench_dist),
     ]
 
 

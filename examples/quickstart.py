@@ -7,7 +7,7 @@ staged Session API and lower the result to an execution plan.
 """
 import argparse
 
-from repro.api import Session
+from repro.api import CodesignConfig, Session
 from repro.configs import list_archs
 from repro.core.buffer import MiB
 
@@ -46,7 +46,7 @@ def main() -> None:
                         for t in top))
 
     # stage 3: the joint schedule × buffer-split search
-    designed = analyzed.codesign(strategy=args.strategy)
+    designed = analyzed.codesign(CodesignConfig(strategy=args.strategy))
     print(f"\n{designed}")
     best = designed.best.metrics
     for name, ev in designed.baselines.items():

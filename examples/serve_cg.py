@@ -16,7 +16,7 @@ import argparse
 
 import numpy as np
 
-from repro.serve import Server, request
+from repro.serve import ServeConfig, Server, request
 
 
 def main() -> None:
@@ -37,8 +37,9 @@ def main() -> None:
     # autostart=False + submit-all + start(): every request is queued
     # before the first batch closes, so coalescing is deterministic —
     # ceil(requests / max_batch) batches per bucket
-    srv = Server(max_batch_size=args.max_batch,
-                 max_wait_us=args.max_wait_us, autostart=False)
+    srv = Server(config=ServeConfig(max_batch_size=args.max_batch,
+                                    max_wait_us=args.max_wait_us,
+                                    autostart=False))
     futs = []
     for seed in range(args.requests):
         futs.append(srv.submit(request(

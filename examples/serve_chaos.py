@@ -28,7 +28,8 @@ from __future__ import annotations
 import argparse
 import time
 
-from repro.serve import (Overloaded, RetryPolicy, Server, WorkerCrashed,
+from repro.serve import (Overloaded, RetryPolicy, ServeConfig, Server,
+                         WorkerCrashed,
                          request)
 from repro.testing import faults
 
@@ -43,10 +44,11 @@ def main() -> None:
                     help="requests per incident")
     args = ap.parse_args()
 
-    srv = Server(max_batch_size=4, max_wait_us=500.0,
-                 max_queue=8, overload="reject",
-                 retry=RetryPolicy(max_retries=1, backoff_s=0.001),
-                 fallback="reference", breaker_failures=2)
+    srv = Server(config=ServeConfig(
+        max_batch_size=4, max_wait_us=500.0,
+        max_queue=8, overload="reject",
+        retry=RetryPolicy(max_retries=1, backoff_s=0.001),
+        fallback="reference", breaker_failures=2))
 
     # -- incident 1: the pallas backend cannot compile ------------------
     print("# incident 1: pallas compile fails -> reference fallback")

@@ -2,4 +2,4 @@
 complex tensor reuse, as a production-grade JAX training/inference
 framework (see DESIGN.md)."""
 
-__version__ = "0.9.0"
+__version__ = "0.10.0"

@@ -34,10 +34,12 @@ from ..exec import (EXECUTOR_REGISTRY, Executor, get_backend, list_backends,
                     register_backend)
 from .artifacts import AnalyzedGraph, CoDesigned, CompiledPlan, TracedGraph
 from .cache import CodesignCache, frontend_fingerprint, graph_fingerprint
+from .config import CodesignConfig, ExecConfig, ServeConfig
 from .session import PHASES, Session
 
 __all__ = [
     "Session", "PHASES",
+    "CodesignConfig", "ExecConfig", "ServeConfig",
     "TracedGraph", "AnalyzedGraph", "CoDesigned", "CompiledPlan",
     "CodesignCache", "frontend_fingerprint", "graph_fingerprint",
     "HardwareModel", "V5E",

@@ -18,10 +18,11 @@ from typing import TYPE_CHECKING, Any, Dict, Optional, Tuple
 
 from ..configs.base import ArchConfig
 from ..core.graph import OpGraph
-from ..core.lowering import ExecPlan, GroupKernel
+from ..core.lowering import ExecPlan, GroupKernel, ShardedExecPlan
 from ..core.policy import CelloPlan
 from ..core.reuse import ReuseAnalysis
 from ..core.schedule import CoDesignResult, EvaluatedSchedule
+from .config import UNSET as _UNSET
 
 if TYPE_CHECKING:                                      # pragma: no cover
     from ..frontends.expr import Program
@@ -65,11 +66,11 @@ class TracedGraph:
     def analyze(self) -> "AnalyzedGraph":
         return self.session.analyze(self)
 
-    def codesign(self, **kwargs) -> "CoDesigned":
+    def codesign(self, config=None, **kwargs) -> "CoDesigned":
         """Convenience: codesign straight from the trace.  The reuse
         analysis is computed only if the search actually runs, so a disk
         cache hit skips it entirely."""
-        return self.session.codesign(self, **kwargs)
+        return self.session.codesign(self, config, **kwargs)
 
     def __repr__(self) -> str:
         return (f"TracedGraph({self.arch!r}, phase={self.phase!r}, "
@@ -93,8 +94,8 @@ class AnalyzedGraph:
     def pin_candidates(self):
         return self.analysis.ranked_pin_candidates()
 
-    def codesign(self, **kwargs) -> "CoDesigned":
-        return self.session.codesign(self, **kwargs)
+    def codesign(self, config=None, **kwargs) -> "CoDesigned":
+        return self.session.codesign(self, config, **kwargs)
 
     def __repr__(self) -> str:
         multi = sum(1 for t in self.analysis.tensors.values()
@@ -137,9 +138,11 @@ class CoDesigned:
     def energy_ratio(self, baseline: str = "seq-implicit") -> float:
         return self.result.energy_ratio(baseline)
 
-    def lower(self, *, seq: Optional[int] = None,
-              backend: str = "reference") -> "CompiledPlan":
-        return self.session.lower(self, seq=seq, backend=backend)
+    def lower(self, config=None, *, seq: Optional[int] = None,
+              backend: Optional[str] = None,
+              mesh=None) -> "CompiledPlan":
+        return self.session.lower(self, config, seq=seq, backend=backend,
+                                  mesh=mesh)
 
     def __repr__(self) -> str:
         s = self.best.schedule
@@ -181,6 +184,11 @@ class CompiledPlan:
     # (`core.lowering.plan_execution`)
     exec_plan: Optional[ExecPlan] = dataclasses.field(
         default=None, repr=False, compare=False)
+    # mesh partitioning (frontend plans lowered with mesh=): row blocks,
+    # CSR entry windows, gather/psum/halo exchange sets
+    # (`core.lowering.partition_plan`); None for single-device plans
+    sharded: Optional[ShardedExecPlan] = dataclasses.field(
+        default=None, repr=False, compare=False)
 
     @property
     def arch(self) -> str:
@@ -209,16 +217,30 @@ class CompiledPlan:
                           data_iter=data_iter, n_steps=n_steps, **kwargs)
 
     def run(self, feeds=None, *, seed: int = 0,
-            backend: Optional[str] = None) -> Dict[str, Any]:
+            backend: Optional[str] = None,
+            config=None) -> Dict[str, Any]:
         """Execute a frontend plan through an execution backend.
 
-        ``backend`` overrides the plan's default (picked at ``lower()``):
-        ``"reference"`` replays the co-designed schedule order through the
-        jax.numpy interpreter — ops are pure, so this matches
-        natural-order evaluation bit-for-bit; ``"pallas"`` runs each
-        fusion group as tile-streaming kernels, matching reference within
-        the tolerances documented in ``docs/execution_backends.md``.
+        ``backend`` (or ``config=ExecConfig(backend=...)``) overrides the
+        plan's default (picked at ``lower()``): ``"reference"`` replays
+        the co-designed schedule order through the jax.numpy
+        interpreter — ops are pure, so this matches natural-order
+        evaluation bit-for-bit; ``"pallas"`` runs each fusion group as
+        tile-streaming kernels, matching reference within the tolerances
+        documented in ``docs/execution_backends.md``.  Plans lowered with
+        ``mesh=`` execute sharded on either backend
+        (``docs/distributed.md``).
         """
+        if config is not None:
+            if backend is not None:
+                raise TypeError("run(): pass either config= or backend=, "
+                                "not both")
+            if config.mesh is not None:
+                raise ValueError("the mesh is fixed when the plan is "
+                                 "lowered; re-lower with "
+                                 "Session.lower(..., mesh=...)")
+            backend = config.backend
+            config.apply_toggles()
         if self.trace is None or self.trace.program is None:
             raise ValueError("run() needs a frontend-traced plan "
                              "(Session.trace(workload=...) or "
@@ -227,18 +249,43 @@ class CompiledPlan:
         return get_backend(backend or self.backend).run(
             self, feeds=feeds, seed=seed)
 
-    def batched(self, *, backend: Optional[str] = None,
-                donate: Optional[bool] = None):
+    def batched(self, config=None, *, backend: Optional[str] = None,
+                donate=_UNSET):
         """Wrap this frontend plan for batched serving: one vmapped
         dispatch answers a whole batch of requests (operator leaves
         shared, input leaves batched) — see ``repro.serve.BatchedPlan``.
+
+        ``donate=`` is deprecated since 0.10: pass
+        ``config=ExecConfig(donate=...)`` (``docs/api_migration.md``).
         """
+        donate_val: Optional[bool] = None
+        if donate is not _UNSET:
+            if config is not None:
+                raise TypeError("batched(): pass either config= or "
+                                "donate=, not both")
+            import warnings
+            warnings.warn(
+                "batched(donate=...) is deprecated since 0.10 and will "
+                "be removed in 0.11; pass config=ExecConfig(donate=...) "
+                "instead (see docs/api_migration.md)",
+                DeprecationWarning, stacklevel=2)
+            donate_val = donate
+        if config is not None:
+            if backend is not None:
+                raise TypeError("batched(): pass either config= or "
+                                "backend=, not both")
+            if config.mesh is not None:
+                raise ValueError("the mesh is fixed when the plan is "
+                                 "lowered; re-lower with "
+                                 "Session.lower(..., mesh=...)")
+            backend = config.backend
+            donate_val = config.donate
         if self.trace is None or self.trace.program is None:
             raise ValueError("batched() needs a frontend-traced plan "
                              "(Session.trace(workload=...) or "
                              "Session.from_graph(program))")
         from ..serve import BatchedPlan                  # lazy: pulls in jax
-        return BatchedPlan(self, backend=backend, donate=donate)
+        return BatchedPlan(self, backend=backend, donate=donate_val)
 
     # -- introspection --------------------------------------------------
     def report(self) -> Dict[str, Any]:
@@ -260,6 +307,12 @@ class CompiledPlan:
                 out["exec_fused_from"] = ep.n_prefuse
                 out["rolled_iters"] = (ep.roll.n_iters
                                        if ep.roll is not None else 0)
+            if self.sharded is not None:
+                out["mesh"] = {"axis": self.sharded.axis,
+                               "n_shards": self.sharded.n_shards,
+                               "rows_per_shard":
+                                   self.sharded.rows_per_shard,
+                               "plan": self.sharded.describe()}
         cd = self.codesigned
         if cd is not None:
             m = cd.best.metrics
@@ -354,6 +407,9 @@ class CompiledPlan:
             if self.exec_plan is not None:
                 lines.append(f"  execution plan    : "
                              f"{self.exec_plan.describe()}")
+            if self.sharded is not None:
+                lines.append(f"  device mesh       : "
+                             f"{self.sharded.describe()}")
         else:
             lines += [
                 f"  flash attention   : {p.use_flash_attention} "

@@ -32,8 +32,8 @@ from ..configs import get_config, list_archs
 from ..configs.base import ArchConfig
 from ..core.costmodel import HardwareModel, V5E
 from ..core.graph import OpGraph
-from ..core.lowering import (decode_graph, layer_graph, plan_execution,
-                             select_group_kernels)
+from ..core.lowering import (decode_graph, layer_graph, partition_plan,
+                             plan_execution, select_group_kernels)
 from ..core.policy import CelloPlan
 from ..core.policy import default_plan as _default_plan
 from ..core.policy import lower_codesign
@@ -41,6 +41,7 @@ from ..core.reuse import analyze as _analyze
 from ..core.schedule import sparse_operand_groups
 from ..core.search import DEFAULT_SPLITS, get_strategy, run_codesign
 from .artifacts import AnalyzedGraph, CoDesigned, CompiledPlan, TracedGraph
+from .config import CodesignConfig, ExecConfig, UNSET, resolve_config
 from .cache import (CodesignCache, algo_fingerprint, cache_disabled_by_env,
                     frontend_fingerprint, graph_fingerprint, hw_fingerprint,
                     strategy_fingerprint)
@@ -257,20 +258,31 @@ class Session:
                                  analysis=_analyze(traced.graph))
 
     # -- stage 3: codesign ----------------------------------------------
-    def codesign(self, staged: Union[TracedGraph, AnalyzedGraph], *,
-                 strategy="default",
-                 capacity_bytes: Optional[int] = None,
-                 max_orders: int = 16,
-                 splits: Sequence[float] = DEFAULT_SPLITS,
-                 overbook: float = 0.0,
-                 use_cache: Optional[bool] = None) -> CoDesigned:
+    def codesign(self, staged: Union[TracedGraph, AnalyzedGraph],
+                 config: Optional[CodesignConfig] = None, *,
+                 strategy=UNSET,
+                 capacity_bytes=UNSET,
+                 max_orders=UNSET,
+                 splits=UNSET,
+                 overbook=UNSET,
+                 use_cache=UNSET) -> CoDesigned:
         """The joint schedule × buffer search (disk-cached).
+
+        Knobs arrive as one :class:`~repro.api.config.CodesignConfig`;
+        the individual keywords are a 0.9-era spelling kept for one
+        release (DeprecationWarning — see ``docs/api_migration.md``).
 
         ``overbook`` lets a sparse operand's pin exceed the explicit
         region by that fraction of its capacity: an indptr-aligned row
         prefix pins while the spill tail streams per pass.  ``0.0``
         (default) keeps the historical all-or-nothing pins bit-for-bit.
         """
+        cfg = resolve_config(
+            CodesignConfig, config,
+            dict(strategy=strategy, capacity_bytes=capacity_bytes,
+                 max_orders=max_orders, splits=splits, overbook=overbook,
+                 use_cache=use_cache),
+            "Session.codesign")
         traced = staged if isinstance(staged, TracedGraph) else staged.trace
         with _stage("codesign", arch=traced.arch,
                     phase=traced.phase) as sp:
@@ -279,13 +291,13 @@ class Session:
                 natural_analysis=(staged.analysis
                                   if isinstance(staged, AnalyzedGraph)
                                   else None),
-                strategy=strategy, capacity_bytes=capacity_bytes,
-                max_orders=max_orders, splits=splits, overbook=overbook,
-                use_cache=use_cache)
+                strategy=cfg.strategy, capacity_bytes=cfg.capacity_bytes,
+                max_orders=cfg.max_orders, splits=cfg.splits,
+                overbook=cfg.overbook, use_cache=cfg.use_cache)
 
     def _codesign(self, traced: TracedGraph, sp, *, natural_analysis,
                   strategy, capacity_bytes, max_orders, splits, overbook,
-                  use_cache) -> CoDesigned:
+                  use_cache, shards: int = 1) -> CoDesigned:
         splits = list(splits)    # one-shot iterables: key + search see same
         capacity = capacity_bytes or self.capacity_bytes
         strategy_obj = get_strategy(strategy)
@@ -306,7 +318,11 @@ class Session:
                 cached = False
         key = None
         if cached:
+            # shards only enters the key when > 1 so pre-0.10 cache
+            # entries keep hitting for single-device plans
+            shard_key = {"shards": shards} if shards > 1 else {}
             key = self.cache.key(
+                **shard_key,
                 # any edit to the search/sim/cost code invalidates old entries
                 algo=algo_fingerprint(),
                 arch=traced.arch, phase=traced.phase, batch=traced.batch,
@@ -341,16 +357,35 @@ class Session:
                           from_cache=False)
 
     # -- stage 4: lower --------------------------------------------------
-    def lower(self, designed: CoDesigned, *,
+    def lower(self, designed: CoDesigned,
+              config: Optional[ExecConfig] = None, *,
               seq: Optional[int] = None,
-              backend: str = "reference") -> CompiledPlan:
+              backend: Optional[str] = None,
+              mesh=None) -> CompiledPlan:
         """Turn the co-design decision into an executable CelloPlan.
 
         ``backend`` picks the default execution backend ``plan.run()``
         uses for frontend (HPC) plans — any name registered in
         ``repro.exec`` (``"reference"``, ``"pallas"``, ...); each run can
         still override it via ``run(backend=...)``.
+
+        ``mesh`` (frontend plans only) partitions the co-designed DAG
+        across a 1-D device mesh: the shard count ``K`` or an
+        ``(axis, K)`` pair.  Sharded plans re-run the schedule × buffer
+        search at aggregate capacity ``K·C`` (each shard pins/streams
+        its own row block) and execute via ``shard_map`` on the pallas
+        backend or a bitwise simulated mesh on the reference backend —
+        see ``docs/distributed.md``.  An :class:`ExecConfig` consolidates
+        these (plus the pallas donation/interpret toggles).
         """
+        if config is not None:
+            if backend is not None or mesh is not None:
+                raise TypeError("Session.lower: pass either config= or "
+                                "backend=/mesh=, not both")
+            backend = config.backend
+            mesh = config.mesh
+            config.apply_toggles()
+        backend = backend if backend is not None else "reference"
         traced = designed.trace
         with _stage("lower", arch=traced.arch, phase=traced.phase,
                     backend=backend):
@@ -359,7 +394,12 @@ class Session:
                     raise ValueError("frontend (HPC) plans take no seq=: "
                                      "block sizing comes from the "
                                      "expression shapes")
-                return self._lower_frontend(designed, backend=backend)
+                return self._lower_frontend(designed, backend=backend,
+                                            mesh=mesh)
+            if mesh is not None:
+                raise ValueError("mesh= partitioning applies to frontend "
+                                 "(HPC) plans; LLM plans distribute via "
+                                 "repro.launch")
             if seq is None:
                 seq = traced.seq if traced.seq is not None else \
                     (traced.kv_len or 4096)
@@ -369,13 +409,33 @@ class Session:
                                 codesigned=designed, backend=backend)
 
     def _lower_frontend(self, designed: CoDesigned, *,
-                        backend: str = "reference") -> CompiledPlan:
+                        backend: str = "reference",
+                        mesh=None) -> CompiledPlan:
         """HPC/frontend lowering: no LLM kernels or remat save-sets apply;
         the plan carries the co-designed split, a kernel shape per fusion
         group (`core.lowering.select_group_kernels`), and executes in the
         scheduled group order through an execution backend
         (`plan.run(backend=...)`)."""
         traced = designed.trace
+        axis, n_shards = ("shards", 1) if mesh is None else \
+            (("shards", mesh) if isinstance(mesh, int)
+             else (mesh[0], int(mesh[1])))
+        if n_shards > 1:
+            # co-design the *global* graph against the mesh's aggregate
+            # buffer capacity K·C: each shard holds a 1/K row block, so a
+            # pin that fits K·C globally fits C per shard — this is what
+            # lets a matrix too large to pin on one device pin once the
+            # mesh is wide enough (TABLE 11's crossover)
+            with _stage("codesign", arch=traced.arch,
+                        phase=traced.phase) as sp2:
+                sp2.annotate(shards=n_shards)
+                designed = self._codesign(
+                    traced, sp2, natural_analysis=None,
+                    strategy=designed.strategy,
+                    capacity_bytes=designed.capacity_bytes * n_shards,
+                    max_orders=16, splits=DEFAULT_SPLITS,
+                    overbook=getattr(designed.result, "overbook", 0.0),
+                    use_cache=None, shards=n_shards)
         sched = designed.result.best.schedule
         partial = dict(getattr(sched.pins, "partial", None) or {})
         kernels = select_group_kernels(traced.graph, sched.groups,
@@ -402,6 +462,14 @@ class Session:
         exec_plan = plan_execution(traced.graph, kernels,
                                    sched.config.explicit_bytes,
                                    program=traced.program, partial=partial)
+        sharded = None
+        if mesh is not None:
+            # K=1 still goes through partition_plan so the degenerate
+            # mesh validates exactly like a real one; executors only
+            # take the sharded route when n_shards > 1
+            sharded = partition_plan(exec_plan, (axis, n_shards),
+                                     program=traced.program)
+            sparse_note += f" mesh={axis}:{n_shards}"
         plan = CelloPlan(
             arch=traced.arch,
             use_flash_attention=False, q_block=0, kv_block=0,
@@ -414,7 +482,8 @@ class Session:
                    + sparse_note))
         return CompiledPlan(cfg=None, plan=plan, trace=traced,
                             codesigned=designed, backend=backend,
-                            group_kernels=kernels, exec_plan=exec_plan)
+                            group_kernels=kernels, exec_plan=exec_plan,
+                            sharded=sharded)
 
     # -- fast path (no search) -------------------------------------------
     def default_plan(self, *, seq: int = 4096) -> CompiledPlan:

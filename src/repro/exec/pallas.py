@@ -168,11 +168,21 @@ def _classify_nodes(nodes) -> Dict[str, str]:
 # --------------------------------------------------------------------------
 
 class _StreamCall:
-    """One tile-streaming ``pl.pallas_call`` for a :class:`StreamPass`."""
+    """One tile-streaming ``pl.pallas_call`` for a :class:`StreamPass`.
 
-    def __init__(self, program, sp: StreamPass, needed: Set[str]):
+    With ``defer_finalize=True`` (sharded execution) the kernel emits raw
+    per-shard reduction partials and skips the in-kernel scalar finalize
+    work: no ``sqrt`` on norm accumulators, no final-tile epilogue — the
+    sharded driver combines partials with ``psum`` and replays the scalar
+    chain (:attr:`finalize_nodes`) outside the kernel, inside the
+    ``shard_map`` trace."""
+
+    def __init__(self, program, sp: StreamPass, needed: Set[str], *,
+                 defer_finalize: bool = False,
+                 resident_rename: Optional[Dict[str, str]] = None):
         self.nodes = [program.nodes[o] for o in sp.ops]
         self.sp = sp
+        self.defer = defer_finalize
         produced = {nd.name for nd in self.nodes}
         shapes = {n: program.nodes[n].shape
                   for nd in self.nodes for n in (*nd.inputs, nd.name)}
@@ -181,7 +191,10 @@ class _StreamCall:
 
         stream_in: List[str] = []
         scalar_in: List[str] = []
-        res_in = list(sp.resident)
+        # sharded execution renames gathered operands to "<name>@g" view
+        # aliases; the pass's resident set must follow those renames
+        rename = resident_rename or {}
+        res_in = [rename.get(n, n) for n in sp.resident]
         # derived resident inputs: per-entry CSR row ids, computed ONCE
         # per dispatch from indptr (outside the kernel) instead of a
         # searchsorted per grid step; keyed by indptr so spmv ops sharing
@@ -260,9 +273,10 @@ class _StreamCall:
         # streamed / scalar values only when read outside this pass
         self.red_out = [nd.name for nd in self.nodes
                         if self.classes[nd.name] == "reduce"]
-        self.sca_out = [nd.name for nd in self.nodes
-                        if self.classes[nd.name] in ("eager", "epilogue")
-                        and nd.name in needed]
+        self.sca_out = [] if defer_finalize else \
+            [nd.name for nd in self.nodes
+             if self.classes[nd.name] in ("eager", "epilogue")
+             and nd.name in needed]
         self.stream_out = [nd.name for nd in self.nodes
                            if self.classes[nd.name] == "tiled"
                            and nd.name in needed]
@@ -423,7 +437,9 @@ class _StreamCall:
         stream_out_set = set(self.stream_out)
         sca_out_set = set(self.sca_out)
         red_set = set(self.red_out)
-        epi_nodes = [nd for nd in nodes if classes[nd.name] == "epilogue"]
+        epi_nodes = [] if self.defer else \
+            [nd for nd in nodes if classes[nd.name] == "epilogue"]
+        defer = self.defer
 
         def kernel(*refs):
             i = pl.program_id(0)
@@ -491,7 +507,9 @@ class _StreamCall:
                                        stv(nd.inputs[1]),
                                        preferred_element_type=dtype)
                     _accumulate(oref[nd.name], part, i)
-                    if nd.op == "norm":
+                    if nd.op == "norm" and not defer:
+                        # deferred: the sqrt applies after the cross-shard
+                        # psum, not to this shard's partial
                         _sqrt_at(oref[nd.name], i == last)
             if epi_nodes or sca_out_set:
                 @pl.when(i == last)
@@ -546,11 +564,27 @@ class _StreamCall:
                    for n in self.scalar_in])
         outs = call(*args)
         names = self.red_out + self.sca_out + self.stream_out
+        keep = (self.needed | set(self.red_out)) if self.defer \
+            else self.needed
         result = {}
         for n, v in zip(names, outs):
-            if n in self.needed:
+            if n in keep:
                 result[n] = v[0] if self.shapes[n] == () else v
         return result
+
+    @property
+    def finalize_nodes(self):
+        """The scalar (eager + epilogue) nodes a deferring driver must
+        replay after combining reduction partials, in pass order."""
+        return [nd for nd in self.nodes
+                if self.classes[nd.name] in ("eager", "epilogue")]
+
+    @property
+    def norm_reductions(self) -> Set[str]:
+        """Reduction outputs that are *squared* partials when deferred
+        (the sqrt applies after the cross-shard sum)."""
+        return {nd.name for nd in self.nodes
+                if nd.op == "norm" and self.classes[nd.name] == "reduce"}
 
     def __call__(self, env: Dict[str, Any]) -> Dict[str, Any]:
         import jax.numpy as jnp
@@ -945,15 +979,24 @@ class PallasExecutor(Executor):
 
     name = "pallas"
 
-    def compile(self, plan) -> _SingleProgram:
+    def compile(self, plan) -> "_SingleProgram":
         # fault-injection site (docs/robustness.md): exec.compile@pallas —
         # here as well as in the memoized run() driver, because
         # serve.BatchedPlan compiles through compile/compile_pure directly
         faults.check("exec.compile", backend=self.name)
+        sharded = getattr(plan, "sharded", None)
+        if sharded is not None and sharded.n_shards > 1:
+            from .sharded import ShardedProgram
+            return ShardedProgram(plan)
         return _SingleProgram(plan)
 
     def compile_pure(self, plan):
         faults.check("exec.compile", backend=self.name)
+        sharded = getattr(plan, "sharded", None)
+        if sharded is not None and sharded.n_shards > 1:
+            raise ValueError(
+                "mesh-sharded plans have no pure (vmap-composable) core; "
+                "serve/batch them unsharded or run() them directly")
         # the single program's traced core, without the dispatch driver
         # (donation, counters, its own jit): composable under vmap
         return _SingleProgram(plan).pure

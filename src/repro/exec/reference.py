@@ -140,6 +140,13 @@ class ReferenceExecutor(Executor):
     def compile(self, plan):
         # fault-injection site (docs/robustness.md): exec.compile@reference
         faults.check("exec.compile", backend=self.name)
+        sharded = getattr(plan, "sharded", None)
+        if sharded is not None and sharded.n_shards > 1:
+            # mesh-partitioned plan: the sharded oracle replays the same
+            # per-op rules under shard_map, gathering reduction operands
+            # whole so results stay bitwise-identical to this backend
+            from .sharded import ShardedReference
+            return ShardedReference(plan)
         program = plan_program(plan)
         order = plan_order(plan)
 

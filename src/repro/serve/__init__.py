@@ -45,6 +45,7 @@ Robustness quickstart::
         ...                       # typed, raised in the caller, no hang
     print(srv.health()["status"], srv.stats()["fallbacks"])
 """
+from ..api.config import ServeConfig
 from .batched import BatchedPlan
 from .errors import (CircuitOpen, DeadlineExceeded, Overloaded, ServeError,
                      ServerClosed, WorkerCrashed)
@@ -55,5 +56,6 @@ from .server import Server, SolveResult
 
 __all__ = ["BatchedPlan", "BucketKey", "CircuitBreaker", "CircuitOpen",
            "DeadlineExceeded", "Overloaded", "PlanRouter", "RetryPolicy",
-           "ServeError", "Server", "ServerClosed", "SolveRequest",
+           "ServeConfig", "ServeError", "Server", "ServerClosed",
+           "SolveRequest",
            "SolveResult", "WorkerCrashed", "density_bucket", "request"]

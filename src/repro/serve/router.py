@@ -90,11 +90,50 @@ class SolveRequest:
     seed: int = 0
     feeds: Optional[Mapping[str, Any]] = dataclasses.field(
         default=None, compare=False)
+    # per-request serving deadline (seconds from submit); None = the
+    # server's default.  Serving metadata, not bucket identity.
+    deadline_s: Optional[float] = dataclasses.field(
+        default=None, compare=False)
+
+    def bucket(self) -> BucketKey:
+        """Canonical bucket key for this request (raises early on
+        unknown workloads/params — before anything is queued)."""
+        from ..frontends.hpc import WORKLOADS
+        if self.workload not in WORKLOADS:
+            raise KeyError(f"unknown HPC workload {self.workload!r}; "
+                           f"have {sorted(WORKLOADS)}")
+        sig = inspect.signature(WORKLOADS[self.workload])
+        try:
+            bound = sig.bind(**dict(self.params))
+        except TypeError as e:
+            raise TypeError(f"workload {self.workload!r}: {e}") from None
+        bound.apply_defaults()
+        params = dict(bound.arguments)
+        density = params.get("density")
+        if density is not None:
+            bucketed = density_bucket(density)
+            params["density"] = bucketed
+            dlabel = f"d{bucketed:g}"
+        elif "pattern" in params:
+            dlabel = str(params["pattern"])
+            if params.get("bandwidth") is not None:
+                dlabel += f"/b{params['bandwidth']}"
+        else:
+            dlabel = "dense"
+        dt = np.dtype(self.dtype)
+        if dt.kind != "f":
+            raise ValueError(f"request dtype must be a float dtype, "
+                             f"got {self.dtype}")
+        return BucketKey(workload=self.workload,
+                         params=tuple(sorted(params.items())),
+                         dtype=dt.name, density=dlabel,
+                         backend=self.backend)
 
 
 def request(workload: str, *, dtype: str = "float32",
             backend: str = "reference", seed: int = 0,
             feeds: Optional[Mapping[str, Any]] = None,
+            deadline_s: Optional[float] = None,
             **params) -> SolveRequest:
     """Build a :class:`SolveRequest`; workload params go as kwargs::
 
@@ -107,7 +146,7 @@ def request(workload: str, *, dtype: str = "float32",
     return SolveRequest(workload=workload,
                         params=tuple(sorted(params.items())),
                         dtype=dt.name, backend=backend, seed=seed,
-                        feeds=feeds)
+                        feeds=feeds, deadline_s=deadline_s)
 
 
 class _PlanEntry:
@@ -158,38 +197,10 @@ class PlanRouter:
 
     # -- canonicalization ----------------------------------------------
     def bucket(self, req: SolveRequest) -> BucketKey:
-        """Canonical bucket key for a request (raises early on unknown
-        workloads/params — before anything is queued)."""
-        from ..frontends.hpc import WORKLOADS
-        if req.workload not in WORKLOADS:
-            raise KeyError(f"unknown HPC workload {req.workload!r}; "
-                           f"have {sorted(WORKLOADS)}")
-        sig = inspect.signature(WORKLOADS[req.workload])
-        try:
-            bound = sig.bind(**dict(req.params))
-        except TypeError as e:
-            raise TypeError(f"workload {req.workload!r}: {e}") from None
-        bound.apply_defaults()
-        params = dict(bound.arguments)
-        density = params.get("density")
-        if density is not None:
-            bucketed = density_bucket(density)
-            params["density"] = bucketed
-            dlabel = f"d{bucketed:g}"
-        elif "pattern" in params:
-            dlabel = str(params["pattern"])
-            if params.get("bandwidth") is not None:
-                dlabel += f"/b{params['bandwidth']}"
-        else:
-            dlabel = "dense"
-        dt = np.dtype(req.dtype)
-        if dt.kind != "f":
-            raise ValueError(f"request dtype must be a float dtype, "
-                             f"got {req.dtype}")
-        return BucketKey(workload=req.workload,
-                         params=tuple(sorted(params.items())),
-                         dtype=dt.name, density=dlabel,
-                         backend=req.backend)
+        """Canonical bucket key for a request — delegates to
+        :meth:`SolveRequest.bucket` (kept as a router method so callers
+        holding only a router keep working)."""
+        return req.bucket()
 
     # -- the cache ------------------------------------------------------
     def plan_for(self, key: BucketKey) -> _PlanEntry:

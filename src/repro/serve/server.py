@@ -80,10 +80,11 @@ from typing import Any, Dict, List, Optional
 from .. import obs
 from ..runtime.fault_tolerance import run_with_restarts
 from ..testing import faults
+from ..api.config import ServeConfig, UNSET as _UNSET, resolve_config
 from .errors import (CircuitOpen, DeadlineExceeded, Overloaded, ServerClosed,
                      WorkerCrashed)
 from .resilience import CircuitBreaker, RetryPolicy
-from .router import BucketKey, PlanRouter, SolveRequest
+from .router import BucketKey, PlanRouter, SolveRequest, request
 
 __all__ = ["Server", "SolveResult"]
 
@@ -192,16 +193,43 @@ class Server:
     #: what ``submit`` does when the queue holds ``max_queue`` requests
     OVERLOAD_POLICIES = ("block", "reject", "shed_oldest")
 
-    def __init__(self, router: Optional[PlanRouter] = None, *,
-                 max_batch_size: int = 16, max_wait_us: float = 2000.0,
-                 session=None, max_plans: int = 8, autostart: bool = True,
-                 policy: str = "oldest",
-                 max_queue: Optional[int] = None, overload: str = "block",
-                 retry: Optional[RetryPolicy] = None,
-                 fallback: Optional[str] = "reference",
-                 breaker_failures: Optional[int] = 3,
-                 breaker_reset_s: float = 30.0,
-                 max_worker_restarts: int = 2):
+    def __init__(self, router: Optional[PlanRouter] = None,
+                 config: Optional[ServeConfig] = None, *,
+                 session=None,
+                 max_batch_size=_UNSET, max_wait_us=_UNSET,
+                 max_plans=_UNSET, autostart=_UNSET, policy=_UNSET,
+                 max_queue=_UNSET, overload=_UNSET, retry=_UNSET,
+                 fallback=_UNSET, breaker_failures=_UNSET,
+                 breaker_reset_s=_UNSET, max_worker_restarts=_UNSET):
+        # a config passed positionally lands in the router slot — shift it
+        if isinstance(router, ServeConfig):
+            if config is not None:
+                raise TypeError("Server: got two configs (positional and "
+                                "config=)")
+            router, config = None, router
+        # one ServeConfig carries every knob; the individual keywords are
+        # the 0.9 spelling, kept one release behind a DeprecationWarning
+        cfg = resolve_config(
+            ServeConfig, config,
+            dict(max_batch_size=max_batch_size, max_wait_us=max_wait_us,
+                 max_plans=max_plans, autostart=autostart, policy=policy,
+                 max_queue=max_queue, overload=overload, retry=retry,
+                 fallback=fallback, breaker_failures=breaker_failures,
+                 breaker_reset_s=breaker_reset_s,
+                 max_worker_restarts=max_worker_restarts),
+            "Server")
+        max_batch_size = cfg.max_batch_size
+        max_wait_us = cfg.max_wait_us
+        max_plans = cfg.max_plans
+        autostart = cfg.autostart
+        policy = cfg.policy
+        max_queue = cfg.max_queue
+        overload = cfg.overload
+        retry = cfg.retry
+        fallback = cfg.fallback
+        breaker_failures = cfg.breaker_failures
+        breaker_reset_s = cfg.breaker_reset_s
+        max_worker_restarts = cfg.max_worker_restarts
         if max_batch_size < 1:
             raise ValueError("max_batch_size must be >= 1")
         if max_wait_us < 0:
@@ -272,10 +300,24 @@ class Server:
 
         ``deadline_s`` (relative, from now) bounds how long the request
         may wait for dispatch: expiry fails *only* this request's future
-        with :class:`DeadlineExceeded`.  A full queue is handled by the
-        server's ``overload`` policy — ``reject`` raises
+        with :class:`DeadlineExceeded`; omitted, it defaults to the
+        request's own ``deadline_s`` field.  A full queue is handled by
+        the server's ``overload`` policy — ``reject`` raises
         :class:`Overloaded` here, in the caller.
+
+        Passing a dict instead of a :class:`SolveRequest` is deprecated
+        since 0.10 (``docs/api_migration.md``).
         """
+        if isinstance(req, dict):
+            import warnings
+            warnings.warn(
+                "Server.submit(dict) is deprecated since 0.10 and will "
+                "be removed in 0.11; pass a SolveRequest (see "
+                "repro.serve.request and docs/api_migration.md)",
+                DeprecationWarning, stacklevel=2)
+            req = request(**req)
+        if deadline_s is None:
+            deadline_s = req.deadline_s
         key = self.router.bucket(req)      # raises here, not on the worker
         if deadline_s is not None and deadline_s <= 0:
             raise ValueError("deadline_s must be > 0")
@@ -733,7 +775,25 @@ class Server:
     def _attempt(self, key: BucketKey, batch: List[_Item], lb: str):
         """One attempt at serving ``batch`` with ``key``'s plan (which
         may be the fallback variant — stats stay under the primary
-        bucket's label ``lb``)."""
+        bucket's label ``lb``).
+
+        float64 buckets build *and* dispatch under jax's thread-local
+        x64 mode: without it jnp silently downcasts to float32, so the
+        bucket's advertised dtype would be a lie.  The context is
+        scoped to this worker call — fp32 and fp64 buckets coexist on
+        one server (jit caches key on operand dtypes, so neither mode
+        poisons the other's compiled plans).
+        """
+        import contextlib
+        if key.dtype == "float64":
+            import jax
+            x64 = jax.experimental.enable_x64()
+        else:
+            x64 = contextlib.nullcontext()
+        with x64:
+            return self._attempt_inner(key, batch, lb)
+
+    def _attempt_inner(self, key: BucketKey, batch: List[_Item], lb: str):
         t0 = time.perf_counter()
         with obs.span("serve.batch_build", bucket=lb):
             entry = self.router.plan_for(key)

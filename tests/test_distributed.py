@@ -1,5 +1,7 @@
 """Distributed-optimisation mechanics: microbatch accumulation equivalence
-and the compressed cross-pod all-reduce under shard_map."""
+and the compressed cross-pod all-reduce under shard_map — plus the HPC
+side: co-designed DAGs partitioned across a device mesh
+(``Session.lower(mesh=...)``, ``core.lowering.partition_plan``)."""
 import json
 import subprocess
 import sys
@@ -102,3 +104,219 @@ print(json.dumps({"max_drift": max(drift), "last_drift": drift[-1]}))
     assert res.returncode == 0, res.stderr[-2000:]
     out = json.loads(res.stdout.strip().splitlines()[-1])
     assert out["max_drift"] < 5e-4, out     # ~int8 step of 0.01-scale grads
+
+# ---------------------------------------------------------------------------
+# HPC plan partitioning: Session.lower(mesh=...) over partition_plan
+# ---------------------------------------------------------------------------
+
+from repro.api import CodesignConfig, ExecConfig, Session
+from repro.core.buffer import MiB
+from repro.core.lowering import PlanPartitionError, partition_plan
+from repro.frontends.reference import make_feeds
+
+
+def _jnp_feeds(program, seed=0):
+    # bitwise contract holds for jax-array feeds: numpy feeds route the
+    # unsharded oracle's matmuls through numpy BLAS, which need not match
+    # XLA bit-for-bit (see docs/distributed.md)
+    return {k: jnp.asarray(v) for k, v in make_feeds(program, seed).items()}
+
+
+def _bitwise(a, b):
+    assert set(a) == set(b)
+    for k in a:
+        assert np.array_equal(np.asarray(a[k]), np.asarray(b[k])), k
+
+
+def test_partition_csr_entry_windows_golden():
+    """cg_sparse splits its CSR triple on indptr-aligned entry windows:
+    the shard boundaries must equal the cumulative row_counts of the
+    deterministic pattern meta, and windows must cover nnz exactly."""
+    from repro.frontends.sparse import row_counts
+    sess = Session()
+    t = sess.trace(workload="cg_sparse", n=256, iters=2)
+    plan = sess.lower(sess.codesign(t), mesh=8)
+    sp = plan.sharded
+    assert sp.n_shards == 8 and sp.rows == 256
+    (lay,) = sp.csr
+    leaf = t.program.nodes[lay.indptr]
+    counts = row_counts(leaf.param("pattern"), 256,
+                        density=leaf.param("density"),
+                        bandwidth=leaf.param("bandwidth"))
+    cum = [0]
+    for c in counts:
+        cum.append(cum[-1] + int(c))
+    assert list(lay.entry_starts) == [cum[k * 32] for k in range(9)]
+    assert lay.entry_starts[-1] == lay.nnz
+    widest = max(b - a for a, b in zip(lay.entry_starts,
+                                       lay.entry_starts[1:]))
+    assert lay.pad_entries >= widest and lay.pad_entries % 8 == 0
+    for k, sl in enumerate(lay.slices):
+        assert sl.rows == 32 and sl.row0 == k * 32
+        assert sl.entries == lay.entry_starts[k + 1] - lay.entry_starts[k]
+
+
+def test_partition_rejections():
+    """Everything the contiguous row-block story cannot express fails
+    loudly at lower time, never at dispatch."""
+    sess = Session()
+    t = sess.trace(workload="cg", n=256, iters=2)
+    plan = sess.lower(sess.codesign(t))
+    # ragged: 256 rows over 3 shards
+    with pytest.raises(PlanPartitionError, match="do not split evenly"):
+        partition_plan(plan.exec_plan, 3, program=t.program)
+    # mttkrp's "abc,cb->ab"-style einsums are not row-block shardable
+    tm = sess.trace(workload="mttkrp", rank=16)
+    pm = sess.lower(sess.codesign(tm))
+    with pytest.raises(PlanPartitionError):
+        partition_plan(pm.exec_plan, 4, program=tm.program)
+    # overbooked partial pins and sharding both claim the row dimension
+    ts = sess.trace(workload="cg_sparse", n=256, iters=2, density=0.3)
+    cds = sess.codesign(ts, CodesignConfig(
+        overbook=0.25, capacity_bytes=int(0.05 * MiB)))
+    partial = dict(getattr(cds.best.schedule.pins, "partial", None) or {})
+    if partial:        # overbook only triggers when the searcher takes it
+        ps = sess.lower(cds)
+        with pytest.raises(PlanPartitionError, match="overbook"):
+            partition_plan(ps.exec_plan, 4, program=ts.program)
+
+
+def test_mesh_k1_degenerates_bitwise():
+    """A one-shard mesh is the single-device plan: same outputs, bit for
+    bit, and the executors take the plain (unsharded) path."""
+    sess = Session()
+    t = sess.trace(workload="cg", n=128, iters=3)
+    cd = sess.codesign(t)
+    feeds = _jnp_feeds(t.program)
+    plain = sess.lower(cd).run(feeds)
+    k1 = sess.lower(cd, mesh=1)
+    assert k1.sharded is not None and k1.sharded.n_shards == 1
+    _bitwise(plain, k1.run(feeds))
+
+
+@pytest.mark.parametrize("wl,params", [
+    ("cg", dict(n=256, iters=4)),
+    ("cg_sparse", dict(n=256, iters=4)),
+    ("jacobi2d", dict(n=64, sweeps=3)),
+    ("power_iteration", dict(n=256, iters=3)),
+])
+def test_sharded_reference_bitwise(wl, params):
+    """The sharded reference oracle simulates the mesh on host (eager
+    per-op dispatch over K row blocks) — no devices needed, and bitwise
+    against the unsharded oracle by construction."""
+    sess = Session()
+    t = sess.trace(workload=wl, **params)
+    cd = sess.codesign(t)
+    feeds = _jnp_feeds(t.program)
+    ref = sess.lower(cd).run(feeds)
+    for k in (4, 8):
+        sharded = sess.lower(cd, mesh=k).run(feeds)
+        _bitwise(ref, sharded)
+
+
+def test_mesh_exchange_sets_golden():
+    """The partition derives the paper-shaped exchange structure: spmv/
+    matmul operands gather, reductions psum, stencils halo-exchange."""
+    sess = Session()
+    t = sess.trace(workload="cg", n=256, iters=4)
+    sp = sess.lower(sess.codesign(t), mesh=8).sharded
+    assert set(sp.gathered) == {"x0", "r0", "p1", "p2", "p3"}
+    assert "rs0" in sp.reduced and "pAp0" in sp.reduced
+    assert not sp.halo
+    tj = sess.trace(workload="jacobi2d", n=64, sweeps=3)
+    spj = sess.lower(sess.codesign(tj), mesh=4).sharded
+    assert set(spj.halo) == {"u1", "u2", "u3"}
+    assert not spj.gathered
+
+
+def test_per_shard_pins_aggregate_capacity():
+    """TABLE 11's crossover: an operator too large for one device's
+    explicit region pins once the mesh is wide enough — the sharded
+    lowering re-codesigns the global graph at aggregate capacity K·C."""
+    sess = Session()
+    t = sess.trace(workload="cg", n=512, iters=4)      # A = 1 MiB fp32
+    cap = int(0.4 * MiB)
+    cd = sess.codesign(t, CodesignConfig(capacity_bytes=cap))
+    assert "A" not in cd.best.schedule.pins            # does not fit C
+    p8 = sess.lower(cd, mesh=8)
+    assert p8.codesigned.capacity_bytes == 8 * cap
+    assert "A" in p8.codesigned.best.schedule.pins     # fits K·C
+    # and the per-shard plan still degenerates bitwise on the oracle
+    feeds = _jnp_feeds(t.program)
+    _bitwise(sess.lower(cd).run(feeds), p8.run(feeds))
+
+
+def test_exec_config_and_deprecation_shims():
+    """The consolidated typed-config surface: config= and the legacy
+    kwargs produce identical plans; mixing them raises; legacy warns."""
+    import warnings
+    sess = Session()
+    t = sess.trace(workload="cg", n=128, iters=2)
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        legacy = sess.codesign(t, strategy="default", overbook=0.0)
+        assert any(issubclass(x.category, DeprecationWarning) for x in w)
+    typed = sess.codesign(t, CodesignConfig(strategy="default"))
+    assert legacy.best.schedule.pins == typed.best.schedule.pins
+    with pytest.raises(TypeError, match="not both"):
+        sess.codesign(t, CodesignConfig(), strategy="default")
+    with pytest.raises(TypeError, match="not both"):
+        sess.lower(typed, ExecConfig(backend="reference"),
+                   backend="reference")
+    plan = sess.lower(typed, ExecConfig(mesh=(  # named axis round-trips
+        "blocks", 4)))
+    assert plan.sharded.axis == "blocks"
+    assert "mesh=blocks:4" in plan.plan.notes
+    # run(config=) picks the backend; a mesh there is rejected (fixed at
+    # lower time)
+    feeds = _jnp_feeds(t.program)
+    out = plan.run(feeds, config=ExecConfig(backend="reference"))
+    _bitwise(out, sess.lower(typed).run(feeds))
+    with pytest.raises(ValueError, match="re-lower"):
+        plan.run(feeds, config=ExecConfig(mesh=2))
+
+
+@pytest.mark.slow
+def test_sharded_pallas_parity_subprocess():
+    """The real distributed path: jit(shard_map) around the single-program
+    pallas executable on 8 forced host devices — one trace, one dispatch,
+    parity with the unsharded oracle within the documented float32
+    tolerance (collectives reassociate reductions)."""
+    code = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+os.environ["CELLO_NO_CACHE"] = "1"
+import sys; sys.path.insert(0, "src")
+import json
+import numpy as np
+import jax.numpy as jnp
+from repro.api import ExecConfig, Session
+from repro.frontends.reference import make_feeds
+
+out = {}
+for wl, params in [("cg", dict(n=256, iters=4)),
+                   ("cg_sparse", dict(n=256, iters=4)),
+                   ("jacobi2d", dict(n=64, sweeps=3))]:
+    sess = Session()
+    t = sess.trace(workload=wl, **params)
+    cd = sess.codesign(t)
+    feeds = {k: jnp.asarray(v) for k, v in make_feeds(t.program, 0).items()}
+    ref = sess.lower(cd).run(feeds)
+    plan = sess.lower(cd, config=ExecConfig(backend="pallas", mesh=8))
+    from repro.exec.base import get_backend
+    prog = get_backend("pallas").compile(plan)   # the stats live per program
+    got = prog(feeds)
+    rel = max(float(np.max(np.abs(np.asarray(got[k]) - np.asarray(ref[k]))
+                           / (np.abs(np.asarray(ref[k])) + 1e-6)))
+              for k in ref)
+    out[wl] = {"rel": rel, "stats": prog.stats}
+print(json.dumps(out))
+"""
+    res = subprocess.run([sys.executable, "-c", code], cwd="/root/repo",
+                         capture_output=True, text=True, timeout=600)
+    assert res.returncode == 0, res.stderr[-3000:]
+    out = json.loads(res.stdout.strip().splitlines()[-1])
+    for wl, r in out.items():
+        assert r["rel"] < 2e-3, (wl, r)
+        assert r["stats"]["dispatches"] == 1, (wl, r)
+        assert r["stats"]["traces"] == 1, (wl, r)

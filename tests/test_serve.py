@@ -26,8 +26,9 @@ from repro.api import Session
 from repro.api.cache import CodesignCache
 from repro.exec import Executor
 from repro.frontends import make_feeds
-from repro.serve import (BatchedPlan, Overloaded, PlanRouter, Server,
-                         ServerClosed, density_bucket, request)
+from repro.serve import (BatchedPlan, Overloaded, PlanRouter, ServeConfig,
+                         Server, ServerClosed, SolveRequest, density_bucket,
+                         request)
 from repro.testing import faults
 
 # batched-vs-single reference tolerances (see module docstring)
@@ -794,3 +795,77 @@ class TestClientCancelRaces:
         # restarts from f2.t_submit and closes at ~0.75s
         assert closed_after < 0.68, closed_after
         srv.close()
+
+
+class TestTypedRequestsAndConfig:
+    """0.10 surface: ServeConfig, SolveRequest.bucket/deadline_s, fp64."""
+
+    def test_request_bucket_method_is_the_canonicalization(self, tmp_path):
+        req = request("cg_sparse", n=64, iters=2, density=0.0011)
+        router = PlanRouter(session=Session(cache_dir=tmp_path))
+        assert req.bucket() == router.bucket(req)
+        assert req.bucket().density == "d0.001"     # bucketed, not raw
+
+    def test_deadline_rides_on_the_request(self, tmp_path):
+        srv = Server(None, ServeConfig(max_batch_size=4, autostart=False),
+                     session=Session(cache_dir=tmp_path))
+        # an already-expired per-request deadline fails fast at submit
+        with pytest.raises(ValueError, match="deadline_s"):
+            srv.submit(request("cg", n=32, iters=2, deadline_s=-1.0))
+        fut = srv.submit(request("cg", n=32, iters=2, deadline_s=60.0))
+        srv.start()
+        assert fut.result(timeout=120).batch_size == 1
+        srv.close()
+
+    def test_submit_dict_deprecated_but_works(self, tmp_path):
+        import warnings
+        srv = Server(config=ServeConfig(max_batch_size=4),
+                     session=Session(cache_dir=tmp_path))
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            fut = srv.submit({"workload": "cg", "n": 32, "iters": 2})
+            assert any(issubclass(x.category, DeprecationWarning)
+                       for x in w)
+        assert fut.result(timeout=120).batch_size == 1
+        srv.close()
+
+    def test_legacy_server_kwargs_warn_and_conflict_raises(self, tmp_path):
+        import warnings
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            srv = Server(session=Session(cache_dir=tmp_path),
+                         max_batch_size=4, autostart=False)
+            assert any(issubclass(x.category, DeprecationWarning)
+                       for x in w)
+        assert srv.max_batch_size == 4
+        srv.close()
+        with pytest.raises(TypeError, match="not both"):
+            Server(config=ServeConfig(), max_batch_size=4)
+
+    def test_mixed_fp32_fp64_buckets_one_server(self, tmp_path):
+        """float64 requests build and dispatch under thread-local x64:
+        the outputs really are float64, fp32 buckets are untouched, and
+        the two dtypes land in separate buckets of one server."""
+        srv = Server(config=ServeConfig(max_batch_size=8),
+                     session=Session(cache_dir=tmp_path))
+        try:
+            f32 = srv.submit(request("cg", n=64, iters=3, seed=1))
+            f64 = srv.submit(request("cg", n=64, iters=3, seed=1,
+                                     dtype="float64"))
+            r32 = f32.result(timeout=300)
+            r64 = f64.result(timeout=300)
+            x32 = next(v for k, v in sorted(r32.outputs.items())
+                       if k.startswith("x"))
+            x64 = next(v for k, v in sorted(r64.outputs.items())
+                       if k.startswith("x"))
+            assert np.asarray(x32).dtype == np.float32
+            assert np.asarray(x64).dtype == np.float64
+            # same seed, same solver: fp64 refines fp32, not replaces it
+            np.testing.assert_allclose(np.asarray(x32),
+                                       np.asarray(x64, np.float32),
+                                       rtol=1e-3, atol=1e-5)
+            labels = set(srv.stats()["buckets"])
+            assert any("float64" in lb for lb in labels)
+            assert any("float32" in lb for lb in labels)
+        finally:
+            srv.close()
